@@ -1,0 +1,41 @@
+"""Wall-clock the real shard_map collective implementations on 8 CPU host
+devices (launched by benchmarks/run.py with XLA_FLAGS set). CPU collective
+timing does not model ICI, but the ROUND-COUNT ordering (pip_mcoll fewer
+rounds than flat algorithms) shows up in dispatch overhead, and correctness
+of every algorithm is asserted on the way."""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import mcoll
+from repro.core.topology import Topology
+
+N, P = 4, 2
+mesh = jax.make_mesh((N, P), ("node", "local"))
+topo = Topology(N, P)
+
+
+def bench(fn, x, n=20):
+    out = jax.block_until_ready(fn(x))
+    t0 = time.time()
+    for _ in range(n):
+        out = jax.block_until_ready(fn(x))
+    return (time.time() - t0) / n * 1e6, out
+
+
+for nbytes in (256, 65536):
+    m = nbytes // 4 // (N * P)
+    x = jnp.arange(N * P * max(m, 1), dtype=jnp.float32)
+    for algo in mcoll.algorithms("allgather"):
+        fn = mcoll.collective_fn(mesh, topo, "allgather", algo, stacked=True)
+        us, out = bench(fn, x)
+        ok = bool((np.asarray(out)[0] == np.asarray(x)).all())
+        assert ok, algo
+        print(f"measured/allgather/{algo}/{nbytes}B,{us:.1f},8cpu-dev ok")
+    for algo in mcoll.algorithms("allreduce"):
+        z = jnp.ones((N * P, max(m, 1)), jnp.float32)
+        fn = mcoll.collective_fn(mesh, topo, "allreduce", algo)
+        us, out = bench(fn, z)
+        print(f"measured/allreduce/{algo}/{nbytes}B,{us:.1f},8cpu-dev ok")

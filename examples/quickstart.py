@@ -1,0 +1,19 @@
+"""Quickstart: train a reduced Llama-family model for 100 steps on CPU,
+checkpoint, and resume — the smallest end-to-end path through the stack.
+
+  PYTHONPATH=src python examples/quickstart.py
+"""
+import tempfile
+
+from repro.launch.train import main as train_main
+
+with tempfile.TemporaryDirectory() as d:
+    print("== phase 1: train 60 steps, checkpointing ==")
+    train_main(["--arch", "smollm-360m", "--reduced", "--steps", "60",
+                "--batch", "4", "--seq", "64", "--ckpt-dir", d,
+                "--ckpt-every", "25"])
+    print("== phase 2: resume from latest checkpoint, train to 100 ==")
+    train_main(["--arch", "smollm-360m", "--reduced", "--steps", "100",
+                "--batch", "4", "--seq", "64", "--ckpt-dir", d,
+                "--ckpt-every", "25"])
+print("quickstart OK")

@@ -1,0 +1,43 @@
+"""Assigned architecture configs (--arch <id>)."""
+from repro.configs.base import ModelConfig, MoEConfig, ShapeConfig, SHAPES, \
+    shape_applicable
+
+_MODULES = {
+    "seamless-m4t-large-v2": "seamless_m4t_large_v2",
+    "arctic-480b": "arctic_480b",
+    "qwen3-moe-235b-a22b": "qwen3_moe_235b_a22b",
+    "yi-34b": "yi_34b",
+    "qwen1.5-4b": "qwen1_5_4b",
+    "phi3-medium-14b": "phi3_medium_14b",
+    "smollm-360m": "smollm_360m",
+    "jamba-1.5-large-398b": "jamba_1_5_large_398b",
+    "rwkv6-1.6b": "rwkv6_1_6b",
+    "qwen2-vl-72b": "qwen2_vl_72b",
+}
+
+ARCH_IDS = tuple(_MODULES)
+
+
+def get_config(arch: str) -> ModelConfig:
+    import importlib
+    if arch not in _MODULES:
+        raise KeyError(f"unknown arch {arch!r}; known: {ARCH_IDS}")
+    return importlib.import_module(f"repro.configs.{_MODULES[arch]}").CONFIG
+
+
+def reduced_config(arch: str) -> ModelConfig:
+    """Tiny same-family config for CPU smoke tests."""
+    import dataclasses
+    cfg = get_config(arch)
+    pat = cfg.block_pattern
+    moe = cfg.moe
+    if moe is not None:
+        moe = dataclasses.replace(moe, n_experts=8,
+                                  top_k=min(moe.top_k, 2), d_ff_expert=64)
+    return dataclasses.replace(
+        cfg,
+        n_layers=len(pat) * (2 if len(pat) == 1 else 1),
+        enc_layers=min(cfg.enc_layers, 2),
+        d_model=128, n_heads=4,
+        n_kv_heads=2 if cfg.n_kv_heads < cfg.n_heads else 4,
+        head_dim=32, d_ff=256, vocab=512, moe=moe, rwkv_head_dim=32)

@@ -1,0 +1,7 @@
+"""smollm-360m [dense]: small llama-arch. [hf:HuggingFaceTB/SmolLM-135M]"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="smollm-360m", family="decoder",
+    n_layers=32, d_model=960, n_heads=15, n_kv_heads=5, d_ff=2560,
+    vocab=49152)

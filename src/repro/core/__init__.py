@@ -1,0 +1,6 @@
+# The paper's primary contribution: PiP-MColl multi-object collectives,
+# two-level topology, alpha-beta cost models, and algorithm autotuning.
+from repro.core.topology import Topology
+from repro.core import mcoll, costmodel, autotune
+
+__all__ = ["Topology", "mcoll", "costmodel", "autotune"]

@@ -1,0 +1,46 @@
+"""Algorithm selection: pick the cheapest algorithm for a collective given
+message size and topology, using the alpha-beta cost model.
+
+This is the TPU analogue of an MPI library's collective tuning tables —
+except derived from the model instead of hand-tuned. `choose` is used by the
+framework's manual-collective paths (gradient sync, metric aggregation,
+MoE dispatch) with the net preset matching the mesh level the collective
+runs over (ICI vs DCN).
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+from repro.core import costmodel
+from repro.core.costmodel import NetParams
+from repro.core.topology import Topology
+
+_CANDIDATES = {
+    "allgather": ("pip_mcoll", "recursive_doubling", "ring", "single_leader",
+                  "xla"),
+    "scatter": ("pip_mcoll", "binomial", "linear"),
+    "allreduce": ("pip_mcoll", "recursive_doubling", "xla"),
+}
+
+
+def choose(collective: str, topo: Topology, nbytes: int,
+           net: Optional[NetParams] = None) -> Tuple[str, float]:
+    """Return (algo, predicted_seconds) minimizing modeled latency."""
+    net = net or costmodel.tpu_v5e_multipod()
+    fn = costmodel.COST_FNS[collective]
+    best: Tuple[str, float] = ("", float("inf"))
+    for algo in _CANDIDATES[collective]:
+        if algo == "recursive_doubling" and (topo.world & (topo.world - 1)):
+            continue
+        t = fn(algo, topo, nbytes, net).time
+        if t < best[1]:
+            best = (algo, t)
+    return best
+
+
+def tuning_table(collective: str, topo: Topology,
+                 net: Optional[NetParams] = None,
+                 sizes: Optional[Tuple[int, ...]] = None) -> Dict[int, str]:
+    """Crossover table: message size -> best algorithm."""
+    sizes = sizes or tuple(2 ** i for i in range(4, 27))
+    return {s: choose(collective, topo, s, net)[0] for s in sizes}

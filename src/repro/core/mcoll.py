@@ -1,0 +1,619 @@
+"""PiP-MColl: multi-object hierarchical collectives for JAX/TPU.
+
+Faithful TPU-native adaptation of *Accelerating MPI Collectives with
+Process-in-Process-based Multi-object Techniques* (HPDC'23).
+
+The paper's design for a (nodes x procs-per-node) cluster:
+
+  1. intra-node phase into shared memory (PiP: zero-copy),
+  2. inter-node phase where ALL P local processes act as communication
+     objects simultaneously — a radix-(P+1) Bruck schedule over nodes where
+     local rank ``l`` covers node-offset ``(l+1)*S`` each round,
+  3. a final shift restores rank order.
+
+TPU mapping: "node" and "local" are two mesh axes (e.g. pod x chips, where
+the pod axis crosses DCN). MPI sends become static ``lax.ppermute`` calls
+over the *tuple* axis ``(node, local)`` — the lane-dependent destination
+becomes a single static permutation of all N*P devices, i.e. ONE
+collective-permute per algorithm round. PiP shared-memory staging becomes
+cheap intra-group collectives (``all_gather``/``psum`` over the local axis)
+plus fused Pallas pack/shift kernels for the local data-reorder steps.
+
+All algorithm functions in this module run INSIDE ``jax.shard_map`` over a
+mesh that contains ``topo.node_axis`` and ``topo.local_axis``. The public
+wrappers at the bottom build jitted shard_map'd callables.
+
+Algorithms (selectable, ``algo=`` everywhere):
+  allgather : pip_mcoll | bruck | recursive_doubling | ring | single_leader | xla
+  scatter   : pip_mcoll | binomial | xla(linear)
+  broadcast : pip_mcoll | binomial | xla(psum-mask)
+  allreduce : pip_mcoll (two-level multi-lane) | recursive_doubling | xla
+  reduce_scatter : pip_mcoll (two-level) | xla
+  alltoall  : pip_mcoll (two-level multi-lane) | xla
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import PartitionSpec as P
+
+from repro.core.topology import Topology
+
+# ---------------------------------------------------------------------------
+# helpers
+# ---------------------------------------------------------------------------
+
+
+def _axes(topo: Topology) -> Tuple[str, str]:
+    return (topo.node_axis, topo.local_axis)
+
+
+def mo_rounds(n_nodes: int, radix: int) -> Sequence[int]:
+    """Step sizes S for the multi-object Bruck schedule (paper steps 2-5).
+
+    Full rounds while ``S * B <= N`` then one remainder round. Returns the
+    list of S values, one ppermute round each.
+    """
+    out, s = [], 1
+    while s < n_nodes:
+        out.append(s)
+        s += min((radix - 1) * s, n_nodes - s)
+    return out
+
+
+def _mo_perm(topo: Topology, step: int, n_lanes: int) -> list:
+    """Static flat perm for one multi-object round: lane l of node n sends to
+    node (n - (l+1)*step) % N (so it *receives* from (n + (l+1)*step) % N)."""
+    N = topo.n_nodes
+    pairs = []
+    for n in range(N):
+        for l in range(n_lanes):
+            dst = ((n - (l + 1) * step) % N)
+            pairs.append((topo.flat(n, l), topo.flat(dst, l)))
+    return pairs
+
+
+def _flat_shift_perm(topo: Topology, dist: int) -> list:
+    """Flat perm over all M devices: rank r sends to (r - dist) % M."""
+    M = topo.world
+    return [(r, (r - dist) % M) for r in range(M)]
+
+
+# ---------------------------------------------------------------------------
+# ALLGATHER
+# ---------------------------------------------------------------------------
+
+
+def pip_mcoll_allgather(x, topo: Topology, radix: Optional[int] = None,
+                        shift_fn=None):
+    """The paper's multi-object allgather (Section 2), TPU-native.
+
+    Per-device input: ``(m, ...)`` shard. Output: ``(N*P*m, ...)`` full
+    gather in global (node-major) rank order, identical on every device.
+
+    Phases: (1) intra all_gather — the PiP "gather into the local root's
+    buffer" (on TPU every lane keeps a copy: it must send in phase 2);
+    (2) ``ceil(log_B N)``-ish rounds, each ONE collective-permute over the
+    (node, local) tuple axis moving S node-blocks per lane + one intra
+    all_gather (the PiP shared-buffer write); (3) final shift (paper step 6)
+    — ``jnp.roll`` by the node index, or a Pallas shift kernel.
+    """
+    N, Pl = topo.n_nodes, topo.n_local
+    B = int(radix) if radix else Pl + 1
+    if not 2 <= B <= Pl + 1:
+        raise ValueError(f"radix {B} must be in [2, P+1={Pl + 1}]")
+    nodeblk = lax.all_gather(x, topo.local_axis, axis=0, tiled=True)  # (P*m,...)
+    if N == 1:
+        return nodeblk
+    n = lax.axis_index(topo.node_axis)
+    # V[j] = node-block of node (n + j) % N, for j < S; identical on all
+    # lanes of a node (the shared-memory invariant).
+    V = nodeblk[None]  # (1, P*m, ...)
+    S = 1
+    while S < N:
+        K = min((B - 1) * S, N - S)  # fresh node-blocks this round
+        # only lanes carrying useful offsets participate (matters when
+        # (B-1)*S > N-S: remainder round / tiny N), and when a single lane
+        # remains it sends exactly the K useful blocks, not a padded S.
+        n_lanes = min(B - 1, -(-K // S))
+        send_cnt = min(S, K)
+        perm = _mo_perm(topo, S, n_lanes=n_lanes)
+        recv = lax.ppermute(V[:send_cnt], _axes(topo), perm)
+        # lane l received offsets (l+1)*S + [0, send_cnt)
+        shared = lax.all_gather(recv, topo.local_axis, axis=0, tiled=False)
+        shared = shared.reshape((Pl * send_cnt,) + V.shape[1:])
+        V = jnp.concatenate([V, shared[:K]], axis=0)
+        S += K
+    # paper step 6: shift into correct sequence. V[j] = block (n+j)%N, so
+    # roll by +n gives W[k] = block k.
+    if shift_fn is not None:
+        W = shift_fn(V, n)
+    else:
+        W = jnp.roll(V, n, axis=0)
+    return W.reshape((N * Pl * x.shape[0],) + x.shape[1:])
+
+
+def bruck_allgather(x, topo: Topology, radix: int = 2):
+    """Flat Bruck over all M = N*P ranks (the paper's "PiP-MPICH" baseline
+    when radix=2: log2(M) rounds, every rank a single object)."""
+    M = topo.world
+    r = lax.axis_index(_axes(topo))
+    V = x[None]  # (1, m, ...)
+    S = 1
+    while S < M:
+        for j in range(1, radix):
+            if j * S >= M:
+                break
+            cnt = min(S, M - j * S)  # uniform across ranks
+            perm = _flat_shift_perm(topo, j * S)
+            # perm maps rank i -> i - j*S, so we receive from r + j*S whose
+            # V[0:cnt] holds blocks at our offsets j*S + [0, cnt).
+            recv = lax.ppermute(V[:cnt], _axes(topo), perm)
+            V = jnp.concatenate([V, recv], axis=0)
+        S *= radix
+    V = V[:M]
+    W = jnp.roll(V, r, axis=0)
+    return W.reshape((M * x.shape[0],) + x.shape[1:])
+
+
+def recursive_doubling_allgather(x, topo: Topology):
+    """Flat recursive doubling (power-of-two M only) — classic small-message
+    algorithm the paper compares against."""
+    M = topo.world
+    if M & (M - 1):
+        raise ValueError("recursive doubling needs power-of-two world size")
+    r = lax.axis_index(_axes(topo))
+    V = x[None]
+    S = 1
+    while S < M:
+        perm = [(i, i ^ S) for i in range(M)]
+        recv = lax.ppermute(V, _axes(topo), perm)
+        bit = ((r // S) % 2).astype(jnp.bool_)
+        # bit==0: my group is the lower half -> my blocks come first
+        both = jnp.stack([jnp.concatenate([V, recv], axis=0),
+                          jnp.concatenate([recv, V], axis=0)])
+        V = jnp.where(bit, both[1], both[0])
+        S *= 2
+    return V.reshape((M * x.shape[0],) + x.shape[1:])
+
+
+def ring_allgather(x, topo: Topology):
+    """Flat ring: M-1 rounds, bandwidth-optimal, latency-worst."""
+    M = topo.world
+    r = lax.axis_index(_axes(topo))
+    perm = _flat_shift_perm(topo, -1)  # r sends to r+1, receives from r-1
+    collected = [x]
+    cur = x
+    for _ in range(M - 1):
+        cur = lax.ppermute(cur, _axes(topo), perm)
+        collected.append(cur)
+    S = jnp.stack(collected)  # S[i] = block of rank (r - i) % M
+    idx = (r - jnp.arange(M)) % M
+    W = jnp.take(S, idx, axis=0)  # W[k] = block of rank k
+    return W.reshape((M * x.shape[0],) + x.shape[1:])
+
+
+def single_leader_allgather(x, topo: Topology):
+    """Single-object hierarchical baseline (OpenMPI-style): intra gather to a
+    leader, leader-only radix-2 Bruck over nodes, intra broadcast. On TPU the
+    SPMD program runs the node-axis Bruck on every lane; the cost model
+    charges only the leader lane."""
+    N, Pl = topo.n_nodes, topo.n_local
+    nodeblk = lax.all_gather(x, topo.local_axis, axis=0, tiled=True)
+    if N == 1:
+        return nodeblk
+    n = lax.axis_index(topo.node_axis)
+    V = nodeblk[None]
+    S = 1
+    while S < N:
+        cnt = min(S, N - S)
+        perm = [(i, (i - S) % N) for i in range(N)]
+        recv = lax.ppermute(V[:cnt], topo.node_axis, perm)
+        V = jnp.concatenate([V, recv], axis=0)
+        S += cnt
+    W = jnp.roll(V, n, axis=0)
+    return W.reshape((N * Pl * x.shape[0],) + x.shape[1:])
+
+
+def xla_allgather(x, topo: Topology):
+    return lax.all_gather(x, _axes(topo), axis=0, tiled=True)
+
+
+ALLGATHER = {
+    "pip_mcoll": pip_mcoll_allgather,
+    "bruck": bruck_allgather,
+    "recursive_doubling": recursive_doubling_allgather,
+    "ring": ring_allgather,
+    "single_leader": single_leader_allgather,
+    "xla": xla_allgather,
+}
+
+
+# ---------------------------------------------------------------------------
+# SCATTER (paper Figure 1 collective)
+# ---------------------------------------------------------------------------
+
+
+def pip_mcoll_scatter(xfull, topo: Topology, radix: Optional[int] = None,
+                      root: int = 0):
+    """Multi-object scatter: radix-(P+1) binomial tree over nodes in which an
+    active node's P lanes feed P distinct child nodes *in the same round*,
+    then a free intra-node slice (PiP shared memory analogue).
+
+    ``xfull``: full payload ``(N*P*m, ...)`` (only the root's copy is
+    semantically read; other nodes' buffers are zeroed to prove data flow).
+    Output: this device's ``(m, ...)`` shard.
+    """
+    N, Pl = topo.n_nodes, topo.n_local
+    B = int(radix) if radix else Pl + 1
+    M = topo.world
+    m = xfull.shape[0] // M
+    root_node, root_lane = divmod(root, Pl)
+    n = lax.axis_index(topo.node_axis)
+    l = lax.axis_index(topo.local_axis)
+    v = (n - root_node) % N  # relative node id; root is v=0
+    blocks = xfull.reshape((N, Pl * m) + xfull.shape[1:])
+    # R[j] = node-block for relative node j; valid only on the root initially.
+    R = jnp.roll(blocks, -root_node, axis=0)
+    R = jnp.where((v == 0), R, jnp.zeros_like(R))
+    if N > 1:
+        n_rounds = max(1, math.ceil(round(math.log(N, B), 9)))
+        # pad to the tree capacity so every dynamic_slice send window
+        # [(l+1)S, (l+2)S) is in-bounds (SPMD needs uniform static sizes).
+        cap = B ** n_rounds
+        if cap > N:
+            R = jnp.concatenate(
+                [R, jnp.zeros((cap - N,) + R.shape[1:], R.dtype)], axis=0)
+        steps = [B ** i for i in range(n_rounds - 1, -1, -1)]
+        for S in steps:
+            pairs = []
+            for va in range(0, N, S * B):
+                for lane in range(Pl):
+                    tgt = va + (lane + 1) * S
+                    if tgt < min(va + S * B, N):
+                        pairs.append((topo.flat((va + root_node) % N, lane),
+                                      topo.flat((tgt + root_node) % N, lane)))
+            if not pairs:
+                continue
+            # every device computes a send buffer; only perm sources are used
+            start = (l + 1) * S
+            send = lax.dynamic_slice_in_dim(R, start, S, axis=0)
+            recv = lax.ppermute(send, _axes(topo), pairs)
+            # exactly one lane per receiving node is a destination; share it
+            # (the PiP write into the node's shared buffer).
+            is_dst = (v % S == 0) & ((v // S) % B == l + 1)
+            seg = lax.psum(jnp.where(is_dst, recv, jnp.zeros_like(recv)),
+                           topo.local_axis)
+            got = lax.psum(is_dst.astype(jnp.int32), topo.local_axis) > 0
+            R = R.at[:S].set(jnp.where(got, seg, R[:S]))
+    # intra scatter: lane l takes slice l of the node block (pure local copy)
+    return lax.dynamic_slice_in_dim(R[0], l * m, m, axis=0)
+
+
+def binomial_scatter(xfull, topo: Topology, root: int = 0):
+    """Classic radix-2 binomial scatter over the flat rank space (baseline:
+    log2(M) rounds, single object per node)."""
+    M = topo.world
+    m = xfull.shape[0] // M
+    r = lax.axis_index(_axes(topo))
+    v = (r - root) % M
+    blocks = xfull.reshape((M, m) + xfull.shape[1:])
+    R = jnp.roll(blocks, -root, axis=0)
+    R = jnp.where(v == 0, R, jnp.zeros_like(R))
+    S = 1
+    while S < M:
+        S *= 2
+    if S > M:  # pad to power-of-two capacity for in-bounds slice windows
+        R = jnp.concatenate(
+            [R, jnp.zeros((S - M,) + R.shape[1:], R.dtype)], axis=0)
+    S //= 2
+    while S >= 1:
+        pairs = []
+        for va in range(0, M, S * 2):
+            tgt = va + S
+            if tgt < M:
+                pairs.append((((va + root) % M), ((tgt + root) % M)))
+        if pairs:
+            send = lax.dynamic_slice_in_dim(R, S, S, axis=0)
+            recv = lax.ppermute(send, _axes(topo), pairs)
+            is_dst = (v % S == 0) & ((v // S) % 2 == 1)
+            R = R.at[:S].set(jnp.where(is_dst, recv, R[:S]))
+        S //= 2
+    return R[0]
+
+
+def linear_scatter(xfull, topo: Topology, root: int = 0):
+    """Root sends to every rank directly (M-1 serial messages) — the naive
+    baseline; on TPU realized as one masked select from the replicated input."""
+    M = topo.world
+    m = xfull.shape[0] // M
+    r = lax.axis_index(_axes(topo))
+    blocks = xfull.reshape((M, m) + xfull.shape[1:])
+    return jnp.take(blocks, r[None], axis=0)[0]
+
+
+SCATTER = {
+    "pip_mcoll": pip_mcoll_scatter,
+    "binomial": binomial_scatter,
+    "linear": linear_scatter,
+}
+
+
+# ---------------------------------------------------------------------------
+# BROADCAST
+# ---------------------------------------------------------------------------
+
+
+def pip_mcoll_broadcast(x, topo: Topology, radix: Optional[int] = None,
+                        root: int = 0):
+    """Multi-object broadcast: radix-(P+1) tree over nodes (active node's P
+    lanes feed P children per round) + free intra share."""
+    N, Pl = topo.n_nodes, topo.n_local
+    B = int(radix) if radix else Pl + 1
+    root_node, _ = divmod(root, Pl)
+    n = lax.axis_index(topo.node_axis)
+    l = lax.axis_index(topo.local_axis)
+    v = (n - root_node) % N
+    R = jnp.where(v == 0, x, jnp.zeros_like(x))
+    if N > 1:
+        n_rounds = max(1, math.ceil(math.log(N, B)))
+        steps = [B ** i for i in range(n_rounds - 1, -1, -1)]
+        for S in steps:
+            pairs = []
+            for va in range(0, N, S * B):
+                for lane in range(Pl):
+                    tgt = va + (lane + 1) * S
+                    if tgt < min(va + S * B, N):
+                        pairs.append((topo.flat((va + root_node) % N, lane),
+                                      topo.flat((tgt + root_node) % N, lane)))
+            if not pairs:
+                continue
+            recv = lax.ppermute(R, _axes(topo), pairs)
+            is_dst = (v % S == 0) & ((v // S) % B == l + 1)
+            seg = lax.psum(jnp.where(is_dst, recv, jnp.zeros_like(recv)),
+                           topo.local_axis)
+            got = lax.psum(is_dst.astype(jnp.int32), topo.local_axis) > 0
+            R = jnp.where(got, seg, R)
+    return R
+
+
+def binomial_broadcast(x, topo: Topology, root: int = 0):
+    M = topo.world
+    r = lax.axis_index(_axes(topo))
+    v = (r - root) % M
+    R = jnp.where(v == 0, x, jnp.zeros_like(x))
+    S = 1
+    while S < M:
+        S *= 2
+    S //= 2
+    while S >= 1:
+        pairs = []
+        for va in range(0, M, S * 2):
+            tgt = va + S
+            if tgt < M:
+                pairs.append((((va + root) % M), ((tgt + root) % M)))
+        if pairs:
+            recv = lax.ppermute(R, _axes(topo), pairs)
+            is_dst = (v % S == 0) & ((v // S) % 2 == 1)
+            R = jnp.where(is_dst, recv, R)
+        S //= 2
+    return R
+
+
+BROADCAST = {
+    "pip_mcoll": pip_mcoll_broadcast,
+    "binomial": binomial_broadcast,
+}
+
+
+# ---------------------------------------------------------------------------
+# ALLREDUCE / REDUCE_SCATTER
+# ---------------------------------------------------------------------------
+
+
+def _pad_to(x, mult):
+    pad = (-x.shape[0]) % mult
+    if pad:
+        x = jnp.concatenate([x, jnp.zeros((pad,) + x.shape[1:], x.dtype)], 0)
+    return x, pad
+
+
+def pip_mcoll_allreduce(x, topo: Topology, inter: str = "psum"):
+    """Two-level multi-object allreduce: intra reduce-scatter (each lane owns
+    1/P of the vector) -> per-lane inter allreduce over nodes (all P lanes
+    drive inter links concurrently on disjoint slices) -> intra allgather.
+
+    This is the multi-object Rabenseifner split: same round count as a flat
+    algorithm but P-fold smaller inter-node messages and all lanes busy."""
+    N, Pl = topo.n_nodes, topo.n_local
+    orig = x.shape[0]
+    xp, _ = _pad_to(x, Pl)
+    slice_ = lax.psum_scatter(xp, topo.local_axis, scatter_dimension=0,
+                              tiled=True)
+    if N > 1:
+        if inter == "psum":
+            slice_ = lax.psum(slice_, topo.node_axis)
+        elif inter == "recursive_doubling":
+            slice_ = _rd_allreduce_axis(slice_, topo, topo.node_axis, N)
+        else:
+            raise ValueError(inter)
+    out = lax.all_gather(slice_, topo.local_axis, axis=0, tiled=True)
+    return out[:orig]
+
+
+def _rd_allreduce_axis(x, topo: Topology, axis: str, size: int):
+    """Manual recursive-doubling allreduce along one mesh axis (power of 2)."""
+    if size & (size - 1):
+        return lax.psum(x, axis)
+    S = 1
+    while S < size:
+        perm = [(i, i ^ S) for i in range(size)]
+        x = x + lax.ppermute(x, axis, perm)
+        S *= 2
+    return x
+
+
+def flat_rd_allreduce(x, topo: Topology):
+    """Flat recursive doubling over all M devices (single-object baseline)."""
+    M = topo.world
+    if M & (M - 1):
+        return lax.psum(x, _axes(topo))
+    S = 1
+    while S < M:
+        perm = [(i, i ^ S) for i in range(M)]
+        x = x + lax.ppermute(x, _axes(topo), perm)
+        S *= 2
+    return x
+
+
+def xla_allreduce(x, topo: Topology):
+    return lax.psum(x, _axes(topo))
+
+
+ALLREDUCE = {
+    "pip_mcoll": pip_mcoll_allreduce,
+    "recursive_doubling": flat_rd_allreduce,
+    "xla": xla_allreduce,
+}
+
+
+def pip_mcoll_reduce_scatter(x, topo: Topology):
+    """Two-level reduce-scatter: over nodes first (big contiguous chunks on
+    the inter links, all lanes active), then over lanes. Input per device
+    ``(M*s, ...)``, output ``(s, ...)`` = this rank's reduced chunk."""
+    y = lax.psum_scatter(x, topo.node_axis, scatter_dimension=0, tiled=True)
+    return lax.psum_scatter(y, topo.local_axis, scatter_dimension=0, tiled=True)
+
+
+def xla_reduce_scatter(x, topo: Topology):
+    return lax.psum_scatter(x, _axes(topo), scatter_dimension=0, tiled=True)
+
+
+REDUCE_SCATTER = {
+    "pip_mcoll": pip_mcoll_reduce_scatter,
+    "xla": xla_reduce_scatter,
+}
+
+
+# ---------------------------------------------------------------------------
+# ALLTOALL (MoE expert-parallel dispatch path)
+# ---------------------------------------------------------------------------
+
+
+def pip_mcoll_alltoall(x, topo: Topology):
+    """Hierarchical multi-object all-to-all: intra regroup so each lane
+    carries 1/P of every node-pair payload, inter all-to-all per lane (all P
+    lanes drive inter links concurrently), local reorder.
+
+    Input per device: ``(M, s, ...)`` — row g is the payload for global rank
+    g. Output: ``(M, s, ...)`` — row g is the payload received from rank g.
+    """
+    N, Pl = topo.n_nodes, topo.n_local
+    s = x.shape[1:]
+    v = x.reshape((N, Pl) + s)  # (dst_node, dst_lane, s...)
+    # phase 1 (intra): exchange by destination lane; afterwards device (n,l)
+    # holds rows destined to lane l of every node, from every source lane.
+    v = lax.all_to_all(v, topo.local_axis, split_axis=1, concat_axis=1,
+                       tiled=False)
+    # now v: (dst_node, src_lane, s...)
+    # phase 2 (inter, multi-lane): exchange by destination node.
+    v = lax.all_to_all(v, topo.node_axis, split_axis=0, concat_axis=0,
+                       tiled=False)
+    # now v: (src_node, src_lane, s...) — already (M, s) in flat order.
+    return v.reshape((N * Pl,) + s)
+
+
+def xla_alltoall(x, topo: Topology):
+    return lax.all_to_all(x, _axes(topo), split_axis=0, concat_axis=0,
+                          tiled=True)
+
+
+ALLTOALL = {
+    "pip_mcoll": pip_mcoll_alltoall,
+    "xla": xla_alltoall,
+}
+
+
+# ---------------------------------------------------------------------------
+# public wrappers: build jitted shard_map'd callables over a mesh
+# ---------------------------------------------------------------------------
+
+_REGISTRY = {
+    "allgather": ALLGATHER,
+    "scatter": SCATTER,
+    "broadcast": BROADCAST,
+    "allreduce": ALLREDUCE,
+    "reduce_scatter": REDUCE_SCATTER,
+    "alltoall": ALLTOALL,
+}
+
+
+def algorithms(collective: str):
+    return sorted(_REGISTRY[collective].keys())
+
+
+def _shard_spec(topo: Topology, ndim: int) -> P:
+    return P(_axes(topo), *([None] * (ndim - 1)))
+
+
+def collective_fn(mesh, topo: Topology, collective: str, algo: str,
+                  stacked: bool = True, jit: bool = True, **kw):
+    """Build a callable computing `collective` with `algo` over `mesh`.
+
+    Input/output conventions (global arrays):
+      allgather:      in (M*m, ...) sharded dim0 -> out (M, M*m, ...) stacked
+                      (row d = device d's full copy) or (M*m, ...) replicated.
+      scatter:        in (M*m, ...) replicated   -> out (M*m, ...) sharded
+                      (device d's shard = its scatter result).
+      broadcast:      in (m, ...) replicated     -> out (M, m, ...) stacked.
+      allreduce:      in (M, m, ...) sharded dim0 -> out (M, m, ...) stacked
+                      (row d = reduced vector on device d).
+      reduce_scatter: in (M, M*s, ...) sharded dim0 -> out (M*s, ...) sharded.
+      alltoall:       in (M, M, s...) sharded dim0 -> out (M, M, s...) sharded.
+    """
+    fn = _REGISTRY[collective][algo]
+    fn = partial(fn, topo=topo, **kw)
+    ax = _axes(topo)
+
+    if collective == "allgather":
+        def body(x):
+            out = fn(x)
+            return out[None] if stacked else out
+        in_specs = P(ax)
+        out_specs = P(ax, None) if stacked else P(None)
+    elif collective == "scatter":
+        def body(x):
+            return fn(x)
+        in_specs = P(None)
+        out_specs = P(ax)
+    elif collective == "broadcast":
+        def body(x):
+            return fn(x)[None]
+        in_specs = P(None)
+        out_specs = P(ax, None)
+    elif collective == "allreduce":
+        def body(x):
+            return fn(x[0])[None]
+        in_specs = P(ax, None)
+        out_specs = P(ax, None)
+    elif collective == "reduce_scatter":
+        def body(x):
+            return fn(x[0])
+        in_specs = P(ax, None)
+        out_specs = P(ax)
+    elif collective == "alltoall":
+        def body(x):
+            return fn(x[0])[None]
+        in_specs = P(ax, None)
+        out_specs = P(ax, None)
+    else:
+        raise ValueError(collective)
+
+    mapped = jax.shard_map(body, mesh=mesh, in_specs=(in_specs,),
+                           out_specs=out_specs, check_vma=False)
+    return jax.jit(mapped) if jit else mapped

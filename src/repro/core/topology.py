@@ -1,0 +1,57 @@
+"""Two-level topology descriptor for multi-object collectives.
+
+The paper's world is (nodes × processes-per-node). On TPU the same structure
+is (inter-group axis × intra-group axis): e.g. ("pod", chips-per-pod) across
+DCN, or ("node-group", chips) across a long ICI axis. `Topology` names the
+two mesh axes the collective algorithms operate over; sizes are taken from
+the enclosing `shard_map` mesh at trace time.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class Topology:
+    """A two-level (inter, intra) communication topology.
+
+    Attributes:
+      n_nodes: number of groups along the inter ("node") axis.
+      n_local: number of devices per group along the intra ("local") axis.
+      node_axis: mesh axis name for the inter-group dimension.
+      local_axis: mesh axis name for the intra-group dimension.
+    """
+
+    n_nodes: int
+    n_local: int
+    node_axis: str = "node"
+    local_axis: str = "local"
+
+    def __post_init__(self):
+        if self.n_nodes < 1 or self.n_local < 1:
+            raise ValueError(f"invalid topology {self.n_nodes}x{self.n_local}")
+
+    @property
+    def world(self) -> int:
+        return self.n_nodes * self.n_local
+
+    @property
+    def axes(self) -> Tuple[str, str]:
+        return (self.node_axis, self.local_axis)
+
+    def flat(self, node: int, local: int) -> int:
+        """Flat device index under row-major (node, local) ordering.
+
+        Matches `jax.lax.axis_index((node_axis, local_axis))` semantics.
+        """
+        return node * self.n_local + local
+
+    @classmethod
+    def from_mesh(cls, mesh, node_axis: str = "node", local_axis: str = "local"):
+        return cls(
+            n_nodes=mesh.shape[node_axis],
+            n_local=mesh.shape[local_axis],
+            node_axis=node_axis,
+            local_axis=local_axis,
+        )

@@ -1,0 +1,48 @@
+"""Jitted public wrappers for the Pallas kernels with backend dispatch:
+compiled Pallas on TPU, interpret mode elsewhere (this container), pure-jnp
+ref as the always-available fallback/oracle."""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels import flash_decode as _fd
+from repro.kernels import mamba_scan as _ms
+from repro.kernels import rwkv6_wkv as _rw
+from repro.kernels import staging as _st
+from repro.kernels import ref
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def flash_decode(q, k, v, cur_index, chunk: int = 512):
+    S = k.shape[1]
+    if S % min(chunk, S):
+        return ref.flash_decode(q, k, v, cur_index)
+    return _fd.flash_decode(q, k, v, cur_index, chunk=chunk,
+                            interpret=_interpret())
+
+
+def rwkv6_wkv(r, k, v, w, u, s0, chunk: int = 128):
+    T = r.shape[1]
+    if T % min(chunk, T):
+        return ref.rwkv6_wkv(r, k, v, w, u, s0)
+    return _rw.rwkv6_wkv(r, k, v, w, u, s0, chunk=chunk,
+                         interpret=_interpret())
+
+
+def mamba_scan(dt, A, Bm, Cm, x, chunk: int = 128, dblk: int = 256):
+    T, Di = dt.shape[1], dt.shape[2]
+    if T % min(chunk, T) or Di % min(dblk, Di):
+        return ref.mamba_scan(dt, A, Bm, Cm, x)
+    return _ms.mamba_scan(dt, A, Bm, Cm, x, chunk=chunk, dblk=dblk,
+                          interpret=_interpret())
+
+
+def shift_blocks(v, shift):
+    return _st.shift_blocks(v, shift, interpret=_interpret())
+
+
+def pack_blocks(src, idx):
+    return _st.pack_blocks(src, idx, interpret=_interpret())

@@ -1,0 +1,68 @@
+"""Pure-jnp oracles for every Pallas kernel (the ground truth the kernels
+are validated against, and the fallback path on unsupported backends)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+Accum = jnp.float32
+
+
+def shift_blocks(v, shift):
+    """Paper step 6: rotate node-blocks into rank order. v: (N, ...)."""
+    return jnp.roll(v, shift, axis=0)
+
+
+def pack_blocks(src, idx):
+    """Multi-object send staging: gather rows. src: (N, m), idx: (K,)."""
+    return jnp.take(src, idx, axis=0)
+
+
+def flash_decode(q, k, v, cur_index):
+    """q: (B,1,H,hd); k,v: (B,S,KV,hd); attend to positions < cur_index.
+    Returns (B,1,H*hd) fp32."""
+    B, _, H, hd = q.shape
+    S, KV = k.shape[1], k.shape[2]
+    G = H // KV
+    qg = q.reshape(B, KV, G, hd)
+    s = jnp.einsum("bkgd,bskd->bkgs", qg, k,
+                   preferred_element_type=Accum) / (hd ** 0.5)
+    valid = jnp.arange(S)[None, None, None, :] < cur_index
+    s = jnp.where(valid, s, -jnp.inf)
+    w = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgs,bskd->bkgd", w.astype(v.dtype), v,
+                   preferred_element_type=Accum)
+    return o.reshape(B, 1, H * hd)
+
+
+def rwkv6_wkv(r, k, v, w, u, s0):
+    """WKV6 recurrence; see repro.layers.rwkv.wkv6_ref."""
+    def step(S, inp):
+        r_t, k_t, v_t, w_t = inp
+        kv = k_t[..., :, None] * v_t[..., None, :]
+        y = jnp.einsum("bhi,bhij->bhj", r_t, S + u[..., None] * kv)
+        S = w_t[..., None] * S + kv
+        return S, y
+    seq = tuple(x.transpose(1, 0, 2, 3).astype(Accum) for x in (r, k, v, w))
+    sT, ys = jax.lax.scan(step, s0.astype(Accum), seq)
+    return ys.transpose(1, 0, 2, 3), sT
+
+
+def mamba_scan(dt, A, Bm, Cm, x):
+    """Selective SSM scan. dt,x: (B,T,Di) fp32/bf16; A: (Di,N);
+    Bm,Cm: (B,T,N). Returns y (B,T,Di) fp32, hT (B,Di,N) fp32."""
+    dA = jnp.exp(dt.astype(Accum)[..., None] * A.astype(Accum))
+    dBx = (dt.astype(Accum) * x.astype(Accum))[..., None] \
+        * Bm.astype(Accum)[:, :, None, :]
+
+    def step(h, inp):
+        da_t, dbx_t, c_t = inp
+        h = da_t * h + dbx_t
+        return h, jnp.einsum("bdn,bn->bd", h, c_t)
+
+    B, T, Di, N = dA.shape
+    h0 = jnp.zeros((B, Di, N), Accum)
+    hT, ys = jax.lax.scan(step, h0, (dA.transpose(1, 0, 2, 3),
+                                     dBx.transpose(1, 0, 2, 3),
+                                     Cm.astype(Accum).transpose(1, 0, 2)))
+    return ys.transpose(1, 0, 2), hT

@@ -1,0 +1,228 @@
+"""ShapeDtypeStruct stand-ins + shardings for every (arch x shape) cell.
+
+Nothing here allocates device memory: params/optimizer/batch/caches are all
+abstract (jax.eval_shape), so the 480B-parameter cells lower and compile on
+a single CPU host.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models import decoder, encdec
+from repro.models.decoder import RunFlags
+from repro.optim import adamw
+from repro.sharding import rules as R
+from repro.train.step import TrainConfig, train_step
+
+
+def _sds(shape, dtype, sharding=None):
+    return jax.ShapeDtypeStruct(shape, dtype, sharding=sharding)
+
+
+def _shard_tree(shapes, logical, rules, mesh):
+    mesh_shape = dict(zip(mesh.axis_names, mesh.devices.shape))
+
+    def one(lg, s):
+        spec = R.spec_for(lg, s.shape, rules, mesh_shape)
+        return _sds(s.shape, s.dtype, NamedSharding(mesh, spec))
+
+    is_leaf = lambda x: isinstance(x, tuple) and all(
+        isinstance(e, (str, type(None))) for e in x)
+    return jax.tree.map(one, logical, shapes, is_leaf=is_leaf)
+
+
+def batch_specs(cfg: ModelConfig, shape: ShapeConfig, rules, mesh):
+    """Abstract train batch for one global step."""
+    B, S = shape.global_batch, shape.seq_len
+    mesh_shape = dict(zip(mesh.axis_names, mesh.devices.shape))
+    tok_spec = NamedSharding(mesh, R.spec_for(("batch", None), (B, S),
+                                              rules, mesh_shape))
+    out = {}
+    if cfg.family == "encdec":
+        # seq budget split between encoder frames and decoder tokens
+        out["frames"] = _sds((B, S // 2, cfg.d_model), jnp.bfloat16,
+                             NamedSharding(mesh, R.spec_for(
+                                 ("batch", None, None), (B, S // 2,
+                                                         cfg.d_model),
+                                 rules, mesh_shape)))
+        out["tokens"] = _sds((B, S // 2), jnp.int32, tok_spec)
+        out["labels"] = _sds((B, S // 2), jnp.int32, tok_spec)
+        return out
+    if cfg.input_mode == "vl":
+        # 25% of the context is stub patch embeddings
+        n_patch = S // 4
+        n_text = S - n_patch
+        out["embeds"] = _sds((B, n_patch, cfg.d_model), jnp.bfloat16,
+                             NamedSharding(mesh, R.spec_for(
+                                 ("batch", None, None),
+                                 (B, n_patch, cfg.d_model), rules,
+                                 mesh_shape)))
+        out["tokens"] = _sds((B, n_text), jnp.int32, tok_spec)
+        out["labels"] = _sds((B, n_text), jnp.int32, tok_spec)
+        return out
+    out["tokens"] = _sds((B, S), jnp.int32, tok_spec)
+    out["labels"] = _sds((B, S), jnp.int32, tok_spec)
+    return out
+
+
+def model_api(cfg: ModelConfig):
+    return encdec if cfg.family == "encdec" else decoder
+
+
+def param_specs(cfg: ModelConfig, rules, mesh):
+    api = model_api(cfg)
+    shapes = jax.eval_shape(partial(api.init, cfg=cfg, mesh=mesh,
+                                    rules=rules), jax.random.PRNGKey(0))
+    return _shard_tree(shapes, api.logical(cfg), rules, mesh)
+
+
+def opt_specs(cfg: ModelConfig, params_sds, rules, mesh, ocfg):
+    api = model_api(cfg)
+    shapes = jax.eval_shape(partial(adamw.init, cfg=ocfg), params_sds)
+    logical = adamw.state_logical(api.logical(cfg), ocfg)
+    return _shard_tree(shapes, logical, rules, mesh)
+
+
+def _kv_sharding(cfg, rules, mesh, stacked: bool):
+    from repro.layers.attention import cache_pspec
+    mesh_shape = dict(zip(mesh.axis_names, mesh.devices.shape))
+    spec = cache_pspec(cfg, rules, mesh_shape)
+    if stacked:
+        spec = jax.sharding.PartitionSpec(None, *spec)
+    return NamedSharding(mesh, spec)
+
+
+def cache_specs(cfg: ModelConfig, batch: int, max_len: int, rules, mesh):
+    api = model_api(cfg)
+    kv_shd = _kv_sharding(cfg, rules, mesh, stacked=True)
+    if cfg.family == "encdec":
+        shapes = jax.eval_shape(partial(encdec.init_cache, cfg, batch,
+                                        max_len))
+        return jax.tree.map(lambda s: _sds(s.shape, s.dtype, kv_shd), shapes)
+    shapes = jax.eval_shape(partial(decoder.init_cache, cfg, batch, max_len))
+    logical = decoder.cache_logical(cfg)
+    out = _shard_tree(shapes, logical, rules, mesh)
+    # attention KV caches use the dedicated pspec (context-parallel rules)
+    for name, sub in out.items():
+        j = int(name[3:])
+        if cfg.block_pattern[j % len(cfg.block_pattern)] == "attn":
+            out[name] = jax.tree.map(
+                lambda s: _sds(s.shape, s.dtype, kv_shd), sub)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# step functions per cell kind
+# ---------------------------------------------------------------------------
+
+
+def build_train_cell(cfg: ModelConfig, shape: ShapeConfig, mesh, rules,
+                     tcfg: TrainConfig):
+    params = param_specs(cfg, rules, mesh)
+    opt = opt_specs(cfg, params, rules, mesh, tcfg.optimizer)
+    batch = batch_specs(cfg, shape, rules, mesh)
+
+    def fn(p, o, b):
+        return train_step(p, o, b, cfg, tcfg, rules=rules, mesh=mesh)
+
+    shardings = jax.tree.map(lambda s: s.sharding, (params, opt, batch))
+    jitted = jax.jit(fn, in_shardings=shardings,
+                     out_shardings=(shardings[0], shardings[1], None),
+                     donate_argnums=(0, 1))
+    return jitted, (params, opt, batch)
+
+
+def build_prefill_cell(cfg: ModelConfig, shape: ShapeConfig, mesh, rules,
+                       flags: RunFlags):
+    B, S = shape.global_batch, shape.seq_len
+    params = param_specs(cfg, rules, mesh)
+    mesh_shape = dict(zip(mesh.axis_names, mesh.devices.shape))
+
+    if cfg.family == "encdec":
+        frames = _sds((B, S, cfg.d_model), jnp.bfloat16,
+                      NamedSharding(mesh, R.spec_for(
+                          ("batch", None, None), (B, S, cfg.d_model),
+                          rules, mesh_shape)))
+
+        def fn(p, fr):
+            enc_out = encdec.encode(p, fr, cfg, rules=rules, mesh=mesh,
+                                    flags=flags)
+            return enc_out, encdec.cross_cache(p, enc_out, cfg)
+        jitted = jax.jit(fn, in_shardings=jax.tree.map(
+            lambda s: s.sharding, (params, frames)))
+        return jitted, (params, frames)
+
+    tokens = _sds((B, S), jnp.int32,
+                  NamedSharding(mesh, R.spec_for(("batch", None), (B, S),
+                                                 rules, mesh_shape)))
+    caches = cache_specs(cfg, B, S, rules, mesh)
+
+    def fn(p, tok, c):
+        logits, _, new_c = decoder.forward(p, tok, cfg, rules=rules,
+                                           mesh=mesh, flags=flags, caches=c)
+        return logits[:, -1:], new_c
+
+    shardings = jax.tree.map(lambda s: s.sharding, (params, tokens, caches))
+    jitted = jax.jit(fn, in_shardings=shardings, donate_argnums=(2,))
+    return jitted, (params, tokens, caches)
+
+
+def build_decode_cell(cfg: ModelConfig, shape: ShapeConfig, mesh, rules,
+                      flags: RunFlags):
+    """serve_step: one new token against a seq_len KV cache."""
+    B, S = shape.global_batch, shape.seq_len
+    params = param_specs(cfg, rules, mesh)
+    mesh_shape = dict(zip(mesh.axis_names, mesh.devices.shape))
+    tok = _sds((B, 1), jnp.int32,
+               NamedSharding(mesh, R.spec_for(("batch", None), (B, 1),
+                                              rules, mesh_shape)))
+    idx = _sds((), jnp.int32, NamedSharding(mesh, R.spec_for((), (), rules,
+                                                             mesh_shape)))
+    if cfg.family == "encdec":
+        caches = cache_specs(cfg, B, S, rules, mesh)
+        xkv_shapes = jax.eval_shape(
+            lambda: {"k": jnp.zeros((cfg.n_layers, B, S, cfg.n_kv_heads,
+                                     cfg.head_dim), jnp.bfloat16),
+                     "v": jnp.zeros((cfg.n_layers, B, S, cfg.n_kv_heads,
+                                     cfg.head_dim), jnp.bfloat16)})
+        xkv_logical = {"k": (None, "batch", "seq", "kv_heads", None),
+                       "v": (None, "batch", "seq", "kv_heads", None)}
+        xkv = _shard_tree(xkv_shapes, xkv_logical, rules, mesh)
+
+        def fn(p, t, c, x, i):
+            return encdec.decode_forward(p, t, None, cfg, rules=rules,
+                                         mesh=mesh, flags=flags, caches=c,
+                                         cache_index=i, xkv=x)
+        shardings = jax.tree.map(lambda s: s.sharding,
+                                 (params, tok, caches, xkv, idx))
+        jitted = jax.jit(fn, in_shardings=shardings, donate_argnums=(2,))
+        return jitted, (params, tok, caches, xkv, idx)
+
+    caches = cache_specs(cfg, B, S, rules, mesh)
+
+    def fn(p, t, c, i):
+        logits, _, new_c = decoder.forward(p, t, cfg, rules=rules, mesh=mesh,
+                                           flags=flags, caches=c,
+                                           cache_index=i)
+        return logits, new_c
+
+    shardings = jax.tree.map(lambda s: s.sharding, (params, tok, caches, idx))
+    jitted = jax.jit(fn, in_shardings=shardings, donate_argnums=(2,))
+    return jitted, (params, tok, caches, idx)
+
+
+def build_cell(cfg: ModelConfig, shape: ShapeConfig, mesh, rules,
+               tcfg: TrainConfig = None, flags: RunFlags = None):
+    flags = flags or RunFlags()
+    if shape.kind == "train":
+        return build_train_cell(cfg, shape, mesh, rules,
+                                tcfg or TrainConfig(flags=flags))
+    if shape.kind == "prefill":
+        return build_prefill_cell(cfg, shape, mesh, rules, flags)
+    return build_decode_cell(cfg, shape, mesh, rules, flags)

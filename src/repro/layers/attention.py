@@ -1,0 +1,385 @@
+"""Grouped-query attention with RoPE/M-RoPE, KV caching, cross-attention,
+and a flash-decode path for long contexts (Pallas kernel, see
+repro.kernels.flash_decode).
+
+Sharding: heads over TP when divisible; KV cache sequence dim over the
+context-parallel axis for long_500k (GSPMD inserts the partial-softmax
+collectives automatically under pjit)."""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.layers import common
+from repro.layers.common import Accum, Compute
+from repro.sharding.rules import constrain
+
+
+def init(key, cfg, cross: bool = False):
+    D = cfg.d_model
+    H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    Hp = cfg.padded_heads
+    ks = jax.random.split(key, 4)
+    wq = common.dense_init(ks[0], D, Hp * hd)
+    wo = common.dense_init(ks[3], Hp * hd, D, scale=1.0 / (Hp * hd) ** 0.5)
+    if Hp != H:
+        # TP head padding: heads are laid out (kv-major, group-minor), so
+        # the pad heads must sit at the TAIL OF EACH KV GROUP to preserve
+        # the true q->kv mapping. Zero wq columns + wo rows there, so padded
+        # heads contribute exactly nothing.
+        G_true, G_pad = H // KV, Hp // KV
+        g_of = (jnp.arange(Hp * hd) // hd) % G_pad
+        mask = (g_of < G_true)
+        wq = wq * mask[None, :].astype(wq.dtype)
+        wo = wo * mask[:, None].astype(wo.dtype)
+    p = {
+        "wq": wq,
+        "wk": common.dense_init(ks[1], D, KV * hd),
+        "wv": common.dense_init(ks[2], D, KV * hd),
+        "wo": wo,
+    }
+    if cfg.qkv_bias and not cross:
+        p["bq"] = jnp.zeros((Hp * hd,), Compute)
+        p["bk"] = jnp.zeros((KV * hd,), Compute)
+        p["bv"] = jnp.zeros((KV * hd,), Compute)
+    return p
+
+
+def logical_axes(cfg, cross: bool = False):
+    la = {"wq": ("fsdp", "heads"), "wk": ("fsdp", "kv_heads"),
+          "wv": ("fsdp", "kv_heads"), "wo": ("heads", "fsdp")}
+    if cfg.qkv_bias and not cross:
+        la.update({"bq": ("heads",), "bk": ("kv_heads",),
+                   "bv": ("kv_heads",)})
+    return la
+
+
+def init_cache(cfg, batch: int, max_len: int, dtype=Compute):
+    KV, hd = cfg.n_kv_heads, cfg.head_dim
+    return {
+        "k": jnp.zeros((batch, max_len, KV, hd), dtype),
+        "v": jnp.zeros((batch, max_len, KV, hd), dtype),
+    }
+
+
+def cache_logical():
+    return {"k": ("batch", "seq", "kv_heads", None),
+            "v": ("batch", "seq", "kv_heads", None)}
+
+
+def cache_pspec(cfg, rules, mesh_shape):
+    """PartitionSpec for the KV cache.
+
+    kv_heads shard over TP when divisible; otherwise the cache SEQUENCE dim
+    takes the TP axis (context-parallel decode: each rank attends to its
+    window and GSPMD combines the partial softmaxes with tiny psums) —
+    replication of a 32k cache or per-layer re-gather is never acceptable.
+    rules.seq (data-axis context parallelism for long_500k) composes on the
+    same dim."""
+    from jax.sharding import PartitionSpec as P
+    batch = tuple(a for a in (rules.batch or ())
+                  if mesh_shape.get(a, 1) > 1) or None
+    seq_axes = []
+    if rules.seq and mesh_shape.get(rules.seq, 1) > 1:
+        seq_axes.append(rules.seq)
+    kv_ax = None
+    tp = rules.tp
+    if tp and mesh_shape.get(tp, 1) > 1:
+        if cfg.n_kv_heads % mesh_shape[tp] == 0:
+            kv_ax = tp
+        else:
+            seq_axes.append(tp)
+    return P(batch, tuple(seq_axes) or None, kv_ax, None)
+
+
+def _split_heads(x, n, hd):
+    return x.reshape(x.shape[:-1] + (n, hd))
+
+
+def _gqa_scores(q, k):
+    """q: (B,T,H,hd), k: (B,S,KV,hd) -> (B,KV,G,T,S) fp32.
+
+    bf16 operands with fp32 accumulation (preferred_element_type) — never
+    materialize an fp32 copy of the KV cache (XLA would hoist the convert
+    out of the decode loop: +2x HBM)."""
+    B, T, H, hd = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    qg = q.reshape(B, T, KV, G, hd)
+    return jnp.einsum("btkgd,bskd->bkgts", qg, k,
+                      preferred_element_type=Accum) / (hd ** 0.5)
+
+
+def _gqa_out(w, v):
+    """w: (B,KV,G,T,S) fp32 probs, v: (B,S,KV,hd) -> (B,T,H*hd) fp32."""
+    B, KV, G, T, S = w.shape
+    hd = v.shape[-1]
+    o = jnp.einsum("bkgts,bskd->btkgd", w.astype(v.dtype), v,
+                   preferred_element_type=Accum)
+    return o.reshape(B, T, KV * G * hd)
+
+
+def attend_full(q, k, v, causal: bool, q_offset=0):
+    """Full-materialization attention — reference for short sequences and
+    the oracle for the streaming/Pallas paths. fp32 softmax."""
+    s = _gqa_scores(q, k)
+    T, S = s.shape[-2], s.shape[-1]
+    if causal:
+        qpos = jnp.arange(T)[:, None] + q_offset
+        kpos = jnp.arange(S)[None, :]
+        s = jnp.where(kpos <= qpos, s, -jnp.inf)
+    w = jax.nn.softmax(s, axis=-1)
+    return _gqa_out(w, v)
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6))
+def attend_streaming(q, k, v, causal: bool, q_chunk: int = 512,
+                     kv_chunk: int = 1024, q_offset=0):
+    """Online-softmax (flash) attention in pure JAX: tiles over query and KV
+    chunks so the score matrix never materializes — forward streams tiles,
+    and the custom VJP implements the Dao backward (recompute p from the
+    saved log-sum-exp; only q/k/v/out/lse are saved, no tile stacks).
+
+    q: (B,T,H,hd); k,v: (B,S,KV,hd). Chunk sizes are hillclimb levers."""
+    out, _ = _streaming_fwd_impl(q, k, v, causal, q_chunk, kv_chunk, q_offset)
+    return out
+
+
+def _streaming_fwd_impl(q, k, v, causal, q_chunk, kv_chunk, q_offset):
+    B, T, H, hd = q.shape
+    S = k.shape[1]
+    KV = k.shape[2]
+    G = H // KV
+    q_chunk = min(q_chunk, T)
+    kv_chunk = min(kv_chunk, S)
+    if T % q_chunk or S % kv_chunk:
+        return attend_full(q, k, v, causal, q_offset), None
+    nq, nk = T // q_chunk, S // kv_chunk
+    qg = q.reshape(B, nq, q_chunk, KV, G, hd)
+    kc = k.reshape(B, nk, kv_chunk, KV, hd)
+    vc = v.reshape(B, nk, kv_chunk, KV, hd)
+    scale = 1.0 / (hd ** 0.5)
+
+    def q_block(qi_and_q):
+        qi, qb = qi_and_q                     # qb: (B,qc,KV,G,hd)
+        m0 = jnp.full((B, KV, G, q_chunk), -jnp.inf, Accum)
+        l0 = jnp.zeros((B, KV, G, q_chunk), Accum)
+        a0 = jnp.zeros((B, KV, G, q_chunk, hd), Accum)
+
+        def kv_step(carry, ki_and_kv):
+            m, l, acc = carry
+            ki, kb, vb = ki_and_kv
+            s = jnp.einsum("bqkgd,bskd->bkgqs", qb, kb,
+                           preferred_element_type=Accum) * scale
+            if causal:
+                qpos = qi * q_chunk + jnp.arange(q_chunk)[:, None] + q_offset
+                kpos = ki * kv_chunk + jnp.arange(kv_chunk)[None, :]
+                s = jnp.where(kpos <= qpos, s, -jnp.inf)
+            m_new = jnp.maximum(m, s.max(-1))
+            # guard fully-masked rows (m_new = -inf)
+            m_safe = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
+            p = jnp.exp(s - m_safe[..., None])
+            p = jnp.where(jnp.isfinite(s), p, 0.0)
+            corr = jnp.where(jnp.isfinite(m), jnp.exp(m - m_safe), 0.0)
+            l = l * corr + p.sum(-1)
+            acc = acc * corr[..., None] + jnp.einsum(
+                "bkgqs,bskd->bkgqd", p.astype(vb.dtype), vb,
+                preferred_element_type=Accum)
+            return (m_new, l, acc), None
+
+        (m, l, acc), _ = jax.lax.scan(
+            kv_step, (m0, l0, a0),
+            (jnp.arange(nk), kc.transpose(1, 0, 2, 3, 4),
+             vc.transpose(1, 0, 2, 3, 4)))
+        out = acc / jnp.maximum(l, 1e-30)[..., None]   # (B,KV,G,qc,hd)
+        lse = jnp.where(jnp.isfinite(m), m, 0.0) + jnp.log(
+            jnp.maximum(l, 1e-30))                     # (B,KV,G,qc)
+        return out, lse
+
+    outs, lses = jax.lax.map(q_block, (jnp.arange(nq),
+                                       qg.transpose(1, 0, 2, 3, 4, 5)))
+    # outs: (nq, B, KV, G, qc, hd) -> (B, T, H*hd)
+    out = outs.transpose(1, 0, 4, 2, 3, 5).reshape(B, T, H * hd)
+    lse = lses.transpose(1, 2, 3, 0, 4).reshape(B, KV, G, T)
+    return out, lse
+
+
+def _streaming_fwd(q, k, v, causal, q_chunk, kv_chunk, q_offset):
+    out, lse = _streaming_fwd_impl(q, k, v, causal, q_chunk, kv_chunk,
+                                   q_offset)
+    return out, (q, k, v, out, lse)
+
+
+def _streaming_bwd(causal, q_chunk, kv_chunk, q_offset, res, dout):
+    """Flash backward (Dao): recompute p tiles from the saved lse; only
+    O(q/k/v) accumulators live — no score-tile stacks."""
+    q, k, v, out, lse = res
+    B, T, H, hd = q.shape
+    S = k.shape[1]
+    KV = k.shape[2]
+    G = H // KV
+    if lse is None:  # fell back to attend_full (small seq): use plain VJP
+        _, vjp = jax.vjp(lambda q_, k_, v_: attend_full(q_, k_, v_, causal,
+                                                        q_offset), q, k, v)
+        return vjp(dout)
+    qc = min(q_chunk, T)
+    kc = min(kv_chunk, S)
+    nq, nk = T // qc, S // kc
+    scale = 1.0 / (hd ** 0.5)
+    do = dout.reshape(B, T, KV, G, hd)
+    og = out.reshape(B, T, KV, G, hd)
+    # delta[t] = sum_d do*out  (B,KV,G,T)
+    delta = jnp.einsum("btkgd,btkgd->bkgt", do.astype(Accum),
+                       og.astype(Accum))
+    qg = q.reshape(B, nq, qc, KV, G, hd)
+    dog = do.reshape(B, nq, qc, KV, G, hd)
+    lse_g = lse.reshape(B, KV, G, nq, qc)
+    delta_g = delta.reshape(B, KV, G, nq, qc)
+    kcs = k.reshape(B, nk, kc, KV, hd)
+    vcs = v.reshape(B, nk, kc, KV, hd)
+
+    def kv_block(dq_acc, ki_kb_vb):
+        """Outer scan over KV chunks: carry the q-sized dq accumulator, emit
+        this chunk's (dk, dv)."""
+        ki, kb, vb = ki_kb_vb                  # (B,kc,KV,hd)
+        dk0 = jnp.zeros((B, kc, KV, hd), Accum)
+        dv0 = jnp.zeros((B, kc, KV, hd), Accum)
+
+        def q_step(carry, qi):
+            dk, dv = carry
+            qb = qg[:, qi]                     # (B,qc,KV,G,hd)
+            dob = dog[:, qi]
+            s = jnp.einsum("bqkgd,bskd->bkgqs", qb, kb,
+                           preferred_element_type=Accum) * scale
+            if causal:
+                qpos = qi * qc + jnp.arange(qc)[:, None] + q_offset
+                kpos = ki * kc + jnp.arange(kc)[None, :]
+                s = jnp.where(kpos <= qpos, s, -jnp.inf)
+            p = jnp.exp(s - lse_g[:, :, :, qi][..., None])
+            p = jnp.where(jnp.isfinite(s), p, 0.0)     # (B,KV,G,qc,kc)
+            pb = p.astype(vb.dtype)
+            dv = dv + jnp.einsum("bkgqs,bqkgd->bskd", pb, dob,
+                                 preferred_element_type=Accum)
+            dp = jnp.einsum("bqkgd,bskd->bkgqs", dob, vb,
+                            preferred_element_type=Accum)
+            ds = p * (dp - delta_g[:, :, :, qi][..., None]) * scale
+            dsb = ds.astype(kb.dtype)
+            dq_c = jnp.einsum("bkgqs,bskd->bqkgd", dsb, kb,
+                              preferred_element_type=Accum)
+            dk = dk + jnp.einsum("bkgqs,bqkgd->bskd", dsb, qb,
+                                 preferred_element_type=Accum)
+            return (dk, dv), dq_c
+
+        (dk, dv), dq_chunks = jax.lax.scan(q_step, (dk0, dv0),
+                                           jnp.arange(nq))
+        # dq_chunks: (nq,B,qc,KV,G,hd) -> add into the full-T accumulator
+        dq_acc = dq_acc + dq_chunks.transpose(1, 0, 2, 3, 4, 5).reshape(
+            B, T, KV, G, hd)
+        return dq_acc, (dk, dv)
+
+    dq0 = jnp.zeros((B, T, KV, G, hd), Accum)
+    dq, (dks, dvs) = jax.lax.scan(
+        kv_block, dq0,
+        (jnp.arange(nk), kcs.transpose(1, 0, 2, 3, 4),
+         vcs.transpose(1, 0, 2, 3, 4)))
+    dq = dq.reshape(B, T, H, hd)
+    dk = dks.transpose(1, 0, 2, 3, 4).reshape(B, S, KV, hd)
+    dv = dvs.transpose(1, 0, 2, 3, 4).reshape(B, S, KV, hd)
+    return dq.astype(q.dtype), dk.astype(k.dtype), dv.astype(v.dtype)
+
+
+attend_streaming.defvjp(_streaming_fwd, _streaming_bwd)
+
+
+def attend_decode(q, cache_k, cache_v, cur_index, use_kernel: bool = False):
+    """One-token decode against a (possibly sharded) KV cache.
+
+    q: (B,1,H,hd); cache: (B,S,KV,hd); cur_index: scalar count of valid
+    positions (the new token is already written at cur_index-1)."""
+    if use_kernel:
+        from repro.kernels import ops as kops
+        return kops.flash_decode(q, cache_k, cache_v, cur_index)
+    s = _gqa_scores(q, cache_k)  # (B,KV,G,1,S)
+    S = s.shape[-1]
+    valid = jnp.arange(S)[None, None, None, None, :] < cur_index
+    s = jnp.where(valid, s, -jnp.inf)
+    w = jax.nn.softmax(s, axis=-1)
+    return _gqa_out(w, cache_v)
+
+
+STREAMING_THRESHOLD = 2048  # T*S above (threshold^2) switches to streaming
+
+
+def apply(p, x, cfg, *, rules=None, mesh=None, mode: str = "causal",
+          positions=None, positions3=None, cache=None, cache_index=None,
+          kv_source=None, use_flash_decode: bool = False,
+          q_chunk: int = 512, kv_chunk: int = 1024):
+    """Modes: "causal" (train/prefill decoder), "bidir" (encoder),
+    "cross" (enc-dec cross-attn; kv_source = encoder output),
+    "decode" (single step; cache + cache_index required).
+
+    Returns (y, new_cache). new_cache is None unless mode=="decode" or
+    mode=="causal" with cache provided (prefill fill-in)."""
+    B, T, D = x.shape
+    H, KV, hd = cfg.padded_heads, cfg.n_kv_heads, cfg.head_dim
+    q = x @ p["wq"]
+    kv_in = kv_source if mode == "cross" else x
+    k = kv_in @ p["wk"]
+    v = kv_in @ p["wv"]
+    if "bq" in p:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    q = _split_heads(q, H, hd)
+    k = _split_heads(k, KV, hd)
+    v = _split_heads(v, KV, hd)
+
+    if cfg.rope != "none" and mode != "cross":
+        if positions is None:
+            base = cache_index if mode == "decode" else 0
+            positions = jnp.arange(T)[None, :] + base
+            positions = jnp.broadcast_to(positions, (B, T))
+        if cfg.rope == "mrope":
+            p3 = positions3 if positions3 is not None else \
+                common.text_positions3(positions)
+            sections = cfg.head_dim // 2 // 4, cfg.head_dim // 2 * 3 // 8, \
+                cfg.head_dim // 2 * 3 // 8
+            cos, sin = common.mrope_cos_sin(p3, hd, cfg.rope_theta, sections)
+        else:
+            cos, sin = common.rope_cos_sin(positions, hd, cfg.rope_theta)
+        q = common.apply_rope(q, cos, sin)
+        k = common.apply_rope(k, cos, sin)
+
+    q = constrain(q, ("batch", None, "heads", None), rules, mesh)
+    k = constrain(k, ("batch", None, "kv_heads", None), rules, mesh)
+
+    new_cache = None
+    if mode == "decode":
+        assert cache is not None and cache_index is not None
+        ck = jax.lax.dynamic_update_slice(cache["k"], k, (0, cache_index, 0, 0))
+        cv = jax.lax.dynamic_update_slice(cache["v"], v, (0, cache_index, 0, 0))
+        if mesh is not None and rules is not None:
+            from jax.sharding import NamedSharding
+            spec = cache_pspec(cfg, rules,
+                               dict(zip(mesh.axis_names, mesh.devices.shape)))
+            ck = jax.lax.with_sharding_constraint(
+                ck, NamedSharding(mesh, spec))
+            cv = jax.lax.with_sharding_constraint(
+                cv, NamedSharding(mesh, spec))
+        new_cache = {"k": ck, "v": cv}
+        o = attend_decode(q, ck, cv, cache_index + 1,
+                          use_kernel=use_flash_decode)
+    else:
+        if cache is not None and mode == "causal":  # prefill: fill cache
+            ck = jax.lax.dynamic_update_slice(cache["k"], k, (0, 0, 0, 0))
+            cv = jax.lax.dynamic_update_slice(cache["v"], v, (0, 0, 0, 0))
+            new_cache = {"k": ck, "v": cv}
+        if q.shape[1] * k.shape[1] > STREAMING_THRESHOLD ** 2:
+            o = attend_streaming(q, k, v, causal=(mode == "causal"),
+                                 q_chunk=q_chunk, kv_chunk=kv_chunk)
+        else:
+            o = attend_full(q, k, v, causal=(mode == "causal"))
+    o = o.astype(x.dtype)
+    y = o @ p["wo"]
+    return constrain(y, ("batch", None, None), rules, mesh), new_cache

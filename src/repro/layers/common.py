@@ -1,0 +1,82 @@
+"""Shared building blocks: initializers, norms, rotary embeddings, embedding
+tables with TP-friendly vocab padding."""
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Compute = jnp.bfloat16
+Accum = jnp.float32
+
+
+def dense_init(key, d_in: int, d_out: int, scale: Optional[float] = None,
+               dtype=Compute):
+    scale = scale if scale is not None else 1.0 / math.sqrt(d_in)
+    return (jax.random.normal(key, (d_in, d_out), jnp.float32)
+            * scale).astype(dtype)
+
+
+def rmsnorm(x, scale, eps: float = 1e-5):
+    h = x.astype(Accum)
+    var = jnp.mean(h * h, axis=-1, keepdims=True)
+    return (h * jax.lax.rsqrt(var + eps)).astype(x.dtype) * scale
+
+
+def init_rmsnorm(d: int, dtype=Compute):
+    return {"scale": jnp.ones((d,), dtype)}
+
+
+def pad_vocab(vocab: int, multiple: int) -> int:
+    """Pad the vocab so the embedding/logits dims shard over TP cleanly."""
+    return -(-vocab // multiple) * multiple
+
+
+# ---------------------------------------------------------------------------
+# rotary embeddings (RoPE and Qwen2-VL multimodal M-RoPE)
+# ---------------------------------------------------------------------------
+
+
+def rope_freqs(head_dim: int, theta: float):
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=Accum)
+                            / head_dim))
+
+
+def rope_cos_sin(positions, head_dim: int, theta: float):
+    """positions: (..., T) int -> cos/sin (..., T, head_dim//2)."""
+    ang = positions[..., None].astype(Accum) * rope_freqs(head_dim, theta)
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x, cos, sin):
+    """x: (B, T, H, hd); cos/sin: (B, T, hd//2) (broadcast over heads)."""
+    x1, x2 = jnp.split(x.astype(Accum), 2, axis=-1)
+    c = cos[:, :, None, :]
+    s = sin[:, :, None, :]
+    return jnp.concatenate([x1 * c - x2 * s, x1 * s + x2 * c],
+                           axis=-1).astype(x.dtype)
+
+
+def mrope_cos_sin(positions3, head_dim: int, theta: float,
+                  sections: Tuple[int, int, int]):
+    """Qwen2-VL M-RoPE: three position streams (temporal, height, width)
+    fill disjoint frequency sections. positions3: (B, 3, T).
+    Returns cos/sin (B, T, head_dim//2)."""
+    half = head_dim // 2
+    assert sum(sections) == half, (sections, half)
+    freqs = rope_freqs(head_dim, theta)  # (half,)
+    ang_all = positions3[..., None].astype(Accum) * freqs  # (B, 3, T, half)
+    sec_id = jnp.repeat(jnp.arange(3), jnp.array(sections),
+                        total_repeat_length=half)  # (half,)
+    # frequency slot f uses the position stream sections[f] belongs to
+    ang = jnp.moveaxis(ang_all, 1, -1)  # (B, T, half, 3)
+    ang = jnp.take_along_axis(ang, sec_id[None, None, :, None],
+                              axis=-1)[..., 0]
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def text_positions3(positions):
+    """Text-only M-RoPE degenerates to three equal streams."""
+    return jnp.stack([positions] * 3, axis=1)

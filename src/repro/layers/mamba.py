@@ -1,0 +1,132 @@
+"""Mamba-1 selective SSM block (as interleaved in Jamba).
+
+Reference path: `lax.scan` over time (exact). The perf-critical chunked scan
+lives in repro.kernels.mamba_scan (Pallas, VMEM-tiled) and is selected with
+use_kernel=True.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.layers import common
+from repro.layers.common import Accum, Compute
+from repro.sharding.rules import constrain
+
+
+def dims(cfg):
+    Di = cfg.mamba_expand * cfg.d_model
+    dt_rank = -(-cfg.d_model // 16)
+    return Di, dt_rank, cfg.mamba_d_state, cfg.mamba_d_conv
+
+
+def init(key, cfg):
+    D = cfg.d_model
+    Di, dt_rank, N, K = dims(cfg)
+    ks = jax.random.split(key, 6)
+    return {
+        "in_proj": common.dense_init(ks[0], D, 2 * Di),
+        "conv_w": (jax.random.normal(ks[1], (K, Di), jnp.float32)
+                   * (1.0 / K ** 0.5)).astype(Compute),
+        "conv_b": jnp.zeros((Di,), Compute),
+        "x_proj": common.dense_init(ks[2], Di, dt_rank + 2 * N),
+        "dt_proj": common.dense_init(ks[3], dt_rank, Di),
+        "dt_bias": jnp.full((Di,), -4.6, Compute),  # softplus ~ 0.01
+        "A_log": jnp.log(jnp.broadcast_to(
+            jnp.arange(1, N + 1, dtype=jnp.float32), (Di, N)) + 0.0),
+        "D_skip": jnp.ones((Di,), jnp.float32),
+        "out_proj": common.dense_init(ks[5], Di, D),
+    }
+
+
+def logical_axes(cfg=None):
+    return {"in_proj": ("fsdp", "inner"), "conv_w": (None, "inner"),
+            "conv_b": ("inner",), "x_proj": ("inner", None),
+            "dt_proj": (None, "inner"), "dt_bias": ("inner",),
+            "A_log": ("inner", None), "D_skip": ("inner",),
+            "out_proj": ("inner", "fsdp")}
+
+
+def init_state(cfg, batch: int, dtype=Compute):
+    Di, _, N, K = dims(cfg)
+    return {"conv": jnp.zeros((batch, K - 1, Di), dtype),
+            "ssm": jnp.zeros((batch, Di, N), Accum)}
+
+
+def state_logical():
+    return {"conv": ("batch", None, "inner"),
+            "ssm": ("batch", "inner", None)}
+
+
+def _ssm_params(p, x, cfg):
+    """x: (B, T, Di) post-conv -> dt (B,T,Di) fp32, Bmat/Cmat (B,T,N)."""
+    _, dt_rank, N, _ = dims(cfg)
+    proj = x @ p["x_proj"]
+    dt, Bm, Cm = jnp.split(proj, [dt_rank, dt_rank + N], axis=-1)
+    dt = jax.nn.softplus((dt @ p["dt_proj"]).astype(Accum)
+                         + p["dt_bias"].astype(Accum))
+    return dt, Bm.astype(Accum), Cm.astype(Accum)
+
+
+def _scan_ref(dt, A, Bm, Cm, x, h0=None):
+    """Sequential selective scan. dt,x: (B,T,Di); Bm,Cm: (B,T,N); A: (Di,N).
+    Returns y (B,T,Di) fp32 and final state (B,Di,N).
+
+    The discretization exp(dt*A) is computed PER STEP inside the scan — the
+    eager (B,T,Di,N) formulation materializes terabytes at production
+    shapes (the baseline dry-run exposed this; see EXPERIMENTS.md §Perf).
+    The Pallas kernel (kernels/mamba_scan.py) additionally keeps the state
+    in VMEM across time chunks."""
+    B, T, Di = dt.shape
+    N = A.shape[1]
+
+    def step(h, inputs):
+        dt_t, x_t, b_t, c_t = inputs                    # (B,Di) (B,Di) (B,N)
+        dA_t = jnp.exp(dt_t[..., None] * A)             # (B,Di,N)
+        h = dA_t * h + (dt_t * x_t)[..., None] * b_t[:, None, :]
+        y = jnp.einsum("bdn,bn->bd", h, c_t)
+        return h, y
+
+    if h0 is None:
+        h0 = jnp.zeros((B, Di, N), Accum)
+    hT, ys = jax.lax.scan(step, h0,
+                          (dt.transpose(1, 0, 2),
+                           x.astype(Accum).transpose(1, 0, 2),
+                           Bm.transpose(1, 0, 2),
+                           Cm.transpose(1, 0, 2)))
+    return ys.transpose(1, 0, 2), hT
+
+
+def apply(p, u, cfg, rules=None, mesh=None, state=None, use_kernel=False):
+    """u: (B, T, D). If state is given, runs a stateful step (decode: T==1)
+    and returns (y, new_state); else returns (y, None)."""
+    B, T, D = u.shape
+    Di, dt_rank, N, K = dims(cfg)
+    xz = u @ p["in_proj"]
+    x, z = jnp.split(xz, 2, axis=-1)                    # (B,T,Di)
+    x = constrain(x, ("batch", None, "inner"), rules, mesh)
+
+    new_state = None
+    # causal depthwise conv over time; carried history = zero pad for t<0
+    carry = state["conv"] if state is not None else jnp.zeros(
+        (B, K - 1, Di), x.dtype)
+    xp = jnp.concatenate([carry, x], axis=1)            # (B, K-1+T, Di)
+    new_conv = xp[:, -(K - 1):] if K > 1 else carry
+    x = sum(xp[:, i:i + T] * p["conv_w"][i] for i in range(K))
+    x = x + p["conv_b"]
+    x = jax.nn.silu(x)
+
+    dt, Bm, Cm = _ssm_params(p, x, cfg)
+    A = -jnp.exp(p["A_log"])
+    if state is None and use_kernel:
+        from repro.kernels import ops as kops
+        y, hT = kops.mamba_scan(dt, A, Bm, Cm, x)
+    else:
+        h0 = state["ssm"] if state is not None else None
+        y, hT = _scan_ref(dt, A, Bm, Cm, x, h0=h0)
+    y = y + x.astype(Accum) * p["D_skip"]
+    y = (y.astype(u.dtype)) * jax.nn.silu(z)
+    out = y @ p["out_proj"]
+    if state is not None:
+        new_state = {"conv": new_conv, "ssm": hT}
+    return constrain(out, ("batch", None, None), rules, mesh), new_state

@@ -1,0 +1,30 @@
+"""SwiGLU MLP (llama-family) with TP sharding on the hidden dim."""
+from __future__ import annotations
+
+import jax
+
+from repro.layers import common
+from repro.sharding.rules import constrain
+
+
+def init(key, cfg, d_ff=None):
+    D = cfg.d_model
+    F = d_ff or cfg.d_ff
+    ks = jax.random.split(key, 3)
+    return {
+        "w_gate": common.dense_init(ks[0], D, F),
+        "w_up": common.dense_init(ks[1], D, F),
+        "w_down": common.dense_init(ks[2], F, D),
+    }
+
+
+def logical_axes(cfg=None):
+    return {"w_gate": ("fsdp", "ff"), "w_up": ("fsdp", "ff"),
+            "w_down": ("ff", "fsdp")}
+
+
+def apply(p, x, cfg, rules=None, mesh=None):
+    h = jax.nn.silu(x @ p["w_gate"]) * (x @ p["w_up"])
+    h = constrain(h, ("batch", None, "ff"), rules, mesh)
+    y = h @ p["w_down"]
+    return constrain(y, ("batch", None, None), rules, mesh)

@@ -1,0 +1,170 @@
+"""Mixture-of-Experts with token-choice top-k routing and expert parallelism.
+
+Dispatch is the TPU-native sort + ragged_dot formulation (exact active-FLOPs,
+no dense all-experts waste), run inside shard_map so the expert-parallel
+all_to_all over the TP axis is explicit in the HLO — this is the framework
+path exercised by the paper's hierarchical alltoall (core.mcoll).
+
+Layout: expert weights (E, D, F) sharded E->tp, D->fsdp (gathered at use,
+ZeRO-3 style). Activations are replicated over tp outside this layer; inside,
+each tp rank routes a disjoint 1/TP slice of the local tokens, ships them to
+expert shards with a fixed per-peer capacity (dropped tokens get zero
+combine-weight, standard token-dropping semantics), computes with ragged_dot,
+and ships results back.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.layers import common
+from repro.layers.common import Accum
+
+
+def init(key, cfg):
+    moe = cfg.moe
+    D, E, F = cfg.d_model, moe.n_experts, moe.d_ff_expert
+    ks = jax.random.split(key, 4)
+    scale = 1.0 / D ** 0.5
+    return {
+        "router": common.dense_init(ks[0], D, E, dtype=jnp.float32),
+        "w_gate": (jax.random.normal(ks[1], (E, D, F), jnp.float32)
+                   * scale).astype(common.Compute),
+        "w_up": (jax.random.normal(ks[2], (E, D, F), jnp.float32)
+                 * scale).astype(common.Compute),
+        "w_down": (jax.random.normal(ks[3], (E, F, D), jnp.float32)
+                   * (1.0 / F ** 0.5)).astype(common.Compute),
+    }
+
+
+def logical_axes(cfg=None):
+    return {"router": (None, None),
+            "w_gate": ("experts", "fsdp", None),
+            "w_up": ("experts", "fsdp", None),
+            "w_down": ("experts", None, "fsdp")}
+
+
+def _route(router, tokens, moe):
+    """tokens (t, D) -> (weights (t,k), expert_ids (t,k), probs (t,E))."""
+    logits = tokens.astype(Accum) @ router.astype(Accum)
+    probs = jax.nn.softmax(logits, axis=-1)
+    w, ids = jax.lax.top_k(probs, moe.top_k)
+    w = w / jnp.maximum(w.sum(-1, keepdims=True), 1e-9)  # renormalize
+    return w, ids, probs
+
+
+def _expert_compute(x_sorted, group_sizes, wg, wu, wd):
+    """ragged grouped matmuls: exact active FLOPs."""
+    h = jax.lax.ragged_dot(x_sorted, wg, group_sizes)
+    u = jax.lax.ragged_dot(x_sorted, wu, group_sizes)
+    h = jax.nn.silu(h) * u
+    return jax.lax.ragged_dot(h.astype(x_sorted.dtype), wd, group_sizes)
+
+
+def _aux_loss(probs, ids, moe):
+    """Switch-style load balance loss: E * sum_e f_e * P_e."""
+    E = moe.n_experts
+    f = jnp.mean(jax.nn.one_hot(ids, E, dtype=Accum).sum(1), axis=0)
+    pbar = probs.mean(0)
+    return E * jnp.sum(f / moe.top_k * pbar)
+
+
+def _moe_local(p, tokens, cfg):
+    """Single-device reference path (also the oracle for the EP path)."""
+    moe = cfg.moe
+    t, D = tokens.shape
+    w, ids, probs = _route(p["router"], tokens, moe)
+    k = moe.top_k
+    flat_ids = ids.reshape(-1)
+    order = jnp.argsort(flat_ids, stable=True)
+    inv = jnp.argsort(order, stable=True)
+    x_rep = jnp.repeat(tokens, k, axis=0)[order]
+    group_sizes = jnp.bincount(flat_ids, length=moe.n_experts)
+    out = _expert_compute(x_rep, group_sizes, p["w_gate"], p["w_up"],
+                          p["w_down"])[inv]
+    out = out.reshape(t, k, D) * w[..., None].astype(out.dtype)
+    return out.sum(1), _aux_loss(probs, ids, moe)
+
+
+def _moe_ep_shard(p_router, wg, wu, wd, x, cfg, tp_axis, tp_size):
+    """Runs inside shard_map. x: (B_l, S, D) replicated over tp."""
+    moe = cfg.moe
+    B, S, D = x.shape
+    E = moe.n_experts
+    E_local = E // tp_size
+    k = moe.top_k
+    rank = jax.lax.axis_index(tp_axis)
+    tokens = x.reshape(-1, D)
+    T = tokens.shape[0]
+    t = -(-T // tp_size)  # my routing slice (padded)
+    pad = t * tp_size - T
+    if pad:
+        tokens = jnp.concatenate(
+            [tokens, jnp.zeros((pad, D), tokens.dtype)], 0)
+    mine = jax.lax.dynamic_slice_in_dim(tokens, rank * t, t, axis=0)
+
+    w, ids, probs = _route(p_router, mine, moe)
+    flat_ids = ids.reshape(-1)                      # (t*k,)
+    flat_w = w.reshape(-1).astype(Accum)
+    dest = flat_ids // E_local                      # target tp peer
+    cap = max(1, int(-(-t * k // tp_size) * moe.capacity_factor))
+    onehot = jax.nn.one_hot(dest, tp_size, dtype=jnp.int32)
+    pos = (jnp.cumsum(onehot, axis=0) - 1)[jnp.arange(t * k), dest]
+    valid = pos < cap
+    pos_c = jnp.where(valid, pos, cap)              # cap -> dropped
+    x_rep = jnp.repeat(mine, k, axis=0)
+
+    send_x = jnp.zeros((tp_size, cap, D), mine.dtype).at[dest, pos_c].set(
+        x_rep, mode="drop")
+    send_eid = jnp.full((tp_size, cap), E_local - 1, jnp.int32).at[
+        dest, pos_c].set(flat_ids % E_local, mode="drop")
+    send_ok = jnp.zeros((tp_size, cap), jnp.bool_).at[dest, pos_c].set(
+        valid, mode="drop")
+
+    a2a = partial(jax.lax.all_to_all, axis_name=tp_axis, split_axis=0,
+                  concat_axis=0, tiled=False)
+    rx = a2a(send_x).reshape(tp_size * cap, D)
+    re = a2a(send_eid).reshape(tp_size * cap)
+    rok = a2a(send_ok).reshape(tp_size * cap)
+
+    eid_eff = jnp.where(rok, re, E_local - 1)
+    order = jnp.argsort(eid_eff, stable=True)
+    inv = jnp.argsort(order, stable=True)
+    group_sizes = jnp.bincount(eid_eff, length=E_local)
+    out = _expert_compute(rx[order], group_sizes, wg, wu, wd)[inv]
+    out = jnp.where(rok[:, None], out, 0)
+
+    back = a2a(out.reshape(tp_size, cap, D))        # (tp, cap, D) my results
+    gathered = back[dest, pos_c]                    # (t*k, D); garbage if !valid
+    contrib = gathered * (flat_w * valid)[:, None].astype(gathered.dtype)
+    y_mine = contrib.reshape(t, k, D).sum(1)
+
+    y_all = jax.lax.all_gather(y_mine, tp_axis, axis=0, tiled=True)[:T]
+    aux = _aux_loss(probs, ids, moe)
+    aux_vec = jnp.full((B, S), aux, Accum)
+    return y_all.reshape(B, S, D), aux_vec
+
+
+def apply(p, x, cfg, rules=None, mesh=None):
+    """x: (B, S, D). Returns (y, aux_loss_per_token (B,S))."""
+    B, S, D = x.shape
+    tp = rules.tp if rules else None
+    tp_size = mesh.shape[tp] if (mesh is not None and tp in
+                                 getattr(mesh, "axis_names", ())) else 1
+    if mesh is None or tp_size == 1 or cfg.moe.n_experts % tp_size != 0:
+        y, aux = _moe_local(p, x.reshape(-1, D), cfg)
+        return y.reshape(B, S, D), jnp.full((B, S), aux, Accum)
+
+    batch_axes = tuple(a for a in (rules.batch or ()) if a in mesh.axis_names)
+    xspec = P(batch_axes if batch_axes else None, None, None)
+    fn = jax.shard_map(
+        partial(_moe_ep_shard, cfg=cfg, tp_axis=tp, tp_size=tp_size),
+        mesh=mesh,
+        in_specs=(P(None, None), P(tp, None, None), P(tp, None, None),
+                  P(tp, None, None), xspec),
+        out_specs=(xspec, P(batch_axes if batch_axes else None, None)),
+        check_vma=False)
+    return fn(p["router"], p["w_gate"], p["w_up"], p["w_down"], x)

@@ -1,0 +1,145 @@
+"""RWKV-6 (Finch) block: time mixing with data-dependent decay + channel
+mixing. Attention-free; O(1) state per token makes long_500k decode cheap.
+
+Reference recurrence via lax.scan; the chunked Pallas kernel lives in
+repro.kernels.rwkv6_wkv."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.layers import common
+from repro.layers.common import Accum, Compute
+from repro.sharding.rules import constrain
+
+DECAY_LORA = 64
+
+
+def n_heads(cfg):
+    assert cfg.d_model % cfg.rwkv_head_dim == 0
+    return cfg.d_model // cfg.rwkv_head_dim
+
+
+def init(key, cfg):
+    D = cfg.d_model
+    H, hd = n_heads(cfg), cfg.rwkv_head_dim
+    F = cfg.d_ff
+    ks = jax.random.split(key, 12)
+    return {
+        "tm": {
+            # token-shift interpolation weights for r/k/v/w/g
+            "mu": (0.5 * jnp.ones((5, D), jnp.float32)).astype(Compute),
+            "wr": common.dense_init(ks[0], D, D),
+            "wk": common.dense_init(ks[1], D, D),
+            "wv": common.dense_init(ks[2], D, D),
+            "wg": common.dense_init(ks[3], D, D),
+            "wo": common.dense_init(ks[4], D, D),
+            # data-dependent decay (the defining v6 feature):
+            # w_t = exp(-exp(w0 + tanh(x_w @ w1) @ w2))
+            "w0": jnp.full((D,), -2.0, jnp.float32),
+            "w1": common.dense_init(ks[5], D, DECAY_LORA, dtype=jnp.float32),
+            "w2": common.dense_init(ks[6], DECAY_LORA, D, dtype=jnp.float32),
+            "u": (jax.random.normal(ks[7], (H, hd), jnp.float32)
+                  * 0.1),
+            "ln_x": {"scale": jnp.ones((D,), Compute)},
+        },
+        "cm": {
+            "mu": (0.5 * jnp.ones((2, D), jnp.float32)).astype(Compute),
+            "wk": common.dense_init(ks[8], D, F),
+            "wv": common.dense_init(ks[9], F, D),
+            "wr": common.dense_init(ks[10], D, D),
+        },
+    }
+
+
+def logical_axes(cfg=None):
+    return {
+        "tm": {"mu": (None, None), "wr": ("fsdp", "heads"),
+               "wk": ("fsdp", "heads"), "wv": ("fsdp", "heads"),
+               "wg": ("fsdp", "heads"), "wo": ("heads", "fsdp"),
+               "w0": (None,), "w1": (None, None), "w2": (None, None),
+               "u": ("heads", None), "ln_x": {"scale": (None,)}},
+        "cm": {"mu": (None, None), "wk": ("fsdp", "ff"),
+               "wv": ("ff", "fsdp"), "wr": ("fsdp", None)},
+    }
+
+
+def init_state(cfg, batch: int, dtype=Compute):
+    D = cfg.d_model
+    H, hd = n_heads(cfg), cfg.rwkv_head_dim
+    return {"tm_shift": jnp.zeros((batch, D), dtype),
+            "wkv": jnp.zeros((batch, H, hd, hd), Accum),
+            "cm_shift": jnp.zeros((batch, D), dtype)}
+
+
+def state_logical():
+    return {"tm_shift": ("batch", None), "wkv": ("batch", "heads", None, None),
+            "cm_shift": ("batch", None)}
+
+
+def _shift(x, carry):
+    """Token shift: x_{t-1} with carry for t=0. x: (B,T,D), carry: (B,D)."""
+    return jnp.concatenate([carry[:, None], x[:, :-1]], axis=1)
+
+
+def wkv6_ref(r, k, v, w, u, s0):
+    """WKV6 recurrence. r,k,v,w: (B,T,H,hd) (w already in (0,1) decay form,
+    fp32); u: (H,hd); s0: (B,H,hd,hd) initial state.
+    y_t = r_t . (S_{t-1} + u * k_t^T v_t);  S_t = diag(w_t) S_{t-1} + k_t^T v_t
+    Returns y (B,T,H,hd) fp32, final state."""
+    def step(S, inp):
+        r_t, k_t, v_t, w_t = inp                       # (B,H,hd)
+        kv = k_t[..., :, None] * v_t[..., None, :]     # (B,H,hd,hd)
+        y = jnp.einsum("bhi,bhij->bhj", r_t, S + u[..., None] * kv)
+        S = w_t[..., None] * S + kv
+        return S, y
+    seq = (r.transpose(1, 0, 2, 3).astype(Accum),
+           k.transpose(1, 0, 2, 3).astype(Accum),
+           v.transpose(1, 0, 2, 3).astype(Accum),
+           w.transpose(1, 0, 2, 3))
+    sT, ys = jax.lax.scan(step, s0, seq)
+    return ys.transpose(1, 0, 2, 3), sT
+
+
+def time_mix(p, x, cfg, state_shift=None, state_wkv=None, rules=None,
+             mesh=None, use_kernel=False):
+    B, T, D = x.shape
+    H, hd = n_heads(cfg), cfg.rwkv_head_dim
+    carry = state_shift if state_shift is not None else jnp.zeros((B, D),
+                                                                  x.dtype)
+    xprev = _shift(x, carry)
+    mu = p["mu"]
+    xr, xk, xv, xw, xg = (x + (xprev - x) * mu[i] for i in range(5))
+    r = (xr @ p["wr"]).reshape(B, T, H, hd)
+    k = (xk @ p["wk"]).reshape(B, T, H, hd)
+    v = (xv @ p["wv"]).reshape(B, T, H, hd)
+    g = jax.nn.silu(xg @ p["wg"])
+    # data-dependent decay
+    dd = (p["w0"] + jnp.tanh(xw.astype(Accum) @ p["w1"]) @ p["w2"])
+    w = jnp.exp(-jnp.exp(dd)).reshape(B, T, H, hd)     # in (0,1)
+    s0 = state_wkv if state_wkv is not None else jnp.zeros((B, H, hd, hd),
+                                                           Accum)
+    if use_kernel and state_wkv is None:
+        from repro.kernels import ops as kops
+        y, sT = kops.rwkv6_wkv(r, k, v, w, p["u"], s0)
+    else:
+        y, sT = wkv6_ref(r, k, v, w, p["u"], s0)
+    y = y.reshape(B, T, D).astype(x.dtype)
+    y = common.rmsnorm(y, p["ln_x"]["scale"], cfg.norm_eps) * g
+    out = y @ p["wo"]
+    out = constrain(out, ("batch", None, None), rules, mesh)
+    return out, x[:, -1], sT
+
+
+def channel_mix(p, x, cfg, state_shift=None):
+    B, T, D = x.shape
+    carry = state_shift if state_shift is not None else jnp.zeros((B, D),
+                                                                  x.dtype)
+    xprev = _shift(x, carry)
+    mu = p["mu"]
+    xk = x + (xprev - x) * mu[0]
+    xr = x + (xprev - x) * mu[1]
+    k = jnp.square(jax.nn.relu(xk @ p["wk"]))
+    kv = k @ p["wv"]
+    out = jax.nn.sigmoid(xr @ p["wr"]) * kv
+    return out, x[:, -1]

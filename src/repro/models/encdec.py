@@ -1,0 +1,182 @@
+"""Encoder-decoder LM (SeamlessM4T-style backbone).
+
+The audio frontend is a stub per the assignment: the encoder consumes
+precomputed frame embeddings (B, S_enc, D) from input_specs(). The decoder
+is a standard causal LM with per-layer cross-attention; decode uses a
+self-attn KV cache plus cross K/V computed once from the encoder output.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.layers import attention, common, mlp
+from repro.layers.common import Accum
+from repro.models.decoder import RunFlags
+from repro.sharding.rules import constrain
+
+
+def _init_enc_layer(key, cfg):
+    ks = jax.random.split(key, 2)
+    return {"ln1": common.init_rmsnorm(cfg.d_model),
+            "attn": attention.init(ks[0], cfg),
+            "ln2": common.init_rmsnorm(cfg.d_model),
+            "ffn": mlp.init(ks[1], cfg)}
+
+
+def _init_dec_layer(key, cfg):
+    ks = jax.random.split(key, 3)
+    return {"ln1": common.init_rmsnorm(cfg.d_model),
+            "attn": attention.init(ks[0], cfg),
+            "lnx": common.init_rmsnorm(cfg.d_model),
+            "xattn": attention.init(ks[1], cfg, cross=True),
+            "ln2": common.init_rmsnorm(cfg.d_model),
+            "ffn": mlp.init(ks[2], cfg)}
+
+
+def init(key, cfg, mesh=None, rules=None):
+    from repro.models.decoder import _vocab_padded
+    Vp = _vocab_padded(cfg, mesh, rules)
+    D = cfg.d_model
+    ks = jax.random.split(key, 4)
+    enc = jax.vmap(lambda k: _init_enc_layer(k, cfg))(
+        jax.random.split(ks[0], cfg.enc_layers))
+    dec = jax.vmap(lambda k: _init_dec_layer(k, cfg))(
+        jax.random.split(ks[1], cfg.n_layers))
+    return {"embed": common.dense_init(ks[2], Vp, D, scale=1.0),
+            "enc": enc, "dec": dec,
+            "enc_norm": common.init_rmsnorm(D),
+            "final_norm": common.init_rmsnorm(D),
+            "lm_head": common.dense_init(ks[3], D, Vp)}
+
+
+def logical(cfg):
+    def stack(t):
+        return jax.tree.map(lambda x: (None,) + x, t,
+                            is_leaf=lambda x: isinstance(x, tuple) and all(
+                                isinstance(e, (str, type(None))) for e in x))
+    enc = stack({"ln1": {"scale": (None,)},
+                 "attn": attention.logical_axes(cfg),
+                 "ln2": {"scale": (None,)}, "ffn": mlp.logical_axes(cfg)})
+    dec = stack({"ln1": {"scale": (None,)},
+                 "attn": attention.logical_axes(cfg),
+                 "lnx": {"scale": (None,)},
+                 "xattn": attention.logical_axes(cfg, cross=True),
+                 "ln2": {"scale": (None,)}, "ffn": mlp.logical_axes(cfg)})
+    return {"embed": ("vocab", "fsdp"), "enc": enc, "dec": dec,
+            "enc_norm": {"scale": (None,)}, "final_norm": {"scale": (None,)},
+            "lm_head": ("fsdp", "vocab")}
+
+
+def encode(params, frames, cfg, rules=None, mesh=None,
+           flags: RunFlags = RunFlags()):
+    """frames: (B, S_enc, D) stub embeddings -> (B, S_enc, D)."""
+    h = constrain(frames.astype(common.Compute), ("batch", None, None),
+                  rules, mesh)
+
+    def body(h, layer):
+        a, _ = attention.apply(
+            layer["attn"],
+            common.rmsnorm(h, layer["ln1"]["scale"], cfg.norm_eps),
+            cfg, rules=rules, mesh=mesh, mode="bidir")
+        h = h + a
+        h = h + mlp.apply(layer["ffn"],
+                          common.rmsnorm(h, layer["ln2"]["scale"],
+                                         cfg.norm_eps),
+                          cfg, rules=rules, mesh=mesh)
+        return h, None
+
+    fn = body
+    if flags.remat != "none":
+        fn = jax.checkpoint(body)
+    h, _ = jax.lax.scan(fn, h, params["enc"])
+    return common.rmsnorm(h, params["enc_norm"]["scale"], cfg.norm_eps)
+
+
+def init_cache(cfg, batch: int, max_len: int):
+    return jax.tree.map(
+        lambda x: jnp.broadcast_to(x, (cfg.n_layers,) + x.shape),
+        attention.init_cache(cfg, batch, max_len))
+
+
+def cross_cache(params, enc_out, cfg):
+    """Precompute per-layer cross K/V from the encoder output."""
+    KV, hd = cfg.n_kv_heads, cfg.head_dim
+
+    def one(layer):
+        k = (enc_out @ layer["xattn"]["wk"]).reshape(
+            enc_out.shape[0], -1, KV, hd)
+        v = (enc_out @ layer["xattn"]["wv"]).reshape(
+            enc_out.shape[0], -1, KV, hd)
+        return {"k": k, "v": v}
+    return jax.lax.map(one, params["dec"])
+
+
+def decode_forward(params, tokens, enc_out, cfg, *, rules=None, mesh=None,
+                   flags: RunFlags = RunFlags(), caches=None,
+                   cache_index=None, xkv=None):
+    """Decoder pass. Train/prefill: full tokens, enc_out given. Decode: one
+    token, caches + cache_index + xkv (precomputed cross K/V) given."""
+    h = jnp.take(params["embed"], tokens, axis=0)
+    h = constrain(h, ("batch", None, None), rules, mesh)
+    decode = caches is not None and cache_index is not None
+
+    def body(h, xs):
+        if decode:
+            layer, cache, xkv_l = xs
+        else:
+            layer, = xs
+            cache, xkv_l = None, None
+        a, nk = attention.apply(
+            layer["attn"],
+            common.rmsnorm(h, layer["ln1"]["scale"], cfg.norm_eps),
+            cfg, rules=rules, mesh=mesh,
+            mode="decode" if decode else "causal",
+            cache=cache, cache_index=cache_index,
+            use_flash_decode=flags.use_flash_decode)
+        h = h + a
+        xq = common.rmsnorm(h, layer["lnx"]["scale"], cfg.norm_eps)
+        if decode:
+            # cross-attn against the precomputed enc K/V
+            q = (xq @ layer["xattn"]["wq"]).reshape(
+                xq.shape[0], xq.shape[1], cfg.n_heads, cfg.head_dim)
+            o = attention.attend_decode(q, xkv_l["k"], xkv_l["v"],
+                                        xkv_l["k"].shape[1])
+            x = (o.astype(h.dtype) @ layer["xattn"]["wo"])
+        else:
+            x, _ = attention.apply(layer["xattn"], xq, cfg, rules=rules,
+                                   mesh=mesh, mode="cross",
+                                   kv_source=enc_out)
+        h = h + x
+        h = h + mlp.apply(layer["ffn"],
+                          common.rmsnorm(h, layer["ln2"]["scale"],
+                                         cfg.norm_eps),
+                          cfg, rules=rules, mesh=mesh)
+        return h, nk
+
+    if decode:
+        def scan_body(c, xs):
+            h2, nk = body(c, xs)
+            return h2, nk
+        h, new_caches = jax.lax.scan(scan_body, h,
+                                     (params["dec"], caches, xkv))
+    else:
+        fn = (jax.checkpoint(lambda c, l: body(c, (l,)))
+              if flags.remat != "none" else (lambda c, l: body(c, (l,))))
+        h, new_caches = jax.lax.scan(fn, h, params["dec"])
+        new_caches = None
+
+    h = common.rmsnorm(h, params["final_norm"]["scale"], cfg.norm_eps)
+    logits = (h @ params["lm_head"]).astype(jnp.dtype(flags.logits_dtype))
+    logits = constrain(logits, ("batch", None, "vocab"), rules, mesh)
+    return logits, new_caches
+
+
+def forward_train(params, frames, tokens, cfg, *, rules=None, mesh=None,
+                  flags: RunFlags = RunFlags()):
+    enc_out = encode(params, frames, cfg, rules=rules, mesh=mesh, flags=flags)
+    logits, _ = decode_forward(params, tokens, enc_out, cfg, rules=rules,
+                               mesh=mesh, flags=flags)
+    return logits, jnp.zeros((), Accum), None

@@ -1,0 +1,459 @@
+"""Post-optimization HLO text analysis: FLOPs, memory traffic, and
+collective bytes — with while-loop (scan) trip-count weighting, which
+XLA's own cost_analysis does NOT do (it counts loop bodies once).
+
+The parser builds a computation call graph, propagates execution weights
+(entry=1; while bodies x trip count, parsed from the loop-condition's
+comparison constant), then accumulates per-category costs:
+
+  flops            2*M*N*K for every dot (descending into fusions)
+  memory bytes     operand+output bytes of top-level instructions in
+                   non-fused computations (fusion internals are VMEM/register
+                   traffic, not HBM)
+  collective bytes per-op operand/output bytes for all-reduce, all-gather,
+                   reduce-scatter, all-to-all, collective-permute
+
+This is a static model of the compiled artifact — the only profile available
+without hardware — and is validated against analytic 6ND model FLOPs in
+tests/test_roofline.py.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1, "s4": 1, "u4": 1,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_INSTR_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(.+)$")
+_CALLED_RE = re.compile(
+    r"(?:calls|to_apply|condition|body|branch_computations)=\{?%?([\w.\-]+(?:,\s*%?[\w.\-]+)*)\}?")
+
+COLLECTIVE_OPS = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                  "collective-permute")
+
+
+def shape_bytes(shape_str: str) -> int:
+    """Total bytes of possibly-tuple shape string like 'f32[8,64]{1,0}'."""
+    total = 0
+    for m in _SHAPE_RE.finditer(shape_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+@dataclasses.dataclass
+class Instr:
+    name: str
+    opcode: str
+    out_bytes: int
+    operand_bytes: int
+    operand_list: List[int]
+    flops: float
+    called: List[str]
+    text: str
+    eff_out: float = 0.0          # effective bytes through movement chains
+    eff_operands: float = 0.0
+    inplace: bool = False         # fusion rooted in dynamic-update-slice
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    instrs: List[Instr]
+    is_fused: bool = False       # called via a fusion instruction
+    weight: float = 0.0
+
+
+_OPERAND_NAME_RE = re.compile(r"%([\w.\-]+)")
+
+
+def _dot_flops(text: str, symtab: Dict[str, str]) -> float:
+    """FLOPs of a dot: 2 * prod(out_dims) * contracted_dims. Operand shapes
+    are resolved through the computation's symbol table because
+    post-optimization HLO does not inline operand types."""
+    m = _SHAPE_RE.search(text)
+    if not m:
+        return 0.0
+    out_elems = 1
+    for d in m.group(2).split(","):
+        if d:
+            out_elems *= int(d)
+    cd_m = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", text)
+    # lhs operand: first %name inside the operand parens
+    par = text.find("(")
+    lhs_dims = None
+    if par >= 0:
+        nm = _OPERAND_NAME_RE.search(text[par:])
+        if nm and nm.group(1) in symtab:
+            sm = _SHAPE_RE.search(symtab[nm.group(1)])
+            if sm:
+                lhs_dims = [int(d) for d in sm.group(2).split(",") if d]
+    if lhs_dims is None or not cd_m:
+        return 2.0 * out_elems  # conservative fallback
+    contracted = 1
+    for i in cd_m.group(1).split(","):
+        if i:
+            contracted *= lhs_dims[int(i)]
+    return 2.0 * out_elems * contracted
+
+
+def _operand_list(text: str, symtab: Dict[str, str]) -> List[int]:
+    """Byte sizes of each operand, resolved via the symbol table."""
+    par = text.find("(")
+    if par < 0:
+        return []
+    depth = 0
+    end = par
+    for i, ch in enumerate(text[par:], par):
+        if ch == "(":
+            depth += 1
+        elif ch == ")":
+            depth -= 1
+            if depth == 0:
+                end = i
+                break
+    inner = text[par + 1:end]
+    out = []
+    for nm in _OPERAND_NAME_RE.finditer(inner):
+        shp = symtab.get(nm.group(1))
+        if shp is not None:
+            out.append(shape_bytes(shp))
+    if not out:
+        out = [shape_bytes(inner)] if "[" in inner else []
+    return out
+
+
+def parse_hlo(text: str) -> Dict[str, Computation]:
+    comps: Dict[str, Computation] = {}
+    cur: Optional[Computation] = None
+    symtab: Dict[str, str] = {}
+    pending = []  # (computation, name, opcode, rest) for 2nd pass
+    entry: Optional[str] = None
+    for line in text.splitlines():
+        stripped = line.strip()
+        if not stripped or stripped.startswith("//"):
+            continue
+        # computation header: `%name (args...) -> type {`  or `ENTRY %name ...{`
+        if stripped.endswith("{") and ("->" in stripped
+                                       or stripped.startswith("ENTRY")):
+            m = re.match(r"(?:ENTRY\s+)?%?([\w.\-]+)\s*\(", stripped)
+            if m:
+                cur = Computation(m.group(1), [])
+                comps[cur.name] = cur
+                symtab = {}
+                if stripped.startswith("ENTRY"):
+                    entry = cur.name
+            continue
+        if stripped.startswith("}"):
+            cur = None
+            continue
+        if cur is None:
+            continue
+        m = _INSTR_RE.match(stripped)
+        if not m:
+            continue
+        name, rest = m.group(1), m.group(2)
+        opm = re.search(r"\}?\s*([\w\-]+)\(", rest)
+        opcode = opm.group(1) if opm else ""
+        called = []
+        cm = _CALLED_RE.search(rest)
+        if cm:
+            called = [c.strip().lstrip("%") for c in cm.group(1).split(",")]
+        out_shape = rest.split(" ")[0]
+        out_b = shape_bytes(out_shape)
+        symtab[name] = out_shape
+        fl = _dot_flops(rest, symtab) if opcode == "dot" else 0.0
+        ops = _operand_list(rest, symtab)
+        cur.instrs.append(Instr(name, opcode, out_b, sum(ops), ops, fl,
+                                called, rest))
+    if entry:
+        comps["__entry__"] = comps[entry]
+    return comps
+
+
+def _trip_count(cond: Computation) -> int:
+    """Loop-condition heuristic: largest integer constant compared against
+    the induction variable."""
+    best = 1
+    for ins in cond.instrs:
+        if ins.opcode == "constant" or "constant(" in ins.text:
+            for m in re.finditer(r"constant\((\d+)\)", ins.text):
+                best = max(best, int(m.group(1)))
+    return best
+
+
+def propagate_weights(comps: Dict[str, Computation]) -> None:
+    entry = comps.get("__entry__")
+    if entry is None:
+        return
+    for c in comps.values():
+        c.weight = 0.0
+    entry.weight = 1.0
+    # topological-ish: repeat passes until stable (call graph is a DAG)
+    for _ in range(64):
+        changed = False
+        for c in list(comps.values()):
+            if c.weight == 0.0 or c.name == "__entry__":
+                pass
+            w = c.weight
+            if w == 0:
+                continue
+            for ins in c.instrs:
+                if not ins.called:
+                    continue
+                if ins.opcode == "while":
+                    body, cond = None, None
+                    bm = re.search(r"body=%?([\w.\-]+)", ins.text)
+                    cm = re.search(r"condition=%?([\w.\-]+)", ins.text)
+                    if bm and bm.group(1) in comps:
+                        body = comps[bm.group(1)]
+                    if cm and cm.group(1) in comps:
+                        cond = comps[cm.group(1)]
+                    trips = _trip_count(cond) if cond else 1
+                    if body is not None:
+                        nw = w * trips
+                        if body.weight < nw:
+                            body.weight = nw
+                            changed = True
+                    if cond is not None and cond.weight < w * (trips + 1):
+                        cond.weight = w * (trips + 1)
+                        changed = True
+                else:
+                    if ins.opcode == "fusion":
+                        for cn in ins.called:
+                            if cn in comps:
+                                comps[cn].is_fused = True
+                    for cn in ins.called:
+                        if cn in comps and comps[cn].weight < w:
+                            comps[cn].weight = w
+                            changed = True
+        if not changed:
+            break
+
+
+@dataclasses.dataclass
+class HloCosts:
+    flops: float                 # per-device dot FLOPs (trip-weighted)
+    memory_bytes: float          # per-device HBM traffic model
+    collective_bytes: float      # per-device wire bytes
+    collective_counts: Dict[str, int]
+    collective_bytes_by_op: Dict[str, float]
+
+
+_ZERO_TRAFFIC = ("parameter", "constant", "tuple", "get-tuple-element",
+                 "while", "conditional", "call", "bitcast", "reshape",
+                 "iota", "after-all", "partition-id", "replica-id",
+                 "bitcast-convert", "get-dimension-size", "rng-get-and-update-state")
+
+# Pure data-movement ops: CPU lowering materializes these (hoisted converts
+# of bf16 caches to f32, layout copies feeding dots, slice extraction from
+# scan carries). On the TPU target they fold into the consuming MXU read,
+# so they carry *effective bytes* forward instead of generating traffic.
+_MOVEMENT = ("convert", "copy", "bitcast", "reshape", "transpose",
+             "dynamic-slice", "slice", "broadcast")
+
+_MOVEMENT_ONLY_FUSION = set(_MOVEMENT) | set(_ZERO_TRAFFIC)
+
+
+def _fusion_is_movement(comp: "Computation") -> bool:
+    return all(i.opcode in _MOVEMENT_ONLY_FUSION for i in comp.instrs)
+
+
+def _make_tile_test(vmem_tile):
+    """Match streaming-attention VMEM-resident tiles even after XLA flattens
+    the (G, q_chunk) dims: score tiles (.., m*q_chunk, kv_chunk) in both
+    orientations, and fp32 flash accumulators (.., m*q_chunk, head_dim) that
+    a Pallas kernel keeps on-chip across the KV loop."""
+    qc, kc = vmem_tile[:2]
+    hd = vmem_tile[2] if len(vmem_tile) > 2 else None
+
+    def test(shape_str: str) -> bool:
+        m = _SHAPE_RE.match(shape_str)
+        if not m or m.group(1) not in ("f32", "pred", "bf16"):
+            return False
+        dims = [int(d) for d in m.group(2).split(",") if d]
+        if len(dims) < 2:
+            return False
+        a, b = dims[-2], dims[-1]
+        fwd = (b == kc and a >= qc and a % qc == 0)
+        bwd = (a == kc and b >= qc and b % qc == 0)  # transposed (backward)
+        acc = (m.group(1) == "f32" and len(dims) >= 4 and hd is not None
+               and b == hd and a >= qc and a % qc == 0)
+        return fwd or bwd or acc
+
+    return test
+
+
+def resolve_effective(comps: Dict[str, Computation],
+                      tile_test=None) -> None:
+    dus_comps = {c.name for c in comps.values()
+                 if any(i.opcode == "dynamic-update-slice" for i in c.instrs)}
+    # scan-carry merge signature: select between the old stacked carry and a
+    # fresh slice (XLA-CPU's non-aliased stacking; on TPU the carry update
+    # is donated/in-place, so it generates no stack-sized traffic)
+    select_merge = {c.name for c in comps.values()
+                    if any(i.opcode == "select" for i in c.instrs)
+                    and any(i.opcode in ("dynamic-slice",
+                                         "dynamic-update-slice")
+                            for i in c.instrs)}
+    return _resolve_effective(comps, tile_test, dus_comps, select_merge)
+
+
+def _resolve_effective(comps, tile_test, dus_comps,
+                       select_merge=frozenset()) -> None:
+    """Effective-bytes propagation: each value's traffic contribution is the
+    smallest materialization along its movement chain (e.g. a bf16 cache
+    sliced+converted to f32 still costs its bf16 slice), and streaming-
+    attention score tiles cost 0 (VMEM-resident in the Pallas kernel on the
+    TPU target)."""
+    for c in comps.values():
+        eff: Dict[str, float] = {}
+        symshape: Dict[str, str] = {}
+        for ins in c.instrs:
+            out_shape = ins.text.split(" ")[0]
+            symshape[ins.name] = out_shape
+            par = ins.text.find("(")
+            op_names = ([m.group(1) for m in
+                         _OPERAND_NAME_RE.finditer(ins.text[par:])]
+                        if par >= 0 else [])
+            op_effs = [eff.get(n, None) for n in op_names]
+            op_effs = [ins_bytes for ins_bytes in op_effs
+                       if ins_bytes is not None]
+            if tile_test is not None and tile_test(out_shape):
+                # streaming-attention score tile: VMEM-resident on TPU
+                eff[ins.name] = 0.0
+                ins.eff_out = 0.0
+                ins.eff_operands = float(sum(
+                    min(eff.get(n, 0.0), ins.out_bytes) for n in op_names))
+                continue
+            if ins.opcode in _MOVEMENT:
+                src = min(op_effs) if op_effs else ins.out_bytes
+                if ins.opcode in ("dynamic-slice", "slice"):
+                    e = min(ins.out_bytes, src)
+                elif ins.opcode == "broadcast":
+                    e = min(op_effs) if op_effs else ins.out_bytes
+                else:
+                    e = min(ins.out_bytes, src) if op_effs else ins.out_bytes
+                eff[ins.name] = e
+                ins.eff_out = 0.0        # movement itself is free
+                ins.eff_operands = 0.0
+            elif (ins.opcode == "fusion" and ins.called and
+                  all(cn in comps and _fusion_is_movement(comps[cn])
+                      for cn in ins.called)):
+                e = min([ins.out_bytes] + op_effs) if op_effs else \
+                    ins.out_bytes
+                eff[ins.name] = e
+                ins.eff_out = 0.0
+                ins.eff_operands = 0.0
+            else:
+                if (ins.opcode == "fusion" and ins.operand_list
+                        and max(ins.operand_list) * 2 >= ins.out_bytes
+                        and ins.out_bytes >= max(ins.operand_list) // 2
+                        and any(cn in select_merge for cn in ins.called)):
+                    # in-place scan-carry merge: aliased on TPU; real reads
+                    # are charged at the consuming dots
+                    eff[ins.name] = ins.out_bytes
+                    ins.eff_out = 0.0
+                    ins.eff_operands = 0.0
+                    continue
+                if (ins.opcode == "fusion"
+                        and any(cn in dus_comps for cn in ins.called)):
+                    # in-place update fusion (cache/accumulator/grad-stack
+                    # write): stack-sized operands are aliased or sliced on
+                    # TPU; charge only the update-sized traffic
+                    ins.inplace = True
+                    small = [eff.get(n, 0.0) for n in op_names]
+                    upd = sum(b for b in small if b < ins.out_bytes / 2)
+                    eff[ins.name] = ins.out_bytes
+                    ins.eff_out = float(min(upd, ins.out_bytes))
+                    ins.eff_operands = float(min(upd, ins.out_bytes))
+                    continue
+                eff[ins.name] = ins.out_bytes
+                ins.eff_out = float(ins.out_bytes)
+                # operand reads at their effective (movement-resolved) size;
+                # kLoop fusions read operands through an index map bounded by
+                # the output index space — cap each at the output size so a
+                # fusion internally slicing a scan carry doesn't charge the
+                # whole stacked buffer
+                resolved = [eff.get(n, 0.0) for n in op_names]
+                if ins.opcode == "fusion":
+                    resolved = [min(r, ins.out_bytes) for r in resolved]
+                ins.eff_operands = float(sum(resolved))
+
+
+def _mem_bytes(ins: Instr) -> float:
+    """Per-instruction HBM traffic: effective output write + effective
+    operand reads, with in-place update-slice aliasing corrected."""
+    op = ins.opcode
+    if op in _ZERO_TRAFFIC or op in COLLECTIVE_OPS or op in _MOVEMENT:
+        return 0.0
+    if op == "dynamic-update-slice":
+        upd = ins.operand_list[1] if len(ins.operand_list) > 1 else \
+            ins.out_bytes
+        return 2.0 * upd
+    return ins.eff_out + ins.eff_operands
+
+
+def analyze(text: str, vmem_tile: Optional[Tuple[int, int]] = None
+            ) -> HloCosts:
+    """vmem_tile: (q_chunk, kv_chunk) — instructions whose output trailing
+    dims match the streaming-attention tile are VMEM-resident on the TPU
+    target (the Pallas flash kernel keeps them on-chip); exclude them from
+    the HBM-traffic model. The dry-run adds the kernel's true HBM traffic
+    (streamed K/V per q-chunk) back analytically."""
+    comps = parse_hlo(text)
+    propagate_weights(comps)
+    tile_test = _make_tile_test(vmem_tile) if vmem_tile else None
+    resolve_effective(comps, tile_test)
+    flops = 0.0
+    mem = 0.0
+    coll = 0.0
+    counts: Dict[str, int] = {}
+    coll_by: Dict[str, float] = {}
+    comps.pop("__entry__", None)
+    for c in comps.values():
+        w = c.weight
+        if w <= 0:
+            continue
+        for ins in c.instrs:
+            flops += w * ins.flops
+            if not c.is_fused:
+                mem += w * _mem_bytes(ins)
+            if ins.opcode in COLLECTIVE_OPS:
+                b = max(ins.out_bytes, ins.operand_bytes)
+                coll += w * b
+                counts[ins.opcode] = counts.get(ins.opcode, 0) + int(w)
+                coll_by[ins.opcode] = coll_by.get(ins.opcode, 0.0) + w * b
+    return HloCosts(flops, mem, coll, counts, coll_by)
+
+
+def top_traffic(text: str, n: int = 25, vmem_tile=None):
+    """Diagnostic: heaviest (weight x traffic) instructions."""
+    comps = parse_hlo(text)
+    propagate_weights(comps)
+    tile_test = _make_tile_test(vmem_tile) if vmem_tile else None
+    resolve_effective(comps, tile_test)
+    comps.pop("__entry__", None)
+    rows = []
+    for c in comps.values():
+        if c.weight <= 0 or c.is_fused:
+            continue
+        for ins in c.instrs:
+            t = c.weight * _mem_bytes(ins)
+            if t > 0:
+                rows.append((t, c.weight, c.name, ins.opcode,
+                             ins.text[:110]))
+    rows.sort(reverse=True)
+    return rows[:n]

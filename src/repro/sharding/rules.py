@@ -1,0 +1,99 @@
+"""Logical-axis sharding rules: map named logical axes to mesh axes with
+divisibility-aware fallback (replicate when a dim doesn't divide).
+
+Parallelism layout on the production mesh (pod, data, model):
+  batch  -> ("pod", "data")   pure DP across pods, DP within pod
+  fsdp   -> ("data",)         ZeRO-3 param/optimizer sharding (within pod)
+  tp     -> "model"           heads / ffn / experts / vocab
+  seq    -> "data"            context parallelism for long-KV decode
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+
+@dataclasses.dataclass(frozen=True)
+class Rules:
+    batch: Tuple[str, ...] = ()
+    fsdp: Tuple[str, ...] = ()
+    tp: Optional[str] = None
+    seq: Optional[str] = None
+
+    def mesh_axes(self):
+        out = set(self.batch) | set(self.fsdp)
+        if self.tp:
+            out.add(self.tp)
+        if self.seq:
+            out.add(self.seq)
+        return out
+
+
+# logical axis vocabulary
+TP_AXES = {"heads", "kv_heads", "ff", "vocab", "experts", "inner"}
+BATCH_AXES = {"batch"}
+SEQ_AXES = {"seq"}
+FSDP_AXES = {"fsdp"}  # the designated big dim of each weight
+
+
+def _prod(axes: Tuple[str, ...], mesh_shape) -> int:
+    n = 1
+    for a in axes:
+        n *= mesh_shape.get(a, 1)
+    return n
+
+
+def spec_for(logical: Tuple[Optional[str], ...], dims: Tuple[int, ...],
+             rules: Rules, mesh_shape) -> P:
+    """PartitionSpec for one array. Any logical axis whose mesh assignment
+    doesn't evenly divide the dim is replicated instead (recorded by the
+    caller if it cares)."""
+    assert len(logical) == len(dims), (logical, dims)
+    parts = []
+    for name, d in zip(logical, dims):
+        if name is None:
+            parts.append(None)
+        elif name in BATCH_AXES:
+            ax = tuple(a for a in rules.batch if mesh_shape.get(a, 1) > 1)
+            parts.append(ax if ax and d % _prod(ax, mesh_shape) == 0 else None)
+        elif name in FSDP_AXES:
+            ax = tuple(a for a in rules.fsdp if mesh_shape.get(a, 1) > 1)
+            parts.append(ax if ax and d % _prod(ax, mesh_shape) == 0 else None)
+        elif name in TP_AXES:
+            ax = rules.tp
+            ok = ax and mesh_shape.get(ax, 1) > 1 and d % mesh_shape[ax] == 0
+            parts.append(ax if ok else None)
+        elif name in SEQ_AXES:
+            ax = rules.seq
+            ok = ax and mesh_shape.get(ax, 1) > 1 and d % mesh_shape[ax] == 0
+            parts.append(ax if ok else None)
+        else:
+            raise ValueError(f"unknown logical axis {name}")
+    # PartitionSpec entries that are empty tuples mean replicated
+    parts = [None if p == () else p for p in parts]
+    return P(*parts)
+
+
+def constrain(x, logical: Tuple[Optional[str], ...], rules: Rules, mesh):
+    """with_sharding_constraint if a mesh is active; no-op for 1-device runs."""
+    if mesh is None or rules is None:
+        return x
+    spec = spec_for(logical, x.shape, rules, dict(zip(mesh.axis_names,
+                                                      mesh.devices.shape)))
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def tree_specs(logical_tree, shape_tree, rules: Rules, mesh) -> object:
+    """Map a pytree of logical tuples + matching ShapeDtypeStructs to
+    NamedShardings."""
+    mesh_shape = dict(zip(mesh.axis_names, mesh.devices.shape))
+
+    def one(logical, shp):
+        return NamedSharding(mesh, spec_for(logical, shp.shape, rules,
+                                            mesh_shape))
+    return jax.tree.map(one, logical_tree, shape_tree,
+                        is_leaf=lambda x: isinstance(x, tuple) and all(
+                            isinstance(e, (str, type(None))) for e in x))

@@ -1,0 +1,34 @@
+"""Run a check script in a subprocess with a forced host device count.
+
+Multi-device CPU tests must set XLA_FLAGS before jax initializes; doing so
+in-process would leak 512 fake devices into every other test (the system
+requires smoke tests and benches to see exactly 1 device). Subprocesses keep
+the device-count containment airtight.
+"""
+from __future__ import annotations
+
+import os
+import pathlib
+import subprocess
+import sys
+
+REPO = pathlib.Path(__file__).resolve().parent.parent
+CHECKS = pathlib.Path(__file__).resolve().parent / "checks"
+
+
+def run_check(script: str, ndev: int, *args: str, timeout: int = 900) -> str:
+    """Execute tests/checks/<script> with `ndev` fake host devices."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (f"--xla_force_host_platform_device_count={ndev} "
+                        + env.get("XLA_FLAGS", "").replace(
+                            env.get("_REPRO_DEVFLAG", "\x00"), ""))
+    env["PYTHONPATH"] = f"{REPO / 'src'}:{env.get('PYTHONPATH', '')}"
+    proc = subprocess.run(
+        [sys.executable, str(CHECKS / script), *map(str, args)],
+        capture_output=True, text=True, timeout=timeout, env=env)
+    if proc.returncode != 0:
+        raise AssertionError(
+            f"{script} {args} failed (rc={proc.returncode})\n"
+            f"--- stdout ---\n{proc.stdout[-4000:]}\n"
+            f"--- stderr ---\n{proc.stderr[-4000:]}")
+    return proc.stdout

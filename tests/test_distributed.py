@@ -1,0 +1,37 @@
+"""Multi-device integration: manual mcoll train step vs pjit reference,
+MoE expert parallelism vs local oracle, and a small-mesh sharded train step
+(subprocess-contained device counts)."""
+import pytest
+
+from subproc import run_check
+
+
+@pytest.mark.parametrize("n,p", [(2, 2), (4, 2)])
+def test_manual_mcoll_train_step(n, p):
+    out = run_check("manual_step_check.py", n * p, n, p)
+    assert "OK" in out
+
+
+@pytest.mark.parametrize("dp,tp", [(1, 2), (2, 2), (1, 4), (2, 4)])
+def test_moe_expert_parallel(dp, tp):
+    out = run_check("moe_ep_check.py", dp * tp, dp, tp)
+    assert "OK" in out
+
+
+def test_sharded_train_step_small_mesh():
+    out = run_check("sharded_train_check.py", 8)
+    assert "OK" in out
+
+
+@pytest.mark.slow
+def test_dryrun_pipeline_small_mesh():
+    """build_cell -> lower -> compile -> roofline on an 8-device mesh for
+    one arch per family and every shape kind."""
+    out = run_check("dryrun_smoke_check.py", 8, timeout=1200)
+    assert "dryrun_smoke_check OK" in out
+
+
+@pytest.mark.parametrize("n,p", [(2, 2), (4, 2)])
+def test_compressed_allreduce_int8_wire(n, p):
+    out = run_check("compressed_allreduce_check.py", n * p, n, p)
+    assert "OK" in out

@@ -1,0 +1,159 @@
+"""Multi-device correctness for the PiP-MColl collective library, plus
+property-based tests on the pure scheduling/cost logic.
+
+Device-parallel checks run in subprocesses (see tests/subproc.py) so the
+rest of the suite keeps seeing exactly 1 CPU device.
+"""
+import math
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import costmodel
+from repro.core.mcoll import mo_rounds, _mo_perm
+from repro.core.topology import Topology
+
+from subproc import run_check
+
+
+@pytest.mark.parametrize("n,p", [(4, 3), (3, 4), (2, 6), (5, 2), (8, 2),
+                                 (16, 1), (1, 12), (7, 2)])
+def test_mcoll_all_collectives(n, p):
+    out = run_check("mcoll_check.py", n * p, n, p)
+    assert "checks OK" in out
+
+
+# ---------------------------------------------------------------------------
+# property tests: multi-object Bruck schedule invariants
+# ---------------------------------------------------------------------------
+
+
+@given(n=st.integers(2, 4096), radix=st.integers(2, 64))
+@settings(max_examples=300, deadline=None)
+def test_mo_rounds_cover_exactly(n, radix):
+    """The schedule covers exactly N-1 fresh node-blocks, in at most
+    ceil(log_B N) + 1 rounds, with strictly growing steps."""
+    steps = mo_rounds(n, radix)
+    s, covered = 1, 0
+    for S in steps:
+        assert S == s
+        fresh = min((radix - 1) * S, n - s)
+        covered += fresh
+        s += fresh
+    assert covered == n - 1
+    assert len(steps) <= math.ceil(math.log(n, radix)) + 1
+
+
+@given(n=st.integers(2, 64), p=st.integers(1, 32), step=st.integers(1, 64))
+@settings(max_examples=200, deadline=None)
+def test_mo_perm_is_valid_permutation(n, p, step):
+    """Each round's routing is a bijection on the devices it touches, and
+    every lane's source node sits at +offset, dest at -offset."""
+    topo = Topology(n, p)
+    lanes = min(p, 8)
+    pairs = _mo_perm(topo, step % n if step % n else 1, n_lanes=lanes)
+    srcs = [a for a, _ in pairs]
+    dsts = [b for _, b in pairs]
+    assert len(set(srcs)) == len(srcs)
+    assert len(set(dsts)) == len(dsts)
+    for a, b in pairs:
+        na, la = divmod(a, p)
+        nb, lb = divmod(b, p)
+        assert la == lb  # lanes never cross
+        assert nb == (na - (la + 1) * (step % n if step % n else 1)) % n
+
+
+@given(n=st.integers(2, 256), p=st.integers(1, 32),
+       m=st.sampled_from([16, 64, 256, 4096, 1 << 16, 1 << 20]))
+@settings(max_examples=200, deadline=None)
+def test_allgather_volume_conservation(n, p, m):
+    """All algorithms move the same minimum aggregate payload: each node must
+    import (N-1)*P*m bytes. Per-NIC totals must be >= that and the
+    multi-object total must equal the single-leader total (the paper's
+    design trades rounds, not volume)."""
+    topo = Topology(n, p)
+    net = costmodel.paper_cluster_pip()
+    lower = (n - 1) * p * m
+    mo = costmodel.allgather_cost("pip_mcoll", topo, m, net)
+    sl = costmodel.allgather_cost("single_leader", topo, m, net)
+    assert mo.inter_bytes_per_nic >= lower
+    assert sl.inter_bytes_per_nic >= lower
+    # SPMD padding in multi-lane remainder rounds costs at most 2x; exact
+    # when N is a power of the radix.
+    assert mo.inter_bytes_per_nic <= 2 * sl.inter_bytes_per_nic
+    b = p + 1
+    q = n
+    while q % b == 0:
+        q //= b
+    if q == 1:
+        assert mo.inter_bytes_per_nic == pytest.approx(lower)
+    # fewer (or equal) rounds than the single-object hierarchy
+    assert mo.inter_rounds <= sl.inter_rounds
+
+
+@given(n=st.integers(2, 256), p=st.integers(2, 32))
+@settings(max_examples=200, deadline=None)
+def test_small_message_latency_win(n, p):
+    """In the latency regime (64 B), multi-object must beat the flat
+    single-object algorithms the MPI libraries use (the paper's actual
+    comparison). Single-leader hierarchy is harder to beat at degenerate
+    radices — that's the autotuner's job, not a universal invariant."""
+    topo = Topology(n, p)
+    net = costmodel.paper_cluster_pip()
+    m = 64
+    mo = costmodel.allgather_cost("pip_mcoll", topo, m, net)
+    rd = costmodel.allgather_cost("recursive_doubling", topo, m, net)
+    if mo.inter_rounds + 2 < rd.inter_rounds:  # the regime the paper targets
+        assert mo.time < rd.time
+    # and with the best radix it at least matches the single-object hierarchy
+    # (up to a couple of intra-node hops on degenerate tiny topologies)
+    sl = costmodel.allgather_cost("single_leader", topo, m, net)
+    best = min(costmodel.allgather_cost("pip_mcoll", topo, m, net, radix=b).time
+               for b in range(2, p + 2))
+    assert best <= sl.time * 1.05 + 4 * net.alpha_intra
+
+
+def test_cost_model_brackets_paper_headline():
+    """Paper: 4.6x over the best of OpenMPI/MVAPICH2/IntelMPI for 64 B
+    allgather on 128 nodes x 18 ppn. We don't know which internal algorithm
+    the measured libraries picked at 2304 ranks, so the model must BRACKET
+    the measured claim: flat algorithms (default tuning tables at this size)
+    put the baseline ~9x behind; a best-case single-leader hierarchical
+    baseline puts it ~1.8x behind. 4.6x must fall inside that bracket."""
+    topo = Topology(128, 18)
+    pip = costmodel.allgather_cost("pip_mcoll", topo, 64,
+                                   costmodel.paper_cluster_pip()).time
+    lib_nets = (costmodel.paper_cluster_openmpi(),
+                costmodel.paper_cluster_cma(),
+                costmodel.paper_cluster_posix_shmem())
+    flat = min(costmodel.allgather_cost("recursive_doubling", topo, 64, n).time
+               for n in lib_nets)
+    hier = min(costmodel.allgather_cost("single_leader", topo, 64, n).time
+               for n in lib_nets)
+    lo, hi = hier / pip, flat / pip
+    assert lo <= 4.6 <= hi, (lo, hi)
+    assert lo > 1.0, "PiP-MColl must beat even the best-case baseline"
+
+
+def test_scatter_consistent_win():
+    """Paper Fig. 1: PiP-MColl consistently outperforms for small scatter."""
+    topo = Topology(128, 18)
+    for m in (16, 64, 256, 512):
+        pip = costmodel.scatter_cost("pip_mcoll", topo, m,
+                                     costmodel.paper_cluster_pip()).time
+        other = min(costmodel.scatter_cost("binomial", topo, m, net).time
+                    for net in (costmodel.paper_cluster_openmpi(),
+                                costmodel.paper_cluster_cma(),
+                                costmodel.paper_cluster_posix_shmem()))
+        assert pip < other
+
+
+def test_autotune_prefers_multiobject_small_ring_large():
+    topo = Topology(16, 16)
+    net = costmodel.tpu_v5e_pod()
+    small, _ = __import__("repro.core.autotune", fromlist=["choose"]).choose(
+        "allgather", topo, 256, net)
+    large, _ = __import__("repro.core.autotune", fromlist=["choose"]).choose(
+        "allgather", topo, 1 << 24, net)
+    assert small == "pip_mcoll"
+    assert large in ("xla", "ring")

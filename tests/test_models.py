@@ -1,0 +1,174 @@
+"""Per-architecture smoke tests (reduced configs, 1 CPU device): forward +
+train-step + decode shape/NaN checks, plus model-level semantics
+(streaming==full attention inside the model, M-RoPE, enc-dec cache paths)."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, SHAPES, get_config, reduced_config, \
+    shape_applicable
+from repro.layers import common
+from repro.models import decoder, encdec
+from repro.models.decoder import RunFlags
+from repro.optim import adamw
+from repro.train.step import TrainConfig, train_step
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _batch_for(cfg, B, T, key):
+    ks = jax.random.split(key, 3)
+    batch = {"tokens": jax.random.randint(ks[0], (B, T), 0, cfg.vocab),
+             "labels": jax.random.randint(ks[1], (B, T), 0, cfg.vocab)}
+    if cfg.family == "encdec":
+        batch["frames"] = jax.random.normal(
+            ks[2], (B, T, cfg.d_model)).astype(jnp.bfloat16) * 0.02
+    if cfg.input_mode == "vl":
+        batch["embeds"] = jax.random.normal(
+            ks[2], (B, T // 4, cfg.d_model)).astype(jnp.bfloat16) * 0.02
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_arch_smoke_forward_and_train_step(arch):
+    cfg = reduced_config(arch)
+    B, T = 2, 32
+    api = encdec if cfg.family == "encdec" else decoder
+    params = api.init(KEY, cfg)
+    batch = _batch_for(cfg, B, T, KEY)
+    ocfg = adamw.AdamWConfig(lr=1e-3, warmup_steps=1, total_steps=10)
+    tcfg = TrainConfig(optimizer=ocfg, flags=RunFlags(remat="none"))
+    opt = adamw.init(params, ocfg)
+    new_params, new_opt, metrics = train_step(params, opt, batch, cfg, tcfg)
+    assert np.isfinite(float(metrics["loss"])), arch
+    assert int(new_opt["step"]) == 1
+    # params actually changed
+    changed = jax.tree.map(
+        lambda a, b: float(jnp.abs(a.astype(jnp.float32)
+                                   - b.astype(jnp.float32)).max()),
+        params, new_params)
+    assert max(jax.tree.leaves(changed)) > 0, arch
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_arch_smoke_decode(arch):
+    cfg = reduced_config(arch)
+    B, T, MAX = 2, 8, 24
+    if cfg.family == "encdec":
+        params = encdec.init(KEY, cfg)
+        frames = jax.random.normal(KEY, (B, T, cfg.d_model),
+                                   jnp.float32).astype(jnp.bfloat16)
+        enc_out = encdec.encode(params, frames, cfg)
+        xkv = encdec.cross_cache(params, enc_out, cfg)
+        caches = encdec.init_cache(cfg, B, MAX)
+        tok = jnp.ones((B, 1), jnp.int32)
+        for step in range(2):
+            logits, caches = encdec.decode_forward(
+                params, tok, None, cfg, caches=caches, cache_index=step,
+                xkv=xkv)
+            assert logits.shape[0] == B and logits.shape[1] == 1
+            assert np.isfinite(np.asarray(logits, np.float32)).all()
+        return
+    params = decoder.init(KEY, cfg)
+    caches = decoder.init_cache(cfg, B, MAX)
+    tokens = jax.random.randint(KEY, (B, T), 0, cfg.vocab)
+    logits, _, caches = decoder.forward(params, tokens, cfg, caches=caches)
+    tok = logits[:, -1:].argmax(-1).astype(jnp.int32)
+    for step in range(T, T + 2):
+        logits, _, caches = decoder.forward(params, tok, cfg, caches=caches,
+                                            cache_index=step)
+        assert logits.shape[:2] == (B, 1)
+        assert np.isfinite(np.asarray(logits, np.float32)).all(), arch
+        tok = logits.argmax(-1).astype(jnp.int32)
+
+
+def test_decode_matches_full_forward():
+    """Greedy prefill+decode equals the full-sequence forward argmax at each
+    position (KV-cache correctness end to end)."""
+    cfg = reduced_config("smollm-360m")
+    params = decoder.init(KEY, cfg)
+    B, T = 1, 12
+    tokens = jax.random.randint(KEY, (B, T), 0, cfg.vocab)
+    caches = decoder.init_cache(cfg, B, T + 4)
+    pre_logits, _, caches = decoder.forward(params, tokens, cfg,
+                                            caches=caches)
+    full_logits, _, _ = decoder.forward(params, tokens, cfg)
+    np.testing.assert_allclose(np.asarray(pre_logits, np.float32),
+                               np.asarray(full_logits, np.float32),
+                               rtol=2e-2, atol=2e-2)
+    # decode one more token and compare against extended full forward
+    nxt = full_logits[:, -1:].argmax(-1).astype(jnp.int32)
+    dec_logits, _, _ = decoder.forward(params, nxt, cfg, caches=caches,
+                                       cache_index=T)
+    ext = jnp.concatenate([tokens, nxt], axis=1)
+    full2, _, _ = decoder.forward(params, ext, cfg)
+    np.testing.assert_allclose(np.asarray(dec_logits[:, 0], np.float32),
+                               np.asarray(full2[:, -1], np.float32),
+                               rtol=3e-2, atol=3e-2)
+
+
+def test_streaming_attention_inside_model():
+    """Forcing tiny streaming chunks must not change model outputs."""
+    cfg = reduced_config("yi-34b")
+    params = decoder.init(KEY, cfg)
+    tokens = jax.random.randint(KEY, (2, 64), 0, cfg.vocab)
+    base, _, _ = decoder.forward(params, tokens, cfg,
+                                 flags=RunFlags(remat="none"))
+    import repro.layers.attention as attn
+    old = attn.STREAMING_THRESHOLD
+    try:
+        attn.STREAMING_THRESHOLD = 1  # force streaming path
+        got, _, _ = decoder.forward(
+            params, tokens, cfg,
+            flags=RunFlags(remat="none", q_chunk=16, kv_chunk=32))
+    finally:
+        attn.STREAMING_THRESHOLD = old
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(base, np.float32), rtol=3e-2,
+                               atol=3e-2)
+
+
+def test_mrope_sections_and_equivalence():
+    """Text-only M-RoPE must equal standard RoPE (equal position streams)."""
+    hd = 64
+    pos = jnp.arange(10)[None]
+    cos1, sin1 = common.rope_cos_sin(pos, hd, 1e4)
+    p3 = common.text_positions3(pos)
+    half = hd // 2
+    cos2, sin2 = common.mrope_cos_sin(p3, hd, 1e4,
+                                      (half // 4, half * 3 // 8,
+                                       half * 3 // 8))
+    np.testing.assert_allclose(np.array(cos1), np.array(cos2), rtol=1e-6)
+    np.testing.assert_allclose(np.array(sin1), np.array(sin2), rtol=1e-6)
+
+
+def test_long_500k_applicability_matrix():
+    """Exactly rwkv6 + jamba run long_500k; all archs run everything else."""
+    runs = {}
+    for arch in ARCH_IDS:
+        cfg = get_config(arch)
+        runs[arch] = [s for s in SHAPES
+                      if shape_applicable(cfg, SHAPES[s])[0]]
+    for arch, shapes in runs.items():
+        if arch in ("rwkv6-1.6b", "jamba-1.5-large-398b"):
+            assert "long_500k" in shapes, arch
+        else:
+            assert "long_500k" not in shapes, arch
+        assert {"train_4k", "prefill_32k", "decode_32k"} <= set(shapes)
+
+
+def test_param_counts_match_assignment():
+    """Analytic parameter counts must land near the assigned model sizes."""
+    expect = {"arctic-480b": 480e9, "qwen3-moe-235b-a22b": 235e9,
+              "yi-34b": 34e9, "qwen1.5-4b": 4e9, "phi3-medium-14b": 14e9,
+              "smollm-360m": 0.36e9, "jamba-1.5-large-398b": 398e9,
+              "rwkv6-1.6b": 1.6e9, "qwen2-vl-72b": 72e9}
+    for arch, target in expect.items():
+        n = get_config(arch).n_params()
+        assert 0.8 * target <= n <= 1.25 * target, (arch, n, target)
+    # jamba active ~94B (the A94B in its name)
+    assert abs(get_config("jamba-1.5-large-398b").active_params() - 94e9) \
+        < 15e9

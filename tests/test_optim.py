@@ -1,0 +1,103 @@
+"""Optimizer + compression units and properties."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.optim import adamw, compress
+
+
+def test_adamw_matches_reference_math():
+    cfg = adamw.AdamWConfig(lr=0.1, b1=0.9, b2=0.99, eps=1e-8,
+                            weight_decay=0.0, grad_clip=1e9,
+                            warmup_steps=0, total_steps=10,
+                            schedule="constant")
+    p = {"w": jnp.array([1.0, -2.0], jnp.float32)}
+    g = {"w": jnp.array([0.5, 0.5], jnp.float32)}
+    st_ = adamw.init(p, cfg)
+    new_p, new_st, _ = adamw.update(p, g, st_, cfg)
+    m = 0.1 * 0.5
+    v = 0.01 * 0.25
+    mhat = m / (1 - 0.9)
+    vhat = v / (1 - 0.99)
+    want = 1.0 - 0.1 * mhat / (np.sqrt(vhat) + 1e-8)
+    np.testing.assert_allclose(float(new_p["w"][0]), want, rtol=1e-5)
+
+
+def test_weight_decay_mask_skips_norms():
+    cfg = adamw.AdamWConfig(lr=0.1, weight_decay=0.5, grad_clip=1e9,
+                            warmup_steps=0, schedule="constant")
+    p = {"dense": {"w": jnp.ones((2,), jnp.float32)},
+         "ln1": {"scale": jnp.ones((2,), jnp.float32)}}
+    g = jax.tree.map(jnp.zeros_like, p)
+    st_ = adamw.init(p, cfg)
+    new_p, _, _ = adamw.update(p, g, st_, cfg)
+    # zero grads: decayed params shrink, no-decay params don't
+    assert float(new_p["dense"]["w"][0]) < 1.0
+    assert float(new_p["ln1"]["scale"][0]) == 1.0
+
+
+@given(norm=st.floats(0.1, 100.0), clip=st.floats(0.5, 10.0))
+@settings(max_examples=50, deadline=None)
+def test_clip_property(norm, clip):
+    g = {"w": jnp.array([norm, 0.0], jnp.float32)}
+    clipped, gn = adamw.clip_by_global_norm(g, clip)
+    out_norm = float(adamw.global_norm(clipped))
+    assert out_norm <= clip * 1.001
+    if norm <= clip:
+        np.testing.assert_allclose(out_norm, norm, rtol=1e-4)
+
+
+def test_schedule_shapes():
+    cfg = adamw.AdamWConfig(lr=1.0, warmup_steps=10, total_steps=100,
+                            min_lr_ratio=0.1, schedule="cosine")
+    lrs = [float(adamw.schedule_lr(cfg, jnp.int32(s)))
+           for s in (0, 5, 10, 55, 100)]
+    assert lrs[0] == 0.0
+    assert abs(lrs[1] - 0.5) < 1e-6          # mid-warmup
+    assert abs(lrs[2] - 1.0) < 1e-6          # peak
+    assert 0.1 < lrs[3] < 1.0                 # decaying
+    assert abs(lrs[4] - 0.1) < 1e-3           # floor
+
+
+# -- compression -------------------------------------------------------------
+
+
+@given(scale=st.floats(1e-4, 1e3), n=st.integers(1, 2000),
+       seed=st.integers(0, 100))
+@settings(max_examples=50, deadline=None)
+def test_quantize_roundtrip_error_bound(scale, n, seed):
+    x = jax.random.normal(jax.random.PRNGKey(seed), (n,)) * scale
+    q, s = compress.quantize(x)
+    back = compress.dequantize(q, s, x.shape)
+    # per-block max error <= scale_block (= blockmax/127) / 2
+    err = np.abs(np.array(back) - np.array(x))
+    blockmax = np.abs(np.array(x)).max()
+    assert err.max() <= blockmax / 127.0 * 0.5 + 1e-7
+
+
+def test_error_feedback_reduces_bias():
+    """With error feedback, the running sum of dequantized grads tracks the
+    running sum of true grads much better than without."""
+    key = jax.random.PRNGKey(0)
+    g_true = jax.random.normal(key, (512,)) * 1e-3
+    grads = {"w": g_true}
+    err = compress.init_error_state(grads)
+    acc_fb = np.zeros(512)
+    acc_nofb = np.zeros(512)
+    for i in range(20):
+        comp, err = compress.compress_tree(grads, err)
+        acc_fb += np.array(compress.decompress_tree(comp, grads)["w"])
+        comp2, _ = compress.compress_tree(
+            grads, compress.init_error_state(grads))
+        acc_nofb += np.array(compress.decompress_tree(comp2, grads)["w"])
+    true = np.array(g_true) * 20
+    assert np.abs(acc_fb - true).max() <= np.abs(acc_nofb - true).max() + 1e-9
+
+
+def test_wire_bytes_ratio():
+    grads = {"w": jnp.ones((4096,), jnp.float32)}
+    err = compress.init_error_state(grads)
+    comp, _ = compress.compress_tree(grads, err)
+    bf16_bytes = 4096 * 2
+    assert compress.wire_bytes(comp) < bf16_bytes * 0.6  # ~3.7x vs bf16

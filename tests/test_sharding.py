@@ -1,0 +1,90 @@
+"""Sharding rules: divisibility-aware spec construction + logical trees
+matching param trees for every architecture."""
+import jax
+import pytest
+from hypothesis import given, settings, strategies as st
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import ARCH_IDS, get_config, reduced_config
+from repro.models import decoder, encdec
+from repro.sharding.rules import Rules, spec_for
+
+MESH_SHAPE = {"pod": 2, "data": 16, "model": 16}
+RULES = Rules(batch=("pod", "data"), fsdp=("data",), tp="model")
+
+
+def test_spec_divisible():
+    s = spec_for(("fsdp", "heads"), (4096, 64), RULES, MESH_SHAPE)
+    assert s == P("data", "model")
+
+
+def test_spec_replicates_when_indivisible():
+    # 15 heads don't divide model=16 -> replicate that dim
+    s = spec_for(("fsdp", "heads"), (960, 15), RULES, MESH_SHAPE)
+    assert s == P("data", None)
+    # 7-dim fsdp falls back too
+    s = spec_for(("fsdp",), (7,), RULES, MESH_SHAPE)
+    assert s == P(None)
+
+
+def test_batch_axes_compose():
+    s = spec_for(("batch", None), (256, 4096), RULES, MESH_SHAPE)
+    assert s == P(("pod", "data"), None)
+    # batch 3 can't take pod*data=32
+    s = spec_for(("batch", None), (3, 16), RULES, MESH_SHAPE)
+    assert s == P(None, None)
+
+
+@given(dim=st.integers(1, 4096))
+@settings(max_examples=100, deadline=None)
+def test_spec_never_invalid(dim):
+    """Whatever the dim, the spec must keep shard counts dividing the dim."""
+    s = spec_for(("heads",), (dim,), RULES, MESH_SHAPE)
+    if s[0] is not None:
+        assert dim % MESH_SHAPE["model"] == 0
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_logical_tree_matches_param_tree(arch):
+    """logical(cfg) must have exactly the param-tree structure (guards
+    against drift between init() and logical())."""
+    cfg = reduced_config(arch)
+    api = encdec if cfg.family == "encdec" else decoder
+    shapes = jax.eval_shape(lambda k: api.init(k, cfg),
+                            jax.random.PRNGKey(0))
+    logical = api.logical(cfg)
+    is_leaf = lambda x: isinstance(x, tuple) and all(
+        isinstance(e, (str, type(None))) for e in x)
+    ls = jax.tree.structure(logical, is_leaf=is_leaf)
+    ps = jax.tree.structure(shapes)
+    assert ls == ps, f"{arch}: logical tree != param tree"
+    # every logical tuple's rank matches its param's rank (stacked +1)
+    llist = jax.tree.leaves(logical, is_leaf=is_leaf)
+    plist = jax.tree.leaves(shapes)
+    for lg, sh in zip(llist, plist):
+        assert len(lg) == len(sh.shape), (arch, lg, sh.shape)
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_full_config_param_specs_build(arch):
+    """Building NamedShardings for the FULL config on an abstract production
+    mesh must succeed for every arch (no divisibility crashes)."""
+    from repro.launch import specs as S
+    cfg = get_config(arch)
+    devices = jax.devices() * 0 or None
+    # abstract mesh: reuse the real 1-device mesh but with production shape
+    # arithmetic exercised through spec_for directly
+    api = encdec if cfg.family == "encdec" else decoder
+    logical = api.logical(cfg)
+    shapes = jax.eval_shape(lambda k: api.init(k, cfg),
+                            jax.random.PRNGKey(0))
+    is_leaf = lambda x: isinstance(x, tuple) and all(
+        isinstance(e, (str, type(None))) for e in x)
+    rules = Rules(batch=("pod", "data"), fsdp=("data",), tp="model")
+    specs_tree = jax.tree.map(
+        lambda lg, sh: spec_for(lg, sh.shape, rules, MESH_SHAPE),
+        logical, shapes, is_leaf=is_leaf)
+    n_sharded = sum(1 for s in jax.tree.leaves(
+        specs_tree, is_leaf=lambda x: isinstance(x, P))
+        if any(e is not None for e in s))
+    assert n_sharded > 0, arch

@@ -1,0 +1,81 @@
+"""Training semantics: convergence, microbatch-accumulation equivalence,
+loss masking, z-loss."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import reduced_config
+from repro.models import decoder
+from repro.models.decoder import RunFlags
+from repro.optim import adamw
+from repro.train.step import TrainConfig, cross_entropy, train_step
+
+KEY = jax.random.PRNGKey(0)
+
+
+@pytest.mark.slow
+def test_loss_decreases_smollm():
+    from repro.launch.train import main
+    losses = main(["--arch", "smollm-360m", "--reduced", "--steps", "40",
+                   "--batch", "4", "--seq", "64", "--lr", "3e-3",
+                   "--log-every", "100"])
+    assert np.mean(losses[-5:]) < np.mean(losses[:5]) - 0.2, losses[-5:]
+
+
+def test_microbatch_equivalence():
+    """2 microbatches must give (near-)identical updates to 1 full batch."""
+    cfg = reduced_config("smollm-360m")
+    ocfg = adamw.AdamWConfig(lr=1e-3, warmup_steps=0, total_steps=5,
+                             schedule="constant", grad_clip=1e9)
+    params = decoder.init(KEY, cfg)
+    batch = {"tokens": jax.random.randint(KEY, (4, 32), 0, cfg.vocab),
+             "labels": jax.random.randint(KEY, (4, 32), 0, cfg.vocab)}
+    outs = {}
+    for nmb in (1, 2):
+        tcfg = TrainConfig(optimizer=ocfg, microbatches=nmb,
+                           flags=RunFlags(remat="none"))
+        opt = adamw.init(params, ocfg)
+        new_p, _, m = train_step(params, opt, batch, cfg, tcfg)
+        outs[nmb] = (new_p, float(m["loss"]))
+    np.testing.assert_allclose(outs[1][1], outs[2][1], rtol=2e-3)
+    diffs = jax.tree.map(
+        lambda a, b: float(jnp.abs(a.astype(jnp.float32)
+                                   - b.astype(jnp.float32)).max()),
+        outs[1][0], outs[2][0])
+    assert max(jax.tree.leaves(diffs)) < 5e-2
+
+
+def test_cross_entropy_masking():
+    logits = jnp.zeros((1, 4, 8), jnp.float32)
+    labels = jnp.array([[1, 2, -1, -1]], jnp.int32)
+    loss, n = cross_entropy(logits, labels)
+    assert int(n) == 2
+    np.testing.assert_allclose(float(loss), np.log(8), rtol=1e-5)
+
+
+def test_z_loss_penalizes_large_logits():
+    labels = jnp.array([[0]], jnp.int32)
+    small = jnp.array([[[1.0, 0.0]]])
+    big = small * 20
+    l_small, _ = cross_entropy(small, labels, z_loss=1e-2)
+    l_big, _ = cross_entropy(big, labels, z_loss=1e-2)
+    l_big_nz, _ = cross_entropy(big, labels, z_loss=0.0)
+    assert float(l_big) - float(l_big_nz) > 0.5  # z-term bites
+
+
+def test_remat_policies_same_loss():
+    cfg = reduced_config("phi3-medium-14b")
+    params = decoder.init(KEY, cfg)
+    batch = {"tokens": jax.random.randint(KEY, (2, 32), 0, cfg.vocab),
+             "labels": jax.random.randint(KEY, (2, 32), 0, cfg.vocab)}
+    ocfg = adamw.AdamWConfig(lr=1e-3, warmup_steps=0, total_steps=5)
+    ref = None
+    for remat in ("none", "dots", "full"):
+        tcfg = TrainConfig(optimizer=ocfg, flags=RunFlags(remat=remat))
+        opt = adamw.init(params, ocfg)
+        _, _, m = train_step(params, opt, batch, cfg, tcfg)
+        if ref is None:
+            ref = float(m["loss"])
+        else:
+            np.testing.assert_allclose(float(m["loss"]), ref, rtol=1e-4)
