@@ -2,14 +2,20 @@
 devices (launched by benchmarks/run.py with XLA_FLAGS set). CPU collective
 timing does not model ICI, but the ROUND-COUNT ordering (pip_mcoll fewer
 rounds than flat algorithms) shows up in dispatch overhead, and correctness
-of every algorithm is asserted on the way."""
+of every algorithm is asserted on the way.
+
+All invocations go through repro.core.runtime's compiled-callable cache:
+the first call per (collective, algo, shape) key compiles, every timed call
+is a cache hit, so re-trace/re-jit overhead is excluded from the measured
+numbers. Hit/miss totals are emitted as a measured/ row for run.py.
+"""
 import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import mcoll
+from repro.core import mcoll, runtime
 from repro.core.topology import Topology
 
 N, P = 4, 2
@@ -18,9 +24,9 @@ topo = Topology(N, P)
 
 
 def bench(fn, x, n=20):
-    out = jax.block_until_ready(fn(x))
+    out = jax.block_until_ready(fn(x))  # compile (exec-cache miss)
     t0 = time.time()
-    for _ in range(n):
+    for _ in range(n):                  # timed calls are all cache hits
         out = jax.block_until_ready(fn(x))
     return (time.time() - t0) / n * 1e6, out
 
@@ -29,13 +35,21 @@ for nbytes in (256, 65536):
     m = nbytes // 4 // (N * P)
     x = jnp.arange(N * P * max(m, 1), dtype=jnp.float32)
     for algo in mcoll.algorithms("allgather"):
-        fn = mcoll.collective_fn(mesh, topo, "allgather", algo, stacked=True)
+        fn = lambda a, _algo=algo: runtime.collective(
+            mesh, topo, "allgather", _algo, a, stacked=True)
         us, out = bench(fn, x)
         ok = bool((np.asarray(out)[0] == np.asarray(x)).all())
         assert ok, algo
         print(f"measured/allgather/{algo}/{nbytes}B,{us:.1f},8cpu-dev ok")
     for algo in mcoll.algorithms("allreduce"):
         z = jnp.ones((N * P, max(m, 1)), jnp.float32)
-        fn = mcoll.collective_fn(mesh, topo, "allreduce", algo)
+        fn = lambda a, _algo=algo: runtime.collective(
+            mesh, topo, "allreduce", _algo, a)
         us, out = bench(fn, z)
         print(f"measured/allreduce/{algo}/{nbytes}B,{us:.1f},8cpu-dev ok")
+
+stats = runtime.cache_stats()
+assert stats.exec_hits > 0 and stats.exec_misses > 0, stats
+print(f"measured/runtime_cache,0.0,exec_hits={stats.exec_hits} "
+      f"exec_misses={stats.exec_misses} "
+      f"hit_rate={stats.exec_hit_rate:.3f}")

@@ -5,7 +5,9 @@ benches. Prints ``name,us_per_call,derived`` CSV rows.
   fig2_allgather  paper Figure 2: MPI_Allgather 16..512B, 128x18
   tpu_hierarchy   the TPU-native adaptation: pod-level hierarchical gains
   measured_rounds wall-clock of the real shard_map collectives on 8 CPU
-                  devices (subprocess; relative ordering, not TPU time)
+                  devices (subprocess; relative ordering, not TPU time);
+                  runs through repro.core.runtime's compiled-callable
+                  cache and reports its hit/miss totals
   autotune_table  algorithm crossover table
   kernel_bench    Pallas kernel interpret-mode vs jnp-ref wall time
   roofline_summary aggregates results/dryrun.jsonl (if present)
@@ -99,7 +101,10 @@ def tpu_hierarchy():
 def measured_rounds():
     """Wall-clock the real shard_map algorithms (8 CPU host devices,
     subprocess so this process keeps 1 device). CPU timings demonstrate
-    round-count ordering only — derived column has modeled TPU time."""
+    round-count ordering only — derived column has modeled TPU time.
+    The subprocess drives every call through repro.core.runtime, so timed
+    iterations are compiled-callable cache hits (no re-trace in the
+    numbers); the measured/runtime_cache row carries the hit/miss totals."""
     script = REPO / "benchmarks" / "measure_collectives.py"
     env = dict(os.environ)
     env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"

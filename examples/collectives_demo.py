@@ -15,7 +15,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import costmodel, mcoll
+from repro.core import costmodel, mcoll, runtime
 from repro.core.topology import Topology
 
 N, P = 4, 2
@@ -23,13 +23,17 @@ mesh = jax.make_mesh((N, P), ("node", "local"))
 topo = Topology(N, P)
 x = jnp.arange(N * P * 4, dtype=jnp.float32)
 
-print(f"== allgather on {N}x{P} devices ==")
+print(f"== allgather on {N}x{P} devices (runtime API, cached) ==")
 for algo in mcoll.algorithms("allgather"):
-    fn = mcoll.collective_fn(mesh, topo, "allgather", algo, stacked=True)
-    out = np.asarray(fn(x))
+    out = np.asarray(runtime.collective(mesh, topo, "allgather", algo, x,
+                                        stacked=True))
     ok = all((out[d] == np.asarray(x)).all() for d in range(N * P))
     print(f"  {algo:20s} correct={ok}")
     assert ok
+    runtime.collective(mesh, topo, "allgather", algo, x, stacked=True)
+stats = runtime.cache_stats()
+print(f"  runtime cache: {stats.exec_hits} hits / "
+      f"{stats.exec_misses} compiles")
 
 print("\n== modeled small-message latency, paper cluster (128x18) ==")
 big = Topology(128, 18)

@@ -1,6 +1,7 @@
 # The paper's primary contribution: PiP-MColl multi-object collectives,
-# two-level topology, alpha-beta cost models, and algorithm autotuning.
+# two-level topology, alpha-beta cost models, algorithm autotuning, and the
+# version-portable cached collective runtime.
 from repro.core.topology import Topology
-from repro.core import mcoll, costmodel, autotune
+from repro.core import compat, mcoll, costmodel, autotune, runtime
 
-__all__ = ["Topology", "mcoll", "costmodel", "autotune"]
+__all__ = ["Topology", "compat", "mcoll", "costmodel", "autotune", "runtime"]

@@ -1,0 +1,69 @@
+"""Version-portability shims for the JAX APIs the collective runtime needs.
+
+This module is the ONLY place in ``src/`` allowed to reference the
+``shard_map`` entry points directly. Everything else goes through
+:func:`shard_map` here (usually via ``repro.core.runtime``), so a JAX
+upgrade or downgrade is absorbed in exactly one file.
+
+The spelling has moved around across JAX releases:
+
+  * new JAX exposes ``jax.shard_map`` with a ``check_vma`` kwarg,
+  * some intermediate releases staged it under ``jax.sharding``,
+  * 0.4.x ships ``jax.experimental.shard_map.shard_map`` with the older
+    ``check_rep`` kwarg (same meaning: verify the per-device replication /
+    varying-manual-axes annotation of the body's outputs).
+
+At import time we resolve which implementation exists and which kwarg
+spelling it accepts; :func:`shard_map` translates ``check_vma``⇄``check_rep``
+accordingly.
+"""
+from __future__ import annotations
+
+import inspect
+from typing import Any, Callable, Optional
+
+import jax
+import jax.sharding
+
+
+def _resolve() -> tuple:
+    fn = getattr(jax, "shard_map", None)
+    if fn is not None:
+        return "jax", fn
+    fn = getattr(jax.sharding, "shard_map", None)
+    if fn is not None:
+        return "jax.sharding", fn
+    from jax.experimental import shard_map as _esm
+    return "jax.experimental.shard_map", _esm.shard_map
+
+
+#: Dotted module path of the implementation picked at import time.
+SHARD_MAP_SOURCE, _shard_map_impl = _resolve()
+
+#: Which output-check kwarg the picked implementation accepts
+#: ("check_vma", "check_rep", or None if it has neither).
+CHECK_KW: Optional[str] = None
+_params = inspect.signature(_shard_map_impl).parameters
+for _name in ("check_vma", "check_rep"):
+    if _name in _params:
+        CHECK_KW = _name
+        break
+
+
+def shard_map(f: Callable, mesh, in_specs: Any, out_specs: Any,
+              check_vma: Optional[bool] = None,
+              check_rep: Optional[bool] = None) -> Callable:
+    """Version-portable ``shard_map``.
+
+    ``check_vma`` and ``check_rep`` are aliases for the same flag; pass
+    whichever spelling you like and it is translated to the one the
+    installed JAX accepts (or dropped if the API has neither).
+    """
+    if check_vma is not None and check_rep is not None:
+        raise TypeError("pass only one of check_vma / check_rep")
+    check = check_vma if check_vma is not None else check_rep
+    kw = {}
+    if check is not None and CHECK_KW is not None:
+        kw[CHECK_KW] = check
+    return _shard_map_impl(f, mesh=mesh, in_specs=in_specs,
+                           out_specs=out_specs, **kw)

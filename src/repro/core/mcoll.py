@@ -19,9 +19,12 @@ collective-permute per algorithm round. PiP shared-memory staging becomes
 cheap intra-group collectives (``all_gather``/``psum`` over the local axis)
 plus fused Pallas pack/shift kernels for the local data-reorder steps.
 
-All algorithm functions in this module run INSIDE ``jax.shard_map`` over a
-mesh that contains ``topo.node_axis`` and ``topo.local_axis``. The public
-wrappers at the bottom build jitted shard_map'd callables.
+All algorithm functions in this module run INSIDE a shard_map over a mesh
+that contains ``topo.node_axis`` and ``topo.local_axis``. Construction of
+the shard_map'd callables lives in ``repro.core.runtime`` — use
+``runtime.collective(...)`` (cached, version-portable) as the supported
+entry point; ``collective_fn`` below is a thin delegate kept for
+compatibility.
 
 Algorithms (selectable, ``algo=`` everywhere):
   allgather : pip_mcoll | bruck | recursive_doubling | ring | single_leader | xla
@@ -33,14 +36,10 @@ Algorithms (selectable, ``algo=`` everywhere):
 """
 from __future__ import annotations
 
-import math
-from functools import partial
 from typing import Optional, Sequence, Tuple
 
-import jax
 import jax.numpy as jnp
 from jax import lax
-from jax.sharding import PartitionSpec as P
 
 from repro.core.topology import Topology
 
@@ -262,10 +261,14 @@ def pip_mcoll_scatter(xfull, topo: Topology, radix: Optional[int] = None,
     R = jnp.roll(blocks, -root_node, axis=0)
     R = jnp.where((v == 0), R, jnp.zeros_like(R))
     if N > 1:
-        n_rounds = max(1, math.ceil(round(math.log(N, B), 9)))
+        # exact ceil(log_B N) by integer arithmetic (float log is
+        # off-by-precision for exact powers, costing a spurious round)
+        n_rounds, cap = 1, B
+        while cap < N:
+            cap *= B
+            n_rounds += 1
         # pad to the tree capacity so every dynamic_slice send window
         # [(l+1)S, (l+2)S) is in-bounds (SPMD needs uniform static sizes).
-        cap = B ** n_rounds
         if cap > N:
             R = jnp.concatenate(
                 [R, jnp.zeros((cap - N,) + R.shape[1:], R.dtype)], axis=0)
@@ -361,7 +364,10 @@ def pip_mcoll_broadcast(x, topo: Topology, radix: Optional[int] = None,
     v = (n - root_node) % N
     R = jnp.where(v == 0, x, jnp.zeros_like(x))
     if N > 1:
-        n_rounds = max(1, math.ceil(math.log(N, B)))
+        n_rounds, cap = 1, B
+        while cap < N:
+            cap *= B
+            n_rounds += 1
         steps = [B ** i for i in range(n_rounds - 1, -1, -1)]
         for S in steps:
             pairs = []
@@ -540,7 +546,8 @@ ALLTOALL = {
 
 
 # ---------------------------------------------------------------------------
-# public wrappers: build jitted shard_map'd callables over a mesh
+# algorithm registry — construction of shard_map'd callables lives in
+# repro.core.runtime (version portability + compiled-callable cache)
 # ---------------------------------------------------------------------------
 
 _REGISTRY = {
@@ -557,13 +564,18 @@ def algorithms(collective: str):
     return sorted(_REGISTRY[collective].keys())
 
 
-def _shard_spec(topo: Topology, ndim: int) -> P:
-    return P(_axes(topo), *([None] * (ndim - 1)))
+def algorithm(collective: str, algo: str):
+    """The raw per-device algorithm function (runs inside shard_map)."""
+    return _REGISTRY[collective][algo]
 
 
 def collective_fn(mesh, topo: Topology, collective: str, algo: str,
                   stacked: bool = True, jit: bool = True, **kw):
     """Build a callable computing `collective` with `algo` over `mesh`.
+
+    Compatibility delegate for ``repro.core.runtime.build`` — new code
+    should call ``runtime.collective`` (cached end-to-end) or
+    ``runtime.build`` directly.
 
     Input/output conventions (global arrays):
       allgather:      in (M*m, ...) sharded dim0 -> out (M, M*m, ...) stacked
@@ -576,44 +588,6 @@ def collective_fn(mesh, topo: Topology, collective: str, algo: str,
       reduce_scatter: in (M, M*s, ...) sharded dim0 -> out (M*s, ...) sharded.
       alltoall:       in (M, M, s...) sharded dim0 -> out (M, M, s...) sharded.
     """
-    fn = _REGISTRY[collective][algo]
-    fn = partial(fn, topo=topo, **kw)
-    ax = _axes(topo)
-
-    if collective == "allgather":
-        def body(x):
-            out = fn(x)
-            return out[None] if stacked else out
-        in_specs = P(ax)
-        out_specs = P(ax, None) if stacked else P(None)
-    elif collective == "scatter":
-        def body(x):
-            return fn(x)
-        in_specs = P(None)
-        out_specs = P(ax)
-    elif collective == "broadcast":
-        def body(x):
-            return fn(x)[None]
-        in_specs = P(None)
-        out_specs = P(ax, None)
-    elif collective == "allreduce":
-        def body(x):
-            return fn(x[0])[None]
-        in_specs = P(ax, None)
-        out_specs = P(ax, None)
-    elif collective == "reduce_scatter":
-        def body(x):
-            return fn(x[0])
-        in_specs = P(ax, None)
-        out_specs = P(ax)
-    elif collective == "alltoall":
-        def body(x):
-            return fn(x[0])[None]
-        in_specs = P(ax, None)
-        out_specs = P(ax, None)
-    else:
-        raise ValueError(collective)
-
-    mapped = jax.shard_map(body, mesh=mesh, in_specs=(in_specs,),
-                           out_specs=out_specs, check_vma=False)
-    return jax.jit(mapped) if jit else mapped
+    from repro.core import runtime
+    return runtime.build(mesh, topo, collective, algo, stacked=stacked,
+                         jit=jit, **kw)

@@ -20,6 +20,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro.core import runtime
 from repro.layers import common
 from repro.layers.common import Accum
 
@@ -160,11 +161,11 @@ def apply(p, x, cfg, rules=None, mesh=None):
 
     batch_axes = tuple(a for a in (rules.batch or ()) if a in mesh.axis_names)
     xspec = P(batch_axes if batch_axes else None, None, None)
-    fn = jax.shard_map(
+    fn = runtime.sharded(
         partial(_moe_ep_shard, cfg=cfg, tp_axis=tp, tp_size=tp_size),
-        mesh=mesh,
+        mesh,
         in_specs=(P(None, None), P(tp, None, None), P(tp, None, None),
                   P(tp, None, None), xspec),
         out_specs=(xspec, P(batch_axes if batch_axes else None, None)),
-        check_vma=False)
+        check=False)
     return fn(p["router"], p["w_gate"], p["w_up"], p["w_down"], x)

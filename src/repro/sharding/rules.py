@@ -72,8 +72,11 @@ def spec_for(logical: Tuple[Optional[str], ...], dims: Tuple[int, ...],
             parts.append(ax if ok else None)
         else:
             raise ValueError(f"unknown logical axis {name}")
-    # PartitionSpec entries that are empty tuples mean replicated
+    # PartitionSpec entries that are empty tuples mean replicated; unwrap
+    # singleton tuples to the bare axis name (same sharding, canonical form)
     parts = [None if p == () else p for p in parts]
+    parts = [p[0] if isinstance(p, tuple) and len(p) == 1 else p
+             for p in parts]
     return P(*parts)
 
 

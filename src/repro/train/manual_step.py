@@ -26,7 +26,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
-from repro.core import mcoll
+from repro.core import mcoll, runtime
 from repro.core.topology import Topology
 from repro.optim import adamw, compress
 from repro.train.step import TrainConfig, loss_fn
@@ -71,15 +71,12 @@ def make_manual_train_step(cfg, tcfg: TrainConfig, mesh, topo: Topology,
 
     batch_spec = jax.tree.map(lambda _: P(ax), {"tokens": 0, "labels": 0})
 
-    def wrapped(params, opt_state, err_state, batch):
-        fn = jax.shard_map(
-            step, mesh=mesh,
-            in_specs=(P(), P(), P(), P(ax)),
-            out_specs=(P(), P(), P(), P()),
-            check_vma=False)
-        return fn(params, opt_state, err_state, batch)
-
-    return jax.jit(wrapped, donate_argnums=(0, 1, 2))
+    mapped = runtime.sharded(
+        step, mesh,
+        in_specs=(P(), P(), P(), P(ax)),
+        out_specs=(P(), P(), P(), P()),
+        check=False)
+    return jax.jit(mapped, donate_argnums=(0, 1, 2))
 
 
 def init_error_state(params, enabled: bool):

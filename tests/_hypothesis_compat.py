@@ -1,0 +1,98 @@
+"""Import-compatible subset of ``hypothesis`` for environments without it.
+
+When the real ``hypothesis`` is installed, its ``given`` / ``settings`` /
+``strategies`` are re-exported unchanged and tests get full property-based
+search. When it is absent, the shim replays a fixed deterministic sample of
+each strategy by expanding the test into ``pytest.mark.parametrize`` cases
+(boundary values first, then seeded-random draws), so property tests still
+run with reduced rigor instead of erroring at collection.
+
+Only the strategy constructors this suite uses are implemented:
+``integers``, ``floats``, ``sampled_from``.
+"""
+from __future__ import annotations
+
+try:
+    from hypothesis import given, settings, strategies  # noqa: F401
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+    import random
+
+    import pytest
+
+    _DEFAULT_EXAMPLES = 10
+    _MAX_EXAMPLES_CAP = 25
+
+    class _Integers:
+        def __init__(self, min_value, max_value):
+            self.lo, self.hi = int(min_value), int(max_value)
+
+        def examples(self, rng, k):
+            vals = []
+            for v in (self.lo, self.hi, (self.lo + self.hi) // 2):
+                if v not in vals:
+                    vals.append(v)
+            while len(vals) < k:
+                vals.append(rng.randint(self.lo, self.hi))
+            return vals[:k]
+
+    class _Floats:
+        def __init__(self, min_value, max_value):
+            self.lo, self.hi = float(min_value), float(max_value)
+
+        def examples(self, rng, k):
+            vals = [self.lo, self.hi, (self.lo + self.hi) / 2.0]
+            while len(vals) < k:
+                vals.append(rng.uniform(self.lo, self.hi))
+            return vals[:k]
+
+    class _SampledFrom:
+        def __init__(self, elements):
+            self.elements = list(elements)
+
+        def examples(self, rng, k):
+            return [self.elements[i % len(self.elements)] for i in range(k)]
+
+    class _Strategies:
+        @staticmethod
+        def integers(min_value, max_value):
+            return _Integers(min_value, max_value)
+
+        @staticmethod
+        def floats(min_value, max_value):
+            return _Floats(min_value, max_value)
+
+        @staticmethod
+        def sampled_from(elements):
+            return _SampledFrom(elements)
+
+    strategies = _Strategies()
+
+    def settings(max_examples=None, deadline=None, **_ignored):
+        """Record max_examples on the test fn for @given to pick up."""
+        def deco(fn):
+            fn._shim_max_examples = max_examples
+            return fn
+        return deco
+
+    def given(**strats):
+        """Expand a deterministic sample of each strategy into parametrize
+        cases. Seeds derive from the test/arg names only, so the replayed
+        sample is stable across runs and machines."""
+        def deco(fn):
+            names = sorted(strats)
+            k = getattr(fn, "_shim_max_examples", None) or _DEFAULT_EXAMPLES
+            k = max(1, min(int(k), _MAX_EXAMPLES_CAP))
+            cols = {
+                n: strats[n].examples(
+                    random.Random(f"{fn.__name__}::{n}"), k)
+                for n in names
+            }
+            if len(names) == 1:
+                cases = cols[names[0]]
+            else:
+                cases = [tuple(cols[n][i] for n in names) for i in range(k)]
+            return pytest.mark.parametrize(",".join(names), cases)(fn)
+        return deco

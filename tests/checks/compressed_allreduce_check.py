@@ -7,6 +7,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import PartitionSpec as Pt
 
+from repro.core import runtime
 from repro.core.topology import Topology
 from repro.optim.compress import compressed_allreduce
 
@@ -19,10 +20,10 @@ x = (jax.random.normal(jax.random.PRNGKey(0), (M, n)) * 0.01)
 def body(xs):
     return compressed_allreduce(xs[0], topo)[None]
 
-fn = jax.jit(jax.shard_map(body, mesh=mesh,
-                           in_specs=(Pt(("node", "local"), None),),
-                           out_specs=Pt(("node", "local"), None),
-                           check_vma=False))
+fn = jax.jit(runtime.sharded(body, mesh,
+                             in_specs=(Pt(("node", "local"), None),),
+                             out_specs=Pt(("node", "local"), None),
+                             check=False))
 got = np.asarray(fn(x))
 want = np.asarray(x).sum(0)
 # every device's copy approximates the exact sum within quantization error

@@ -7,7 +7,7 @@ rest of the suite keeps seeing exactly 1 CPU device.
 import math
 
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, strategies as st
 
 from repro.core import costmodel
 from repro.core.mcoll import mo_rounds, _mo_perm

@@ -3,7 +3,7 @@ weighting on a real compiled scan, analytic model-FLOPs sanity."""
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, strategies as st
 
 from repro.configs import SHAPES, get_config
 from repro.roofline import hlo as H

@@ -1,0 +1,153 @@
+"""Compat shim + collective runtime: version resolution, kwarg spelling,
+build/exec cache behavior, and the no-direct-shard_map regression grep.
+
+Cache tests run in-process on 1-device meshes (a (1, 1) node x local mesh
+is a valid degenerate topology), keeping device-count containment intact.
+"""
+import pathlib
+import re
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.core import compat, runtime
+from repro.core.topology import Topology
+
+SRC = pathlib.Path(__file__).resolve().parent.parent / "src"
+
+
+# ---------------------------------------------------------------------------
+# compat: implementation resolution + kwarg translation
+# ---------------------------------------------------------------------------
+
+
+def test_compat_picks_installed_impl():
+    """The shim must resolve to the implementation this JAX actually has,
+    in preference order jax.shard_map > jax.sharding > experimental."""
+    if getattr(jax, "shard_map", None) is not None:
+        assert compat.SHARD_MAP_SOURCE == "jax"
+    elif getattr(jax.sharding, "shard_map", None) is not None:
+        assert compat.SHARD_MAP_SOURCE == "jax.sharding"
+    else:
+        from jax.experimental import shard_map as esm
+        assert esm.shard_map is not None
+        assert compat.SHARD_MAP_SOURCE == "jax.experimental.shard_map"
+
+
+def test_compat_kwarg_spelling_matches_impl():
+    import inspect
+    params = inspect.signature(compat._shard_map_impl).parameters
+    if "check_vma" in params:
+        assert compat.CHECK_KW == "check_vma"
+    elif "check_rep" in params:
+        assert compat.CHECK_KW == "check_rep"
+    else:
+        assert compat.CHECK_KW is None
+
+
+def test_compat_shard_map_executes():
+    mesh = jax.make_mesh((1,), ("d",))
+    fn = compat.shard_map(lambda x: x * 2, mesh, in_specs=(P("d"),),
+                          out_specs=P("d"), check_vma=False)
+    np.testing.assert_array_equal(np.asarray(fn(jnp.arange(4.0))),
+                                  np.arange(4.0) * 2)
+    # the check_rep alias spelling must work too
+    fn2 = compat.shard_map(lambda x: x + 1, mesh, in_specs=(P("d"),),
+                           out_specs=P("d"), check_rep=False)
+    np.testing.assert_array_equal(np.asarray(fn2(jnp.zeros(2))), np.ones(2))
+    with pytest.raises(TypeError):
+        compat.shard_map(lambda x: x, mesh, in_specs=(P("d"),),
+                         out_specs=P("d"), check_vma=False, check_rep=False)
+
+
+# ---------------------------------------------------------------------------
+# runtime: build cache + compiled-callable (exec) cache
+# ---------------------------------------------------------------------------
+
+
+def _mesh_topo(node="node", local="local"):
+    mesh = jax.make_mesh((1, 1), (node, local))
+    return mesh, Topology(1, 1, node_axis=node, local_axis=local)
+
+
+def test_build_cache_identity_and_invalidation():
+    mesh, topo = _mesh_topo()
+    runtime.clear_cache()
+    f1 = runtime.build(mesh, topo, "allgather", "xla")
+    f2 = runtime.build(mesh, topo, "allgather", "xla")
+    assert f1 is f2, "identical key must return the identical callable"
+    f3 = runtime.build(mesh, topo, "allgather", "pip_mcoll")
+    assert f3 is not f1, "algo change must build fresh"
+    f4 = runtime.build(mesh, topo, "allgather", "xla", stacked=False)
+    assert f4 is not f1, "kwarg change must build fresh"
+    s = runtime.cache_stats()
+    assert s.build_hits == 1 and s.build_misses == 3
+
+
+def test_exec_cache_hit_on_identical_key():
+    mesh, topo = _mesh_topo()
+    runtime.clear_cache()
+    x = jnp.arange(4.0)
+    out1 = runtime.collective(mesh, topo, "allgather", "xla", x)
+    out2 = runtime.collective(mesh, topo, "allgather", "xla", x)
+    s = runtime.cache_stats()
+    assert s.exec_misses == 1 and s.exec_hits == 1
+    np.testing.assert_array_equal(np.asarray(out1), np.asarray(out2))
+    np.testing.assert_array_equal(np.asarray(out1)[0], np.asarray(x))
+
+
+def test_exec_cache_fresh_on_shape_dtype_algo_mesh_change():
+    mesh, topo = _mesh_topo()
+    runtime.clear_cache()
+    runtime.collective(mesh, topo, "allgather", "xla", jnp.arange(4.0))
+    runtime.collective(mesh, topo, "allgather", "xla", jnp.arange(8.0))
+    assert runtime.cache_stats().exec_misses == 2, "shape change re-compiles"
+    runtime.collective(mesh, topo, "allgather", "xla",
+                       jnp.arange(4, dtype=jnp.int32))
+    assert runtime.cache_stats().exec_misses == 3, "dtype change re-compiles"
+    runtime.collective(mesh, topo, "allgather", "pip_mcoll", jnp.arange(4.0))
+    assert runtime.cache_stats().exec_misses == 4, "algo change re-compiles"
+    mesh2, topo2 = _mesh_topo("n2", "l2")
+    runtime.collective(mesh2, topo2, "allgather", "xla", jnp.arange(4.0))
+    assert runtime.cache_stats().exec_misses == 5, "mesh change re-compiles"
+    assert runtime.cache_stats().exec_hits == 0
+
+
+def test_collective_correct_through_cache():
+    mesh, topo = _mesh_topo()
+    runtime.clear_cache()
+    z = jnp.arange(6.0).reshape(1, 6)
+    for _ in range(2):  # second pass: every call a cache hit, same results
+        out = runtime.collective(mesh, topo, "allreduce", "pip_mcoll", z)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(z))
+    assert runtime.cache_stats().exec_hits == 1
+
+
+def test_unknown_collective_rejected():
+    mesh, topo = _mesh_topo()
+    with pytest.raises(ValueError):
+        runtime.build(mesh, topo, "gossip", "xla")
+
+
+# ---------------------------------------------------------------------------
+# regression: compat.py is the only module touching the raw API
+# ---------------------------------------------------------------------------
+
+
+def test_no_direct_shard_map_outside_compat():
+    pattern = re.compile(
+        r"jax\.shard_map|jax\.sharding\.shard_map"
+        r"|experimental\.shard_map|experimental import shard_map")
+    offenders = []
+    for path in sorted(SRC.rglob("*.py")):
+        if path.name == "compat.py":
+            continue
+        for i, line in enumerate(path.read_text().splitlines(), 1):
+            if pattern.search(line):
+                offenders.append(f"{path.relative_to(SRC)}:{i}: {line.strip()}")
+    assert not offenders, (
+        "direct shard_map references outside compat.py:\n"
+        + "\n".join(offenders))

@@ -2,7 +2,7 @@
 matching param trees for every architecture."""
 import jax
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, strategies as st
 from jax.sharding import PartitionSpec as P
 
 from repro.configs import ARCH_IDS, get_config, reduced_config
