@@ -8,19 +8,33 @@ All invocations go through repro.core.runtime's compiled-callable cache:
 the first call per (collective, algo, shape) key compiles, every timed call
 is a cache hit, so re-trace/re-jit overhead is excluded from the measured
 numbers. Hit/miss totals are emitted as a measured/ row for run.py.
+
+Modes:
+  (default)             measured rows for allgather/allreduce, every
+                        explicit algorithm plus algo="auto" (result
+                        asserted identical to the explicit runs).
+  --calibrate OUT.json  run runtime.calibrate over all six collectives,
+                        persist the tuning table + latency rows + a
+                        model-vs-measured crossover comparison as JSON
+                        (the BENCH_collectives artifact).
 """
+import argparse
+import json
+import pathlib
 import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import mcoll, runtime
+from repro.core import autotune, mcoll, runtime
 from repro.core.topology import Topology
 
 N, P = 4, 2
 mesh = jax.make_mesh((N, P), ("node", "local"))
-topo = Topology(N, P)
+topo = Topology.from_mesh(mesh)  # link metadata derived: host_cpu/host_cpu
+
+CAL_SIZES = (256, 4096, 65536)
 
 
 def bench(fn, x, n=20):
@@ -31,25 +45,102 @@ def bench(fn, x, n=20):
     return (time.time() - t0) / n * 1e6, out
 
 
-for nbytes in (256, 65536):
-    m = nbytes // 4 // (N * P)
-    x = jnp.arange(N * P * max(m, 1), dtype=jnp.float32)
-    for algo in mcoll.algorithms("allgather"):
-        fn = lambda a, _algo=algo: runtime.collective(
-            mesh, topo, "allgather", _algo, a, stacked=True)
+def measure_mode():
+    for nbytes in (256, 65536):
+        m = nbytes // 4 // (N * P)
+        x = jnp.arange(N * P * max(m, 1), dtype=jnp.float32)
+        ag_out = None
+        for algo in mcoll.algorithms("allgather"):
+            fn = lambda a, _algo=algo: runtime.collective(
+                mesh, topo, "allgather", _algo, a, stacked=True)
+            us, out = bench(fn, x)
+            ok = bool((np.asarray(out)[0] == np.asarray(x)).all())
+            assert ok, algo
+            ag_out = np.asarray(out)
+            print(f"measured/allgather/{algo}/{nbytes}B,{us:.1f},8cpu-dev ok")
+        # algo="auto": resolved through the selector, result must match
+        resolved, _ = runtime.resolve_algo(topo, "allgather", "auto", x)
+        fn = lambda a: runtime.collective(mesh, topo, "allgather", "auto", a,
+                                          stacked=True)
         us, out = bench(fn, x)
-        ok = bool((np.asarray(out)[0] == np.asarray(x)).all())
-        assert ok, algo
-        print(f"measured/allgather/{algo}/{nbytes}B,{us:.1f},8cpu-dev ok")
-    for algo in mcoll.algorithms("allreduce"):
+        np.testing.assert_array_equal(np.asarray(out), ag_out)
+        print(f"measured/allgather/auto/{nbytes}B,{us:.1f},"
+              f"resolved={resolved}")
+        for algo in mcoll.algorithms("allreduce"):
+            z = jnp.ones((N * P, max(m, 1)), jnp.float32)
+            fn = lambda a, _algo=algo: runtime.collective(
+                mesh, topo, "allreduce", _algo, a)
+            us, out = bench(fn, z)
+            print(f"measured/allreduce/{algo}/{nbytes}B,{us:.1f},8cpu-dev ok")
         z = jnp.ones((N * P, max(m, 1)), jnp.float32)
-        fn = lambda a, _algo=algo: runtime.collective(
-            mesh, topo, "allreduce", _algo, a)
-        us, out = bench(fn, z)
-        print(f"measured/allreduce/{algo}/{nbytes}B,{us:.1f},8cpu-dev ok")
+        resolved, _ = runtime.resolve_algo(topo, "allreduce", "auto", z)
+        us, out = bench(lambda a: runtime.collective(
+            mesh, topo, "allreduce", "auto", a), z)
+        np.testing.assert_allclose(np.asarray(out)[0],
+                                   np.full(max(m, 1), N * P, np.float32))
+        print(f"measured/allreduce/auto/{nbytes}B,{us:.1f},"
+              f"resolved={resolved}")
 
-stats = runtime.cache_stats()
-assert stats.exec_hits > 0 and stats.exec_misses > 0, stats
-print(f"measured/runtime_cache,0.0,exec_hits={stats.exec_hits} "
-      f"exec_misses={stats.exec_misses} "
-      f"hit_rate={stats.exec_hit_rate:.3f}")
+    stats = runtime.cache_stats()
+    assert stats.exec_hits > 0 and stats.exec_misses > 0, stats
+    print(f"measured/runtime_cache,0.0,exec_hits={stats.exec_hits} "
+          f"exec_misses={stats.exec_misses} "
+          f"hit_rate={stats.exec_hit_rate:.3f}")
+    sstats = runtime.selection_stats()
+    print(f"measured/selection,0.0,prior={sstats.prior} "
+          f"measured={sstats.measured}")
+
+
+def calibrate_mode(out_path: str):
+    sel = autotune.default_selector()
+    rows = runtime.calibrate(mesh, topo, sizes=CAL_SIZES, iters=10)
+    for r in rows:
+        print(f"calibrate/{r.collective}/{r.algo}/{r.nbytes}B,"
+              f"{r.seconds * 1e6:.1f},measured")
+    # model-vs-measured: where does the measured winner disagree with the
+    # cost-model prior on this mesh?
+    prior_sel = autotune.Selector()  # empty table -> prior only
+    comparison = []
+    agree = 0
+    for name in runtime.collectives():
+        for nbytes in CAL_SIZES:
+            measured = sel.choose(name, topo, nbytes)
+            prior = prior_sel.choose(name, topo, nbytes)
+            match = measured.algo == prior.algo
+            agree += match
+            comparison.append({
+                "collective": name, "nbytes": nbytes,
+                "measured_algo": measured.algo,
+                "measured_us": measured.seconds * 1e6,
+                "prior_algo": prior.algo,
+                "prior_us": prior.seconds * 1e6,
+                "agree": match,
+            })
+            print(f"calibrate/crossover/{name}/{nbytes}B,0.0,"
+                  f"measured={measured.algo} prior={prior.algo} "
+                  f"agree={match}")
+    total = len(comparison)
+    print(f"calibrate/model_vs_measured,0.0,agree={agree}/{total}")
+    artifact = {
+        "topology": autotune.topo_key(topo),
+        "sizes": list(CAL_SIZES),
+        "table": sel.table.to_json(),
+        "latency_rows": [r.__dict__ for r in rows],
+        "model_vs_measured": comparison,
+    }
+    path = pathlib.Path(out_path)
+    path.parent.mkdir(parents=True, exist_ok=True)
+    path.write_text(json.dumps(artifact, indent=1, sort_keys=True))
+    print(f"calibrate/artifact,0.0,{path}")
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--calibrate", metavar="OUT_JSON", default=None,
+                    help="run the calibration sweep and write the tuning "
+                         "table artifact instead of the measure rows")
+    args = ap.parse_args()
+    if args.calibrate:
+        calibrate_mode(args.calibrate)
+    else:
+        measure_mode()

@@ -8,9 +8,14 @@ benches. Prints ``name,us_per_call,derived`` CSV rows.
                   devices (subprocess; relative ordering, not TPU time);
                   runs through repro.core.runtime's compiled-callable
                   cache and reports its hit/miss totals
-  autotune_table  algorithm crossover table
+  autotune_table  algorithm crossover tables for all six collectives
+                  (model priors + measured comparison when calibrated)
   kernel_bench    Pallas kernel interpret-mode vs jnp-ref wall time
   roofline_summary aggregates results/dryrun.jsonl (if present)
+
+``python benchmarks/run.py calibrate`` runs only the measured calibration
+sweep on the 8-CPU-device mesh, persisting the selection subsystem's tuning
+table to ``results/BENCH_collectives.json`` (the CI perf artifact).
 
 The paper's absolute numbers come from an OPA cluster; figures here are the
 alpha-beta model (core/costmodel.py) instantiated with the paper's cluster
@@ -98,6 +103,30 @@ def tpu_hierarchy():
                  f"speedup={sl.time / pip.time:.2f}x")
 
 
+def _bench_subprocess(extra_args, prefix: str, timeout: int,
+                      fatal: bool) -> None:
+    """Run measure_collectives.py on 8 forced CPU host devices (subprocess
+    so this process keeps 1 device) and re-emit its ``prefix``-tagged CSV
+    rows. ``fatal`` makes a subprocess failure fail this run (CI points at
+    the right step) instead of degrading to an ERROR row."""
+    script = REPO / "benchmarks" / "measure_collectives.py"
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = f"{REPO / 'src'}:{env.get('PYTHONPATH', '')}"
+    out = subprocess.run([sys.executable, str(script), *extra_args],
+                         env=env, capture_output=True, text=True,
+                         timeout=timeout)
+    if out.returncode != 0:
+        emit(f"{prefix}ERROR", 0.0, out.stderr[-200:].replace(",", ";"))
+        if fatal:
+            raise SystemExit(1)
+        return
+    for line in out.stdout.splitlines():
+        if line.startswith(prefix):
+            parts = line.split(",")
+            emit(parts[0], float(parts[1]), ",".join(parts[2:]))
+
+
 def measured_rounds():
     """Wall-clock the real shard_map algorithms (8 CPU host devices,
     subprocess so this process keeps 1 device). CPU timings demonstrate
@@ -105,32 +134,47 @@ def measured_rounds():
     The subprocess drives every call through repro.core.runtime, so timed
     iterations are compiled-callable cache hits (no re-trace in the
     numbers); the measured/runtime_cache row carries the hit/miss totals."""
-    script = REPO / "benchmarks" / "measure_collectives.py"
-    env = dict(os.environ)
-    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
-    env["PYTHONPATH"] = f"{REPO / 'src'}:{env.get('PYTHONPATH', '')}"
-    out = subprocess.run([sys.executable, str(script)], env=env,
-                         capture_output=True, text=True, timeout=900)
-    if out.returncode != 0:
-        emit("measured/ERROR", 0.0, out.stderr[-200:].replace(",", ";"))
-        return
-    for line in out.stdout.splitlines():
-        if line.startswith("measured/"):
-            parts = line.split(",")
-            emit(parts[0], float(parts[1]), ",".join(parts[2:]))
+    _bench_subprocess([], "measured/", timeout=900, fatal=False)
 
 
 def autotune_table():
-    topo = Topology(16, 16)
-    net = costmodel.tpu_v5e_pod()
-    table = autotune.tuning_table("allgather", topo, net)
-    crossovers = []
-    prev = None
-    for size, algo in sorted(table.items()):
-        if algo != prev:
-            crossovers.append(f"{size}B->{algo}")
-            prev = algo
-    emit("autotune/allgather/16x16", 0.0, " ".join(crossovers))
+    """Model-prior crossover tables for all six collectives, plus (when a
+    calibration artifact exists) the measured-vs-model comparison."""
+    topo = Topology(16, 16, node_link="tpu_v5e_ici", local_link="tpu_v5e_ici")
+    selector = autotune.Selector()
+    for coll in sorted(costmodel.COST_FNS):
+        table = selector.crossover_table(coll, topo)
+        crossovers = []
+        prev = None
+        for size in sorted(table):
+            algo = table[size].algo
+            if algo != prev:
+                crossovers.append(f"{size}B->{algo}")
+                prev = algo
+        emit(f"autotune/{coll}/16x16", 0.0, " ".join(crossovers))
+    art = REPO / "results" / "BENCH_collectives.json"
+    if art.exists():
+        data = json.loads(art.read_text())
+        agree = sum(1 for c in data.get("model_vs_measured", ())
+                    if c["agree"])
+        total = len(data.get("model_vs_measured", ()))
+        emit("autotune/model_vs_measured", 0.0,
+             f"agree={agree}/{total} topo={data.get('topology')}")
+        for c in data.get("model_vs_measured", ()):
+            if not c["agree"]:
+                emit(f"autotune/disagree/{c['collective']}/{c['nbytes']}B",
+                     c["measured_us"],
+                     f"measured={c['measured_algo']} "
+                     f"prior={c['prior_algo']}")
+
+
+def calibrate_collectives():
+    """Run the measured calibration sweep on the 8-CPU-device mesh
+    (subprocess, like measured_rounds) and persist the tuning-table artifact
+    to results/BENCH_collectives.json for CI upload + autotune_table."""
+    out_json = REPO / "results" / "BENCH_collectives.json"
+    _bench_subprocess(["--calibrate", str(out_json)], "calibrate/",
+                      timeout=1800, fatal=True)
 
 
 def kernel_bench():
@@ -179,6 +223,11 @@ def roofline_summary():
 
 def main() -> None:
     print("name,us_per_call,derived")
+    if "calibrate" in sys.argv[1:]:
+        # CI smoke: measured calibration sweep -> BENCH_collectives.json
+        calibrate_collectives()
+        autotune_table()
+        return
     fig1_scatter()
     fig2_allgather()
     tpu_hierarchy()

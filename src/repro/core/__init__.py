@@ -1,7 +1,10 @@
 # The paper's primary contribution: PiP-MColl multi-object collectives,
-# two-level topology, alpha-beta cost models, algorithm autotuning, and the
-# version-portable cached collective runtime.
+# two-level topology (with per-axis link metadata), alpha-beta cost models,
+# the algorithm-selection subsystem (priors + measured tuning tables), and
+# the version-portable cached collective runtime resolving algo="auto".
 from repro.core.topology import Topology
+from repro.core.autotune import Selector, TuningTable
 from repro.core import compat, mcoll, costmodel, autotune, runtime
 
-__all__ = ["Topology", "compat", "mcoll", "costmodel", "autotune", "runtime"]
+__all__ = ["Topology", "Selector", "TuningTable", "compat", "mcoll",
+           "costmodel", "autotune", "runtime"]

@@ -1,46 +1,327 @@
-"""Algorithm selection: pick the cheapest algorithm for a collective given
-message size and topology, using the alpha-beta cost model.
+"""Algorithm selection subsystem: pick the best algorithm for a collective
+given message size, dtype, and topology.
 
-This is the TPU analogue of an MPI library's collective tuning tables —
-except derived from the model instead of hand-tuned. `choose` is used by the
-framework's manual-collective paths (gradient sync, metric aggregation,
-MoE dispatch) with the net preset matching the mesh level the collective
-runs over (ICI vs DCN).
+This is the TPU analogue of an MPI library's collective tuning tables, with
+two evidence sources layered the way MPI Advance layers runtime-selectable
+variants over defaults:
+
+  1. **cost-model priors** — the alpha-beta model (``core.costmodel``),
+     parameterised by the topology's per-axis link metadata
+     (``costmodel.net_for(topo)``), covering every algorithm registered in
+     ``core.mcoll`` for all six collectives;
+  2. **measured calibration** — timed sweeps run through
+     ``runtime.calibrate`` (which drives ``runtime.collective`` so timings
+     include the real dispatch path), persisted as a JSON
+     :class:`TuningTable` keyed on (topology, collective, dtype, size
+     bucket). When a measurement exists for the exact key it wins over the
+     prior.
+
+The module-level :func:`choose` / :func:`tuning_table` keep the original
+API, now backed by a shared default :class:`Selector`. ``runtime`` resolves
+``algo="auto"`` through the same default selector, so every consumer
+(MoE dispatch, gradient sync, serving, benchmarks) shares one table and one
+set of selection stats.
 """
 from __future__ import annotations
 
-from typing import Dict, Optional, Tuple
+import dataclasses
+import json
+import pathlib
+from typing import Dict, Iterable, Optional, Tuple, Union
 
 from repro.core import costmodel
+from repro.core import mcoll as _mcoll
 from repro.core.costmodel import NetParams
 from repro.core.topology import Topology
 
-_CANDIDATES = {
-    "allgather": ("pip_mcoll", "recursive_doubling", "ring", "single_leader",
-                  "xla"),
-    "scatter": ("pip_mcoll", "binomial", "linear"),
-    "allreduce": ("pip_mcoll", "recursive_doubling", "xla"),
+# ---------------------------------------------------------------------------
+# candidate registry: every implemented algorithm, minus infeasible ones
+# ---------------------------------------------------------------------------
+
+# algo -> feasibility predicate on the topology
+_CONSTRAINTS = {
+    "recursive_doubling": lambda topo: (topo.world & (topo.world - 1)) == 0,
 }
 
 
+def candidates(collective: str, topo: Optional[Topology] = None
+               ) -> Tuple[str, ...]:
+    """Candidate algorithms for ``collective``: the full ``core.mcoll``
+    registry (so selector coverage can never drift from what is
+    implemented), filtered by feasibility on ``topo``."""
+    algos = tuple(_mcoll.algorithms(collective))
+    if topo is not None:
+        algos = tuple(a for a in algos
+                      if _CONSTRAINTS.get(a, lambda t: True)(topo))
+    return algos
+
+
+def size_bucket(nbytes: int) -> int:
+    """Power-of-two ceiling bucket for a message size (1 byte minimum)."""
+    return 1 << max(0, int(nbytes - 1).bit_length())
+
+
+# ---------------------------------------------------------------------------
+# selection results + stats
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class Selection:
+    """One resolved choice: which algorithm, at what predicted/measured
+    latency, from which evidence source ("prior" | "measured")."""
+    collective: str
+    algo: str
+    seconds: float
+    source: str
+    net: str
+
+
+@dataclasses.dataclass
+class SelectionStats:
+    """Counts of resolutions by evidence source, plus per-(collective, algo)
+    tallies — the observability face of the subsystem (mirrors
+    runtime.cache_stats)."""
+    prior: int = 0
+    measured: int = 0
+    by_choice: Dict[Tuple[str, str], int] = dataclasses.field(
+        default_factory=dict)
+
+    @property
+    def total(self) -> int:
+        return self.prior + self.measured
+
+    @property
+    def measured_fraction(self) -> float:
+        return self.measured / self.total if self.total else 0.0
+
+    def note(self, sel: Selection) -> None:
+        if sel.source == "measured":
+            self.measured += 1
+        else:
+            self.prior += 1
+        key = (sel.collective, sel.algo)
+        self.by_choice[key] = self.by_choice.get(key, 0) + 1
+
+    def reset(self) -> None:
+        self.prior = self.measured = 0
+        self.by_choice.clear()
+
+
+# ---------------------------------------------------------------------------
+# measured calibration: the persisted tuning table
+# ---------------------------------------------------------------------------
+
+
+def topo_key(topo: Topology) -> str:
+    """Stable string key for a topology: shape + per-axis link names.
+
+    Unset links are normalized to the default preset's name, so a bare
+    ``Topology(N, P)`` and one explicitly carrying the default preset share
+    measurements. (Topologies with *different* resolved links key —
+    correctly — to different table rows: calibrate with the same link
+    metadata you serve with, e.g. via ``Topology.from_mesh``.)
+    """
+    inter, intra = topo.link_names
+    default = costmodel.resolve_net(None).name
+    # mirror net_for's fallback order: a missing link borrows the other
+    # level's, then the default preset
+    if inter == "default":
+        inter = intra if intra != "default" else default
+    if intra == "default":
+        intra = topo.link_names[0] if topo.link_names[0] != "default" \
+            else default
+    return f"{topo.n_nodes}x{topo.n_local}/{inter}/{intra}"
+
+
+class TuningTable:
+    """Measured algorithm latencies keyed on
+    (topology, collective, dtype, size bucket) -> {algo: seconds}.
+
+    JSON-serialisable so calibration survives processes: benchmarks write it
+    once per mesh, serving/training load it at startup.
+    """
+
+    VERSION = 1
+
+    def __init__(self, entries: Optional[dict] = None):
+        # entries[topo_key][collective][dtype][str(bucket)][algo] = seconds
+        self.entries: dict = entries or {}
+        # bumped on every mutation so selectors can invalidate memos
+        self.generation = 0
+
+    def __len__(self) -> int:
+        return sum(len(algos)
+                   for colls in self.entries.values()
+                   for dts in colls.values()
+                   for buckets in dts.values()
+                   for algos in buckets.values())
+
+    def record(self, topo: Topology, collective: str, dtype: str,
+               nbytes: int, algo: str, seconds: float) -> None:
+        b = str(size_bucket(nbytes))
+        (self.entries.setdefault(topo_key(topo), {})
+             .setdefault(collective, {})
+             .setdefault(str(dtype), {})
+             .setdefault(b, {}))[algo] = float(seconds)
+        self.generation += 1
+
+    def lookup(self, topo: Topology, collective: str, dtype: str,
+               nbytes: int) -> Optional[Dict[str, float]]:
+        """Measured {algo: seconds} for the exact key, else None."""
+        try:
+            return self.entries[topo_key(topo)][collective][str(dtype)][
+                str(size_bucket(nbytes))]
+        except KeyError:
+            return None
+
+    def merge(self, other: "TuningTable") -> None:
+        """Fold another table's measurements in (other wins on conflicts)."""
+        for tk, colls in other.entries.items():
+            for coll, dts in colls.items():
+                for dt, buckets in dts.items():
+                    for b, algos in buckets.items():
+                        (self.entries.setdefault(tk, {})
+                             .setdefault(coll, {})
+                             .setdefault(dt, {})
+                             .setdefault(b, {})).update(algos)
+        self.generation += 1
+
+    # -- persistence --------------------------------------------------------
+
+    def to_json(self) -> dict:
+        return {"version": self.VERSION, "entries": self.entries}
+
+    @classmethod
+    def from_json(cls, obj: dict) -> "TuningTable":
+        if obj.get("version") != cls.VERSION:
+            raise ValueError(f"tuning table version {obj.get('version')!r} "
+                             f"!= {cls.VERSION}")
+        return cls(entries=obj.get("entries", {}))
+
+    def save(self, path) -> None:
+        p = pathlib.Path(path)
+        p.parent.mkdir(parents=True, exist_ok=True)
+        p.write_text(json.dumps(self.to_json(), indent=1, sort_keys=True))
+
+    @classmethod
+    def load(cls, path) -> "TuningTable":
+        return cls.from_json(json.loads(pathlib.Path(path).read_text()))
+
+
+# ---------------------------------------------------------------------------
+# the selector
+# ---------------------------------------------------------------------------
+
+
+class Selector:
+    """Resolves (collective, topology, size, dtype) -> algorithm.
+
+    Measured calibration (exact tuning-table key) beats the cost-model
+    prior; the prior covers everything else. Per-instance stats record how
+    often each source fired and what was chosen.
+    """
+
+    def __init__(self, table: Optional[TuningTable] = None):
+        self.table = table if table is not None else TuningTable()
+        self.stats = SelectionStats()
+        # (collective, topo, bucket, dtype, net) -> Selection; selection
+        # granularity is the size bucket, so hot loops pay the cost model /
+        # table walk once per bucket, not per call. The whole memo is
+        # dropped when the table mutates (generation bump), so it stays
+        # bounded by the live key set even across repeated recalibration.
+        self._memo: Dict[tuple, Selection] = {}
+        self._memo_gen = self.table.generation
+
+    def choose(self, collective: str, topo: Topology, nbytes: int,
+               net: Optional[Union[str, NetParams]] = None,
+               dtype: str = "float32") -> Selection:
+        """Return the best Selection for one message (memoized per size
+        bucket; stats still count every resolution)."""
+        if self._memo_gen != self.table.generation:
+            self._memo.clear()
+            self._memo_gen = self.table.generation
+        # key on the raw net spec (None/name/NetParams are all hashable);
+        # NetParams resolution happens only on a miss, off the hot path
+        key = (collective, topo, size_bucket(nbytes), dtype, net)
+        hit = self._memo.get(key)
+        if hit is not None:
+            self.stats.note(hit)
+            return hit
+        net_p = (costmodel.net_for(topo) if net is None
+                 else costmodel.resolve_net(net))
+        cands = candidates(collective, topo)
+        if not cands:
+            raise ValueError(f"no feasible algorithm for {collective} "
+                             f"on {topo_key(topo)}")
+        measured = self.table.lookup(topo, collective, dtype, nbytes)
+        if measured:
+            usable = {a: s for a, s in measured.items() if a in cands}
+            if usable:
+                algo = min(usable, key=usable.get)
+                sel = Selection(collective, algo, usable[algo], "measured",
+                                net_p.name)
+                self._memo[key] = sel
+                self.stats.note(sel)
+                return sel
+        fn = costmodel.COST_FNS[collective]
+        best_algo, best_t = None, float("inf")
+        for algo in cands:
+            try:
+                t = fn(algo, topo, nbytes, net_p).time
+            except ValueError:  # implemented but not modeled: skip the prior
+                continue
+            if t < best_t:
+                best_algo, best_t = algo, t
+        if best_algo is None:  # nothing modeled — arbitrary but deterministic
+            best_algo, best_t = cands[0], float("inf")
+        sel = Selection(collective, best_algo, best_t, "prior", net_p.name)
+        self._memo[key] = sel
+        self.stats.note(sel)
+        return sel
+
+    def crossover_table(self, collective: str, topo: Topology,
+                        net: Optional[Union[str, NetParams]] = None,
+                        sizes: Optional[Iterable[int]] = None,
+                        dtype: str = "float32") -> Dict[int, Selection]:
+        """Message size -> Selection over a size sweep (the per-(topo,
+        collective) crossover table)."""
+        sizes = tuple(sizes) if sizes else tuple(2 ** i for i in range(4, 27))
+        return {s: self.choose(collective, topo, s, net=net, dtype=dtype)
+                for s in sizes}
+
+    # -- table persistence passthroughs ------------------------------------
+
+    def load_table(self, path) -> None:
+        self.table.merge(TuningTable.load(path))
+
+    def save_table(self, path) -> None:
+        self.table.save(path)
+
+
+_DEFAULT = Selector()
+
+
+def default_selector() -> Selector:
+    """The process-wide selector shared by runtime/moe/train/serve."""
+    return _DEFAULT
+
+
+# ---------------------------------------------------------------------------
+# original API, now backed by the default selector
+# ---------------------------------------------------------------------------
+
+
 def choose(collective: str, topo: Topology, nbytes: int,
-           net: Optional[NetParams] = None) -> Tuple[str, float]:
-    """Return (algo, predicted_seconds) minimizing modeled latency."""
-    net = net or costmodel.tpu_v5e_multipod()
-    fn = costmodel.COST_FNS[collective]
-    best: Tuple[str, float] = ("", float("inf"))
-    for algo in _CANDIDATES[collective]:
-        if algo == "recursive_doubling" and (topo.world & (topo.world - 1)):
-            continue
-        t = fn(algo, topo, nbytes, net).time
-        if t < best[1]:
-            best = (algo, t)
-    return best
+           net: Optional[Union[str, NetParams]] = None) -> Tuple[str, float]:
+    """Return (algo, seconds) minimizing modeled/measured latency."""
+    sel = _DEFAULT.choose(collective, topo, nbytes, net=net)
+    return sel.algo, sel.seconds
 
 
 def tuning_table(collective: str, topo: Topology,
-                 net: Optional[NetParams] = None,
+                 net: Optional[Union[str, NetParams]] = None,
                  sizes: Optional[Tuple[int, ...]] = None) -> Dict[int, str]:
-    """Crossover table: message size -> best algorithm."""
-    sizes = sizes or tuple(2 ** i for i in range(4, 27))
-    return {s: choose(collective, topo, s, net)[0] for s in sizes}
+    """Crossover table: message size -> best algorithm name."""
+    table = _DEFAULT.crossover_table(collective, topo, net=net, sizes=sizes)
+    return {s: sel.algo for s, sel in table.items()}

@@ -94,6 +94,65 @@ def tpu_v5e_multipod() -> NetParams:
                      alpha_intra=1.0e-6, beta_intra=1 / 4.5e10, msg_rate=1e7)
 
 
+def host_cpu() -> NetParams:
+    """Forced host-platform CPU "devices" (dev boxes, CI): every transfer is
+    an in-process memcpy; constants keep relative algorithm ordering sane for
+    calibration runs, absolute times come from measurement."""
+    return NetParams("host_cpu", alpha_inter=5.0e-7, beta_inter=1 / 2.0e10,
+                     alpha_intra=2.0e-7, beta_intra=1 / 5.0e10, msg_rate=1e8)
+
+
+# name -> factory; the string side of Topology.node_link / local_link.
+NET_PRESETS = {
+    "pip": paper_cluster_pip,
+    "posix_shmem": paper_cluster_posix_shmem,
+    "cma": paper_cluster_cma,
+    "openmpi": paper_cluster_openmpi,
+    "pip_mpich": paper_cluster_pip_mpich,
+    "tpu_v5e_ici": tpu_v5e_pod,
+    "tpu_v5e_dcn": tpu_v5e_multipod,
+    "host_cpu": host_cpu,
+}
+
+_DEFAULT_PRESET = "tpu_v5e_dcn"
+
+
+def resolve_net(spec) -> NetParams:
+    """A NetParams from a preset name, a NetParams instance, or None
+    (selector default)."""
+    if spec is None:
+        spec = _DEFAULT_PRESET
+    if isinstance(spec, NetParams):
+        return spec
+    try:
+        return NET_PRESETS[spec]()
+    except KeyError:
+        raise ValueError(f"unknown net preset {spec!r}; "
+                         f"one of {sorted(NET_PRESETS)}") from None
+
+
+def net_for(topo) -> NetParams:
+    """Compose a Topology's per-axis link metadata into one NetParams.
+
+    The inter-level constants (alpha_inter, beta_inter, msg_rate) come from
+    ``topo.node_link``, the intra-level ones (alpha_intra, beta_intra,
+    copy_factor, sync_overhead) from ``topo.local_link``; a missing link
+    falls back to the other level's preset, then to the default preset.
+    """
+    inter = resolve_net(topo.node_link if topo.node_link is not None
+                        else topo.local_link)
+    intra = resolve_net(topo.local_link if topo.local_link is not None
+                        else topo.node_link)
+    if inter == intra:
+        return inter
+    return NetParams(
+        name=f"{inter.name}+{intra.name}",
+        alpha_inter=inter.alpha_inter, beta_inter=inter.beta_inter,
+        alpha_intra=intra.alpha_intra, beta_intra=intra.beta_intra,
+        msg_rate=inter.msg_rate, copy_factor=intra.copy_factor,
+        sync_overhead=max(inter.sync_overhead, intra.sync_overhead))
+
+
 # ---------------------------------------------------------------------------
 
 
@@ -327,10 +386,141 @@ def allreduce_cost(algo: str, topo: Topology, m: int, net: NetParams
     raise ValueError(algo)
 
 
+# ----------------------------- BROADCAST ------------------------------------
+
+
+def broadcast_cost(algo: str, topo: Topology, m: int, net: NetParams,
+                   radix: int | None = None) -> CostBreakdown:
+    """m = bytes delivered to every process (root holds m)."""
+    N, P = topo.n_nodes, topo.n_local
+    M = topo.world
+    t = net.sync_overhead
+    if algo == "pip_mcoll":
+        B = radix or (P + 1)
+        n_rounds, cap = (1, B) if N > 1 else (0, 1)
+        while cap < N:
+            cap *= B
+            n_rounds += 1
+        inter_bytes = 0.0
+        msgs = 0
+        for _ in range(n_rounds):
+            # an active node's P lanes feed up to P child nodes concurrently:
+            # its NIC carries up to P messages of m in the round
+            lanes = min(P, max(1, N - 1))
+            nic = lanes * m
+            inter_bytes += nic
+            msgs += lanes
+            t += _round_time(net, lanes, nic)
+        # intra share of the node copy (PiP: one pass over shared memory)
+        t += _intra_time(net, 1, m)
+        return CostBreakdown(algo, n_rounds, inter_bytes, msgs, 1, m, t)
+    if algo == "binomial":
+        rounds = _log2_rounds(M)
+        inter_bytes = intra_bytes = 0.0
+        ir = ii = msgs = 0
+        S = 2 ** max(0, rounds - 1)
+        while S >= 1 and M > 1:
+            if S < P:
+                ii += 1
+                intra_bytes += m
+                t += _intra_time(net, 1, m)
+            else:
+                ir += 1
+                inter_bytes += m
+                msgs += 1
+                t += _round_time(net, 1, m)
+            S //= 2
+        return CostBreakdown(algo, ir, inter_bytes, msgs, ii, intra_bytes, t)
+    if algo == "xla":
+        # the implemented vendor broadcast is a masked psum (mcoll), i.e. a
+        # full allreduce of the payload: price it as the vendor ring
+        # allreduce so the prior matches what actually runs
+        rounds = 2 * max(0, M - 1)
+        for _ in range(rounds):
+            t += net.alpha_inter / 2 + (m / M) * net.beta_inter
+        return CostBreakdown(algo, rounds, 2 * (M - 1) * m / max(M, 1),
+                             rounds, 0, 0.0, t)
+    raise ValueError(algo)
+
+
+# ------------------------- REDUCE_SCATTER -----------------------------------
+
+
+def reduce_scatter_cost(algo: str, topo: Topology, m: int, net: NetParams
+                        ) -> CostBreakdown:
+    """m = bytes input per process; each process ends with m/M reduced."""
+    N, P = topo.n_nodes, topo.n_local
+    M = topo.world
+    t = net.sync_overhead
+    if algo == "pip_mcoll":
+        # two-level: ring reduce-scatter over nodes first (all P lanes active
+        # on disjoint slices -> big contiguous inter chunks), then over lanes
+        # (pure intra)
+        inter_rounds = max(0, N - 1)
+        inter_bytes = 0.0
+        msgs = 0
+        for _ in range(inter_rounds):
+            nic = P * (m / max(N, 1))
+            inter_bytes += nic
+            msgs += P
+            t += _round_time(net, P, nic)
+        intra_rounds = max(0, P - 1)
+        intra_bytes = intra_rounds * (m / max(N * P, 1))
+        t += _intra_time(net, intra_rounds, intra_bytes)
+        return CostBreakdown(algo, inter_rounds, inter_bytes, msgs,
+                             intra_rounds, intra_bytes, t)
+    if algo == "xla":
+        # flat ring over M ranks: M-1 rounds of m/M (bandwidth optimal)
+        rounds = max(0, M - 1)
+        for _ in range(rounds):
+            t += net.alpha_inter / 2 + (m / M) * net.beta_inter
+        return CostBreakdown(algo, rounds, rounds * m / max(M, 1), rounds,
+                             0, 0.0, t)
+    raise ValueError(algo)
+
+
+# ----------------------------- ALLTOALL -------------------------------------
+
+
+def alltoall_cost(algo: str, topo: Topology, m: int, net: NetParams
+                  ) -> CostBreakdown:
+    """m = bytes sent per process in total (m/M per peer)."""
+    N, P = topo.n_nodes, topo.n_local
+    M = topo.world
+    t = net.sync_overhead
+    if algo == "pip_mcoll":
+        # phase 1 (intra): regroup by destination lane — one shared-memory
+        # pass over the (P-1)/P fraction leaving this lane
+        t += _intra_time(net, 1, m * (P - 1) / max(P, 1))
+        # phase 2 (inter, multi-lane): per-lane all-to-all over nodes; each
+        # of the N-1 rounds ships m/N per lane, P lanes per NIC concurrently
+        inter_rounds = max(0, N - 1)
+        inter_bytes = 0.0
+        msgs = 0
+        for _ in range(inter_rounds):
+            nic = P * (m / max(N, 1))
+            inter_bytes += nic
+            msgs += P
+            t += _round_time(net, P, nic)
+        return CostBreakdown(algo, inter_rounds, inter_bytes, msgs, 1,
+                             m * (P - 1) / max(P, 1), t)
+    if algo == "xla":
+        # flat pairwise exchange: M-1 rounds of m/M each
+        rounds = max(0, M - 1)
+        for _ in range(rounds):
+            t += net.alpha_inter / 2 + (m / M) * net.beta_inter
+        return CostBreakdown(algo, rounds, rounds * m / max(M, 1), rounds,
+                             0, 0.0, t)
+    raise ValueError(algo)
+
+
 COST_FNS = {
     "allgather": allgather_cost,
     "scatter": scatter_cost,
+    "broadcast": broadcast_cost,
     "allreduce": allreduce_cost,
+    "reduce_scatter": reduce_scatter_cost,
+    "alltoall": alltoall_cost,
 }
 
 

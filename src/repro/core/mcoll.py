@@ -48,8 +48,17 @@ from repro.core.topology import Topology
 # ---------------------------------------------------------------------------
 
 
-def _axes(topo: Topology) -> Tuple[str, str]:
-    return (topo.node_axis, topo.local_axis)
+def _axes(topo: Topology) -> Tuple[str, ...]:
+    """The topology's mesh axes with size > 1 (falls back to the local axis
+    so a 1x1 topology still names a valid axis).
+
+    Dropping size-1 axes preserves flat (node, local) rank order, and lets a
+    degenerate topology (e.g. 1 x TP inside the MoE body) name a node axis
+    that does not exist in the enclosing mesh.
+    """
+    axes = tuple(ax for ax, n in ((topo.node_axis, topo.n_nodes),
+                                  (topo.local_axis, topo.n_local)) if n > 1)
+    return axes or (topo.local_axis,)
 
 
 def mo_rounds(n_nodes: int, radix: int) -> Sequence[int]:
@@ -411,9 +420,20 @@ def binomial_broadcast(x, topo: Topology, root: int = 0):
     return R
 
 
+def xla_broadcast(x, topo: Topology, root: int = 0):
+    """Vendor broadcast realized as a psum mask: every copy except the
+    root's is zeroed, then one vendor allreduce propagates the root's value.
+    Real data flow from the root (an identity on the replicated operand
+    would neither reconcile divergent replicas nor time honestly in
+    calibration)."""
+    r = lax.axis_index(_axes(topo))
+    return lax.psum(jnp.where(r == root, x, jnp.zeros_like(x)), _axes(topo))
+
+
 BROADCAST = {
     "pip_mcoll": pip_mcoll_broadcast,
     "binomial": binomial_broadcast,
+    "xla": xla_broadcast,
 }
 
 
@@ -491,9 +511,16 @@ ALLREDUCE = {
 def pip_mcoll_reduce_scatter(x, topo: Topology):
     """Two-level reduce-scatter: over nodes first (big contiguous chunks on
     the inter links, all lanes active), then over lanes. Input per device
-    ``(M*s, ...)``, output ``(s, ...)`` = this rank's reduced chunk."""
-    y = lax.psum_scatter(x, topo.node_axis, scatter_dimension=0, tiled=True)
-    return lax.psum_scatter(y, topo.local_axis, scatter_dimension=0, tiled=True)
+    ``(M*s, ...)``, output ``(s, ...)`` = this rank's reduced chunk.
+    Degenerate levels are skipped (the axis may be absent from the mesh)."""
+    y = x
+    if topo.n_nodes > 1:
+        y = lax.psum_scatter(y, topo.node_axis, scatter_dimension=0,
+                             tiled=True)
+    if topo.n_local > 1:
+        y = lax.psum_scatter(y, topo.local_axis, scatter_dimension=0,
+                             tiled=True)
+    return y
 
 
 def xla_reduce_scatter(x, topo: Topology):
@@ -524,12 +551,16 @@ def pip_mcoll_alltoall(x, topo: Topology):
     v = x.reshape((N, Pl) + s)  # (dst_node, dst_lane, s...)
     # phase 1 (intra): exchange by destination lane; afterwards device (n,l)
     # holds rows destined to lane l of every node, from every source lane.
-    v = lax.all_to_all(v, topo.local_axis, split_axis=1, concat_axis=1,
-                       tiled=False)
+    # Degenerate levels are skipped entirely so the topology may name axes
+    # absent from the mesh (e.g. a 1 x TP topology inside the MoE body).
+    if Pl > 1:
+        v = lax.all_to_all(v, topo.local_axis, split_axis=1, concat_axis=1,
+                           tiled=False)
     # now v: (dst_node, src_lane, s...)
     # phase 2 (inter, multi-lane): exchange by destination node.
-    v = lax.all_to_all(v, topo.node_axis, split_axis=0, concat_axis=0,
-                       tiled=False)
+    if N > 1:
+        v = lax.all_to_all(v, topo.node_axis, split_axis=0, concat_axis=0,
+                           tiled=False)
     # now v: (src_node, src_lane, s...) — already (M, s) in flat order.
     return v.reshape((N * Pl,) + s)
 

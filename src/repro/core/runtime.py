@@ -13,31 +13,46 @@ This layer owns, for the whole codebase:
      one token-threaded dispatch layer, repeated invocations from
      training / serving / benchmark loops reuse both the built callable
      (keyed on mesh + collective + algo + kwargs) and the AOT-compiled
-     executable (additionally keyed on input shape/dtype), so re-trace and
-     re-jit overhead disappears from hot paths and measured numbers.
+     executable (additionally keyed on input shape/dtype). Both caches are
+     LRU-bounded (:func:`set_cache_limits`) so shape-diverse serving
+     traffic cannot grow them without limit; evictions are counted in
+     :class:`CacheStats`.
+  4. **algorithm selection** — ``algo="auto"`` resolves through the
+     selection subsystem (``repro.core.autotune``: cost-model priors +
+     measured calibration) at exec-cache time, keyed on the *resolved*
+     algorithm so auto and explicit callers share cache entries.
 
 Public API:
 
   * :func:`collective` — run a collective through the compiled-callable
-    cache (the supported entry point for hot loops).
+    cache (the supported entry point for hot loops); ``algo="auto"`` picks
+    the algorithm per (topology, collective, dtype, size).
   * :func:`build` — get the cached jitted callable for a collective key.
   * :func:`sharded` — version-portable shard_map for custom bodies (MoE
     expert-parallel dispatch, the manual train step, ad-hoc checks).
-  * :func:`cache_stats` / :func:`clear_cache` — observe / reset the caches.
+  * :func:`calibrate` — timed sweeps feeding the selector's tuning table.
+  * :func:`cache_stats` / :func:`selection_stats` / :func:`clear_cache` —
+    observe / reset the caches and the selector.
 """
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
-from typing import Any, Callable, Dict, Tuple
+import inspect
+import time as _time
+from collections import OrderedDict
+from functools import lru_cache, partial
+from typing import Any, Callable, Dict, Iterable, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.sharding import PartitionSpec as P
 
-from repro.core import compat
+from repro.core import autotune, compat
 from repro.core import mcoll as _mcoll
 from repro.core.topology import Topology
+
+AUTO = "auto"
 
 # ---------------------------------------------------------------------------
 # version-portable shard_map for custom bodies
@@ -112,7 +127,7 @@ def algorithms(collective: str):
 
 
 # ---------------------------------------------------------------------------
-# caches
+# caches (LRU-bounded)
 # ---------------------------------------------------------------------------
 
 
@@ -120,8 +135,10 @@ def algorithms(collective: str):
 class CacheStats:
     build_hits: int = 0
     build_misses: int = 0
+    build_evictions: int = 0
     exec_hits: int = 0
     exec_misses: int = 0
+    exec_evictions: int = 0
 
     @property
     def exec_hit_rate(self) -> float:
@@ -129,8 +146,12 @@ class CacheStats:
         return self.exec_hits / total if total else 0.0
 
 
-_BUILD_CACHE: Dict[tuple, Callable] = {}
-_EXEC_CACHE: Dict[tuple, Callable] = {}
+_DEFAULT_MAX_BUILD = 256
+_DEFAULT_MAX_EXEC = 1024
+
+_BUILD_CACHE: "OrderedDict[tuple, Callable]" = OrderedDict()
+_EXEC_CACHE: "OrderedDict[tuple, Callable]" = OrderedDict()
+_LIMITS = {"build": _DEFAULT_MAX_BUILD, "exec": _DEFAULT_MAX_EXEC}
 _STATS = CacheStats()
 
 
@@ -138,16 +159,93 @@ def cache_stats() -> CacheStats:
     return _STATS
 
 
+def selection_stats() -> autotune.SelectionStats:
+    """Selection counters of the default selector (the one ``algo="auto"``
+    resolves through) — lives next to cache_stats for observability."""
+    return autotune.default_selector().stats
+
+
+def set_cache_limits(max_build: Optional[int] = None,
+                     max_exec: Optional[int] = None) -> Dict[str, int]:
+    """Set LRU bounds (entries) for the build/exec caches; None leaves a
+    bound unchanged. Returns the active limits. Shrinking evicts oldest
+    entries immediately (counted in CacheStats)."""
+    if max_build is not None:
+        _LIMITS["build"] = int(max_build)
+    if max_exec is not None:
+        _LIMITS["exec"] = int(max_exec)
+    _evict(_BUILD_CACHE, "build")
+    _evict(_EXEC_CACHE, "exec")
+    return dict(_LIMITS)
+
+
+def _evict(cache: "OrderedDict", which: str) -> None:
+    limit = max(1, _LIMITS[which])
+    while len(cache) > limit:
+        cache.popitem(last=False)
+        if which == "build":
+            _STATS.build_evictions += 1
+        else:
+            _STATS.exec_evictions += 1
+
+
 def clear_cache() -> None:
     _BUILD_CACHE.clear()
     _EXEC_CACHE.clear()
     # reset in place so handles returned by cache_stats() stay live
-    _STATS.build_hits = _STATS.build_misses = 0
-    _STATS.exec_hits = _STATS.exec_misses = 0
+    _STATS.build_hits = _STATS.build_misses = _STATS.build_evictions = 0
+    _STATS.exec_hits = _STATS.exec_misses = _STATS.exec_evictions = 0
 
 
 def _kw_key(kw: Dict[str, Any]) -> tuple:
     return tuple(sorted(kw.items()))
+
+
+# ---------------------------------------------------------------------------
+# algorithm resolution (algo="auto")
+# ---------------------------------------------------------------------------
+
+
+def _message_bytes(collective: str, topo: Topology, x) -> int:
+    """Per-process message size in the cost model's conventions, from the
+    *global* runtime operand: broadcast's operand is the per-process payload
+    itself; every other collective's operand carries all ``world`` shards."""
+    if collective == "broadcast":
+        return max(1, int(x.nbytes))
+    return max(1, int(x.nbytes) // topo.world)
+
+
+@lru_cache(maxsize=None)  # one small frozenset per algorithm function
+def _accepted_params(fn: Callable) -> frozenset:
+    return frozenset(inspect.signature(fn).parameters)
+
+
+def _filter_kwargs(fn: Callable, kw: Dict[str, Any]) -> Dict[str, Any]:
+    """Keep only kwargs the algorithm function accepts (an auto-resolved
+    algorithm must not choke on another algorithm's tuning knobs)."""
+    if not kw:
+        return kw
+    params = _accepted_params(fn)
+    return {k: v for k, v in kw.items() if k in params}
+
+
+def resolve_algo(topo: Topology, collective: str, algo: str, x,
+                 kw: Optional[Dict[str, Any]] = None
+                 ) -> Tuple[str, Dict[str, Any]]:
+    """Resolve ``algo`` ("auto" -> selector choice) for operand ``x``.
+
+    Returns (resolved_algo, filtered_kwargs). Explicit algorithm names pass
+    through untouched, so exec-cache keys are shared between auto and
+    explicit callers of the same algorithm.
+    """
+    kw = dict(kw or {})
+    if algo != AUTO:
+        return algo, kw
+    nbytes = _message_bytes(collective, topo, x)
+    sel = autotune.default_selector().choose(
+        collective, topo, nbytes, dtype=str(x.dtype))
+    return sel.algo, _filter_kwargs(_mcoll.algorithm(collective, sel.algo),
+                                    kw)
 
 
 # ---------------------------------------------------------------------------
@@ -187,16 +285,21 @@ def build(mesh, topo: Topology, collective: str, algo: str, *,
     if collective not in _WIRING:
         raise ValueError(f"unknown collective {collective!r}; "
                          f"one of {collectives()}")
+    if algo == AUTO:
+        raise ValueError("algo='auto' resolves per input size/dtype; call "
+                         "runtime.collective(...) (or resolve_algo first)")
     # Mesh hashes/compares by axis names + device assignment, so it keys
     # the cache directly (no per-call O(n_devices) key construction)
     key = (mesh, topo, collective, algo, stacked, jit, _kw_key(kw))
     hit = _BUILD_CACHE.get(key)
     if hit is not None:
         _STATS.build_hits += 1
+        _BUILD_CACHE.move_to_end(key)
         return hit
     _STATS.build_misses += 1
     built = _construct(mesh, topo, collective, algo, stacked, jit, **kw)
     _BUILD_CACHE[key] = built
+    _evict(_BUILD_CACHE, "build")
     return built
 
 
@@ -208,16 +311,104 @@ def collective(mesh, topo: Topology, name: str, algo: str, x, *,
     cached on (mesh, collective, algo, input shape/dtype, kwargs), so every
     invocation after the first with an identical key skips trace, lowering
     and compilation entirely.
+
+    ``algo="auto"`` resolves through the selection subsystem (measured
+    tuning table when calibrated, cost-model prior otherwise) before the
+    cache lookup — the key carries the *resolved* algorithm, so auto and
+    explicit callers share compiled executables.
     """
+    if name not in _WIRING:  # before selector resolution, for the friendly
+        raise ValueError(f"unknown collective {name!r}; "  # error either way
+                         f"one of {collectives()}")
     x = jnp.asarray(x)
+    algo, kw = resolve_algo(topo, name, algo, x, kw)
     key = (mesh, topo, name, algo, stacked, _kw_key(kw),
            (tuple(x.shape), str(x.dtype)))
     compiled = _EXEC_CACHE.get(key)
     if compiled is not None:
         _STATS.exec_hits += 1
+        _EXEC_CACHE.move_to_end(key)
     else:
         _STATS.exec_misses += 1
         jitted = build(mesh, topo, name, algo, stacked=stacked, jit=True, **kw)
         compiled = jitted.lower(x).compile()
         _EXEC_CACHE[key] = compiled
+        _evict(_EXEC_CACHE, "exec")
     return compiled(x)
+
+
+# ---------------------------------------------------------------------------
+# calibration: measured sweeps -> the selector's tuning table
+# ---------------------------------------------------------------------------
+
+
+def example_input(collective: str, topo: Topology, nbytes: int,
+                  dtype=jnp.float32):
+    """A global operand for ``collective`` sized so the per-process message
+    is ``nbytes`` (the cost model's size convention)."""
+    M = topo.world
+    itemsize = jnp.dtype(dtype).itemsize
+    elems = max(1, nbytes // itemsize)
+    if collective == "allgather":
+        return jnp.arange(M * elems, dtype=dtype)
+    if collective == "scatter":
+        return jnp.arange(M * elems, dtype=dtype)
+    if collective == "broadcast":
+        return jnp.arange(elems, dtype=dtype)
+    if collective == "allreduce":
+        return (jnp.arange(M * elems, dtype=dtype) % 13).reshape(M, elems)
+    if collective == "reduce_scatter":
+        s = max(1, elems // M)
+        return (jnp.arange(M * M * s, dtype=dtype) % 11).reshape(M, M * s)
+    if collective == "alltoall":
+        s = max(1, elems // M)
+        return jnp.arange(M * M * s, dtype=dtype).reshape(M, M, s)
+    raise ValueError(collective)
+
+
+@dataclasses.dataclass(frozen=True)
+class CalibrationRow:
+    collective: str
+    algo: str
+    nbytes: int
+    dtype: str
+    seconds: float
+
+
+def calibrate(mesh, topo: Topology,
+              names: Optional[Iterable[str]] = None,
+              sizes: Iterable[int] = (256, 4096, 65536),
+              dtype=jnp.float32, iters: int = 10,
+              selector: Optional[autotune.Selector] = None,
+              path=None) -> List[CalibrationRow]:
+    """Timed sweeps of every candidate algorithm x size, through the same
+    compiled-callable path hot loops use, recorded into the selector's
+    tuning table (and saved to ``path`` as JSON when given).
+
+    After calibration, ``algo="auto"`` on this (topology, collective, dtype,
+    size bucket) resolves from measurement instead of the cost-model prior.
+    Calibrate with the same topology link metadata consumers use (e.g. both
+    via ``Topology.from_mesh``) — the tuning-table key includes the links.
+    """
+    sel = selector or autotune.default_selector()
+    rows: List[CalibrationRow] = []
+    for name in (tuple(names) if names else collectives()):
+        for nbytes in sizes:
+            x = example_input(name, topo, int(nbytes), dtype)
+            for algo in autotune.candidates(name, topo):
+                jax.block_until_ready(
+                    collective(mesh, topo, name, algo, x))  # compile
+                samples = []
+                for _ in range(max(1, iters)):
+                    t0 = _time.perf_counter()
+                    jax.block_until_ready(
+                        collective(mesh, topo, name, algo, x))
+                    samples.append(_time.perf_counter() - t0)
+                sec = float(np.median(samples))
+                sel.table.record(topo, name, str(jnp.dtype(dtype)),
+                                 int(nbytes), algo, sec)
+                rows.append(CalibrationRow(name, algo, int(nbytes),
+                                           str(jnp.dtype(dtype)), sec))
+    if path is not None:
+        sel.table.save(path)
+    return rows

@@ -5,11 +5,54 @@ is (inter-group axis × intra-group axis): e.g. ("pod", chips-per-pod) across
 DCN, or ("node-group", chips) across a long ICI axis. `Topology` names the
 two mesh axes the collective algorithms operate over; sizes are taken from
 the enclosing `shard_map` mesh at trace time.
+
+A topology additionally carries *link metadata* per level: ``node_link``
+describes the inter-group fabric and ``local_link`` the intra-group one.
+Each is either a :class:`repro.core.costmodel.NetParams` preset name (e.g.
+``"tpu_v5e_dcn"``) or a ``NetParams`` instance override. The algorithm
+selector (``repro.core.autotune``) composes the two into one cost-model
+parameterisation via ``costmodel.net_for(topo)``, so selection no longer
+assumes one hardcoded network. ``from_mesh`` auto-derives the links from
+the mesh's devices when not given explicitly.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Tuple
+from typing import Optional, Tuple
+
+
+def derive_link(mesh, axis: str, level: str) -> str:
+    """Best-effort link-class name for one mesh axis.
+
+    Heuristics (coarse by design — overridable per Topology):
+      * CPU host devices (forced device counts, dev boxes)  -> "host_cpu"
+      * an axis that crosses process/slice boundaries        -> "tpu_v5e_dcn"
+      * otherwise (single-slice accelerator axis, including
+        degenerate size-1 axes, which carry no traffic)      -> "tpu_v5e_ici"
+    """
+    try:
+        dev0 = mesh.devices.flat[0]
+    except (AttributeError, IndexError):
+        return "host_cpu"
+    if getattr(dev0, "platform", "cpu") == "cpu":
+        return "host_cpu"
+    del level  # both levels use the same heuristics; kept for call-site clarity
+    try:
+        idx = list(mesh.axis_names).index(axis)
+        if mesh.devices.shape[idx] == 1:
+            return "tpu_v5e_ici"  # degenerate axis: no traffic, cheap link
+        # walk the axis at the origin of all other axes
+        sel: list = [0] * mesh.devices.ndim
+        sel[idx] = slice(None)
+        lane = mesh.devices[tuple(sel)]
+        for field in ("slice_index", "process_index"):
+            vals = {getattr(d, field, None) for d in lane.flat}
+            vals.discard(None)
+            if len(vals) > 1:
+                return "tpu_v5e_dcn"
+    except (KeyError, ValueError, TypeError):
+        pass
+    return "tpu_v5e_ici"
 
 
 @dataclasses.dataclass(frozen=True)
@@ -21,12 +64,17 @@ class Topology:
       n_local: number of devices per group along the intra ("local") axis.
       node_axis: mesh axis name for the inter-group dimension.
       local_axis: mesh axis name for the intra-group dimension.
+      node_link: link metadata for the inter level — a NetParams preset name
+        or a NetParams instance (None = selector default).
+      local_link: link metadata for the intra level, same conventions.
     """
 
     n_nodes: int
     n_local: int
     node_axis: str = "node"
     local_axis: str = "local"
+    node_link: Optional[object] = None
+    local_link: Optional[object] = None
 
     def __post_init__(self):
         if self.n_nodes < 1 or self.n_local < 1:
@@ -40,6 +88,24 @@ class Topology:
     def axes(self) -> Tuple[str, str]:
         return (self.node_axis, self.local_axis)
 
+    @property
+    def link_names(self) -> Tuple[str, str]:
+        """(inter, intra) link names — stable key material for tuning tables."""
+        def name(link, default):
+            if link is None:
+                return default
+            return getattr(link, "name", None) or str(link)
+        return (name(self.node_link, "default"),
+                name(self.local_link, "default"))
+
+    def with_links(self, node_link=None, local_link=None) -> "Topology":
+        """Copy with link metadata filled in (None leaves a field as is)."""
+        return dataclasses.replace(
+            self,
+            node_link=node_link if node_link is not None else self.node_link,
+            local_link=(local_link if local_link is not None
+                        else self.local_link))
+
     def flat(self, node: int, local: int) -> int:
         """Flat device index under row-major (node, local) ordering.
 
@@ -48,10 +114,20 @@ class Topology:
         return node * self.n_local + local
 
     @classmethod
-    def from_mesh(cls, mesh, node_axis: str = "node", local_axis: str = "local"):
+    def from_mesh(cls, mesh, node_axis: str = "node", local_axis: str = "local",
+                  node_link: Optional[object] = None,
+                  local_link: Optional[object] = None):
+        """Build a Topology from a mesh, auto-deriving link metadata from the
+        mesh's devices when not passed explicitly."""
+        if node_link is None:
+            node_link = derive_link(mesh, node_axis, level="inter")
+        if local_link is None:
+            local_link = derive_link(mesh, local_axis, level="intra")
         return cls(
             n_nodes=mesh.shape[node_axis],
             n_local=mesh.shape[local_axis],
             node_axis=node_axis,
             local_axis=local_axis,
+            node_link=node_link,
+            local_link=local_link,
         )

@@ -11,6 +11,12 @@ each tp rank routes a disjoint 1/TP slice of the local tokens, ships them to
 expert shards with a fixed per-peer capacity (dropped tokens get zero
 combine-weight, standard token-dropping semantics), computes with ragged_dot,
 and ships results back.
+
+The dispatch/combine all-to-alls are not hardcoded to one primitive: the
+algorithm is resolved per message size through the selection subsystem
+(``core.autotune``, the same selector ``runtime.collective(algo="auto")``
+uses), over a (1 x TP) topology whose link metadata is derived from the
+mesh. The resolved ``core.mcoll`` algorithm runs inside the shard_map body.
 """
 from __future__ import annotations
 
@@ -20,7 +26,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
-from repro.core import runtime
+from repro.core import autotune, mcoll, runtime
+from repro.core.topology import Topology, derive_link
 from repro.layers import common
 from repro.layers.common import Accum
 
@@ -90,7 +97,16 @@ def _moe_local(p, tokens, cfg):
     return out.sum(1), _aux_loss(probs, ids, moe)
 
 
-def _moe_ep_shard(p_router, wg, wu, wd, x, cfg, tp_axis, tp_size):
+def _ep_capacity(n_tokens: int, tp_size: int, moe) -> int:
+    """Per-peer dispatch capacity for `n_tokens` locally routed tokens —
+    shared by the shard body and the (outside-shard_map) algorithm
+    selection so both see the same message shape."""
+    t = -(-n_tokens // tp_size)
+    return max(1, int(-(-t * moe.top_k // tp_size) * moe.capacity_factor))
+
+
+def _moe_ep_shard(p_router, wg, wu, wd, x, cfg, tp_axis, tp_size, a2a_algo,
+                  tp_topo):
     """Runs inside shard_map. x: (B_l, S, D) replicated over tp."""
     moe = cfg.moe
     B, S, D = x.shape
@@ -111,7 +127,7 @@ def _moe_ep_shard(p_router, wg, wu, wd, x, cfg, tp_axis, tp_size):
     flat_ids = ids.reshape(-1)                      # (t*k,)
     flat_w = w.reshape(-1).astype(Accum)
     dest = flat_ids // E_local                      # target tp peer
-    cap = max(1, int(-(-t * k // tp_size) * moe.capacity_factor))
+    cap = _ep_capacity(T, tp_size, moe)
     onehot = jax.nn.one_hot(dest, tp_size, dtype=jnp.int32)
     pos = (jnp.cumsum(onehot, axis=0) - 1)[jnp.arange(t * k), dest]
     valid = pos < cap
@@ -125,8 +141,8 @@ def _moe_ep_shard(p_router, wg, wu, wd, x, cfg, tp_axis, tp_size):
     send_ok = jnp.zeros((tp_size, cap), jnp.bool_).at[dest, pos_c].set(
         valid, mode="drop")
 
-    a2a = partial(jax.lax.all_to_all, axis_name=tp_axis, split_axis=0,
-                  concat_axis=0, tiled=False)
+    # dispatch/combine exchanges run the selector-resolved mcoll algorithm
+    a2a = partial(mcoll.algorithm("alltoall", a2a_algo), topo=tp_topo)
     rx = a2a(send_x).reshape(tp_size * cap, D)
     re = a2a(send_eid).reshape(tp_size * cap)
     rok = a2a(send_ok).reshape(tp_size * cap)
@@ -160,9 +176,23 @@ def apply(p, x, cfg, rules=None, mesh=None):
         return y.reshape(B, S, D), jnp.full((B, S), aux, Accum)
 
     batch_axes = tuple(a for a in (rules.batch or ()) if a in mesh.axis_names)
+
+    # resolve the dispatch/combine algorithm through the selection subsystem
+    # for the actual per-device exchange size (tp_size x capacity x D)
+    bshard = 1
+    for a in batch_axes:
+        bshard *= mesh.shape[a]
+    cap = _ep_capacity(-(-B // bshard) * S, tp_size, cfg.moe)
+    tp_topo = Topology(1, tp_size, local_axis=tp,
+                       local_link=derive_link(mesh, tp, "intra"))
+    nbytes = tp_size * cap * D * x.dtype.itemsize
+    a2a_algo = autotune.default_selector().choose(
+        "alltoall", tp_topo, nbytes, dtype=str(x.dtype)).algo
+
     xspec = P(batch_axes if batch_axes else None, None, None)
     fn = runtime.sharded(
-        partial(_moe_ep_shard, cfg=cfg, tp_axis=tp, tp_size=tp_size),
+        partial(_moe_ep_shard, cfg=cfg, tp_axis=tp, tp_size=tp_size,
+                a2a_algo=a2a_algo, tp_topo=tp_topo),
         mesh,
         in_specs=(P(None, None), P(tp, None, None), P(tp, None, None),
                   P(tp, None, None), xspec),

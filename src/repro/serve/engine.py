@@ -10,8 +10,10 @@ Serving loop structure (vLLM-style, reduced):
     entry (continuous batching).
 
 Token-level sync across DP replicas (multi-host) is a small-message
-collective — the paper's regime; on the production mesh that path uses
-mcoll.pip_mcoll broadcast/allgather (see DESIGN.md §4)."""
+collective — the paper's regime. When the engine is given a mesh/topology
+it syncs each tick's sampled tokens through ``runtime.collective`` with the
+algorithm resolved by the selection subsystem (``algo="auto"``: cost-model
+prior until a calibration table is loaded, measured table after)."""
 from __future__ import annotations
 
 import dataclasses
@@ -21,6 +23,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import runtime
+from repro.core.topology import Topology
 from repro.models import decoder
 from repro.models.decoder import RunFlags
 
@@ -35,12 +39,20 @@ class Request:
 
 class Engine:
     def __init__(self, params, cfg, max_batch: int = 8, max_len: int = 256,
-                 flags: RunFlags = RunFlags(), greedy: bool = True):
+                 flags: RunFlags = RunFlags(), greedy: bool = True,
+                 mesh=None, topo: Optional[Topology] = None,
+                 sync_algo: str = "auto"):
         self.params = params
         self.cfg = cfg
         self.max_batch = max_batch
         self.max_len = max_len
         self.flags = flags
+        # DP replica token sync: algorithm resolved per tick payload by the
+        # selection subsystem (sync_algo="auto"), or pinned explicitly.
+        self.mesh = mesh
+        self.topo = (topo if topo is not None else
+                     (Topology.from_mesh(mesh) if mesh is not None else None))
+        self.sync_algo = sync_algo
         self.caches = decoder.init_cache(cfg, max_batch, max_len)
         self.lengths = np.zeros(max_batch, np.int32)
         self.active: List[Optional[Request]] = [None] * max_batch
@@ -58,6 +70,18 @@ class Engine:
 
         self._prefill = jax.jit(prefill)
         self._decode = jax.jit(decode, donate_argnums=(1,))
+
+    def _sync_tokens(self, nxt: np.ndarray) -> np.ndarray:
+        """Cross-replica agreement on each slot's next token (greedy decode
+        is deterministic, but sampled decode diverges across hosts without
+        this). Small-message broadcast — the paper's latency-bound regime —
+        through the runtime's compiled-callable cache."""
+        if self.mesh is None or self.topo.world == 1:
+            return nxt  # nothing to reconcile; skip the per-token dispatch
+        out = runtime.collective(self.mesh, self.topo, "broadcast",
+                                 self.sync_algo,
+                                 jnp.asarray(nxt, jnp.int32))
+        return np.asarray(out[0])
 
     # NOTE: slot-at-a-time prefill keeps the demo simple; the fused decode
     # step is the performance-relevant path.
@@ -97,7 +121,7 @@ class Engine:
                     toks[slot, 0] = req.out_tokens[-1]
             logits, self.caches = self._decode(
                 self.params, self.caches, jnp.asarray(toks), jnp.int32(idx))
-            nxt = np.asarray(logits[:, 0].argmax(-1))
+            nxt = self._sync_tokens(np.asarray(logits[:, 0].argmax(-1)))
             for slot, req in enumerate(self.active):
                 if req is None:
                     continue

@@ -7,37 +7,59 @@ metric reductions, and (with int8 compression) the compressed-gradient
 exchange across the slow pod axis. This module builds a shard_map'd step in
 which
 
-  - gradients are synced with mcoll.allreduce (algo selectable:
-    pip_mcoll two-level multi-lane | flat recursive doubling | xla psum),
+  - gradients are synced with an mcoll allreduce whose algorithm is
+    resolved per payload size through the selection subsystem
+    (``algo="auto"``, the default: pip_mcoll two-level multi-lane for
+    latency-bound sizes, xla/ring for bandwidth-bound ones, per the
+    topology's link metadata) — or pinned explicitly via ``algo=``,
   - optional int8 block-quantized compression with error feedback halves
     the wire bytes across the `node` (slow) axis,
-  - scalar metrics use the pip_mcoll path explicitly (the paper's regime).
+  - scalar metrics run through the same selection (small-message regime —
+    the paper's headline case).
 
 The pjit path (train.step) remains the default for the dry-run; this path
 is validated against it on multi-device CPU meshes in
-tests/test_manual_step.py (same loss/grads to fp32 tolerance).
+tests/checks/manual_step_check.py (same loss/grads to fp32 tolerance).
 """
 from __future__ import annotations
-
-from functools import partial
-from typing import Optional
 
 import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
-from repro.core import mcoll, runtime
+from repro.core import autotune, costmodel, mcoll, runtime
 from repro.core.topology import Topology
 from repro.optim import adamw, compress
 from repro.train.step import TrainConfig, loss_fn
 
 
+def _make_sync(topo: Topology, algo: str):
+    """Mean-allreduce for one payload: ``algo="auto"`` resolves through the
+    default selector at trace time (shapes are static, so selection is a
+    Python-level decision baked into the jitted step)."""
+    net = costmodel.net_for(topo)
+
+    def sync_mean(v):
+        g = jnp.asarray(v, jnp.float32).reshape(-1)
+        name = algo
+        if name == "auto":
+            name = autotune.default_selector().choose(
+                "allreduce", topo, g.size * g.dtype.itemsize, net=net,
+                dtype=str(g.dtype)).algo
+        out = mcoll.algorithm("allreduce", name)(g, topo) / topo.world
+        return out.reshape(jnp.shape(v))
+
+    return sync_mean
+
+
 def make_manual_train_step(cfg, tcfg: TrainConfig, mesh, topo: Topology,
-                           algo: str = "pip_mcoll",
+                           algo: str = "auto",
                            compress_grads: bool = False):
     """Data-parallel over topo.axes (node=slow/pod axis, local=fast axis).
-    Params replicated; batch sharded over both axes."""
-    ax = (topo.node_axis, topo.local_axis)
+    Params replicated; batch sharded over both axes. ``algo`` names an
+    allreduce algorithm from core.mcoll, or "auto" (default) to let the
+    selection subsystem pick one per payload size."""
+    sync_mean = _make_sync(topo, algo)
 
     def step(params, opt_state, err_state, batch):
         (loss, metrics), grads = jax.value_and_grad(
@@ -45,35 +67,24 @@ def make_manual_train_step(cfg, tcfg: TrainConfig, mesh, topo: Topology,
 
         if compress_grads:
             comp, err_state = compress.compress_tree(grads, err_state)
-            qs, scales, treedef = comp
             # int8 payloads sum correctly only after dequant: allreduce the
             # dequantized fp32 (scales ride along) — wire bytes modeled by
             # the cost layer; semantics validated in tests.
-            deq = compress.decompress_tree(comp, grads)
-            grads = deq
-        grads = jax.tree.map(
-            lambda g: mcoll.pip_mcoll_allreduce(
-                g.astype(jnp.float32).reshape(-1), topo).reshape(g.shape)
-            / topo.world if algo == "pip_mcoll" else
-            jax.lax.pmean(g, ax), grads)
-        loss = mcoll.pip_mcoll_allreduce(
-            loss.reshape(1), topo)[0] / topo.world \
-            if algo == "pip_mcoll" else jax.lax.pmean(loss, ax)
+            grads = compress.decompress_tree(comp, grads)
+        grads = jax.tree.map(sync_mean, grads)
+        loss = sync_mean(loss.reshape(1))[0]
 
         new_params, new_opt, om = adamw.update(params, grads, opt_state,
                                                tcfg.optimizer)
         metrics = dict(metrics, **om, loss=loss)
-        metrics = {k: (mcoll.pip_mcoll_allreduce(
-            jnp.asarray(v, jnp.float32).reshape(1), topo)[0] / topo.world
-            if jnp.asarray(v).ndim == 0 else v)
-            for k, v in metrics.items()}
+        metrics = {k: (sync_mean(jnp.asarray(v, jnp.float32).reshape(1))[0]
+                       if jnp.asarray(v).ndim == 0 else v)
+                   for k, v in metrics.items()}
         return new_params, new_opt, err_state, metrics
-
-    batch_spec = jax.tree.map(lambda _: P(ax), {"tokens": 0, "labels": 0})
 
     mapped = runtime.sharded(
         step, mesh,
-        in_specs=(P(), P(), P(), P(ax)),
+        in_specs=(P(), P(), P(), P(topo.axes)),
         out_specs=(P(), P(), P(), P()),
         check=False)
     return jax.jit(mapped, donate_argnums=(0, 1, 2))

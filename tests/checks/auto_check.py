@@ -1,0 +1,77 @@
+"""algo="auto" end-to-end on a real (N, P) CPU mesh.
+
+Usage: auto_check.py N P   (run under XLA_FLAGS device_count = N*P)
+
+Asserts, for all six collectives:
+  1. runtime.collective(..., algo="auto") resolves through the selector
+     (prior source before calibration) and returns bit-identical results to
+     every explicit algorithm;
+  2. after runtime.calibrate, auto resolves from the measured table and
+     still returns correct results;
+  3. auto and explicit callers share exec-cache entries (auto re-invocation
+     is a cache hit, not a fresh compile).
+"""
+import sys
+
+N, P = int(sys.argv[1]), int(sys.argv[2])
+
+import jax
+import numpy as np
+
+from repro.core import autotune, runtime
+from repro.core.topology import Topology
+
+mesh = jax.make_mesh((N, P), ("node", "local"))
+topo = Topology.from_mesh(mesh)
+assert topo.link_names == ("host_cpu", "host_cpu"), topo.link_names
+
+checks = 0
+
+# --- 1. auto == every explicit algorithm, prior-sourced -------------------
+for name in runtime.collectives():
+    for nbytes in (64, 4096):
+        x = runtime.example_input(name, topo, nbytes)
+        outs = {}
+        for algo in autotune.candidates(name, topo):
+            outs[algo] = np.asarray(
+                runtime.collective(mesh, topo, name, algo, x))
+        ref_algo = sorted(outs)[0]
+        for algo, out in outs.items():
+            if name == "allreduce":  # reduction order: fp tolerance
+                np.testing.assert_allclose(out, outs[ref_algo], rtol=1e-6)
+            else:
+                np.testing.assert_array_equal(out, outs[ref_algo],
+                                              err_msg=f"{name}/{algo}")
+        before = runtime.selection_stats().total
+        auto_out = np.asarray(
+            runtime.collective(mesh, topo, name, "auto", x))
+        sstats = runtime.selection_stats()
+        assert sstats.total == before + 1
+        np.testing.assert_allclose(auto_out, outs[ref_algo], rtol=1e-6)
+        checks += 1
+assert runtime.selection_stats().measured == 0, "no calibration yet"
+
+# --- 3. auto shares the exec cache with explicit callers ------------------
+runtime.clear_cache()
+x = runtime.example_input("allgather", topo, 64)
+resolved, _ = runtime.resolve_algo(topo, "allgather", "auto", x)
+runtime.collective(mesh, topo, "allgather", resolved, x)   # miss (explicit)
+runtime.collective(mesh, topo, "allgather", "auto", x)     # hit (auto)
+s = runtime.cache_stats()
+assert s.exec_misses == 1 and s.exec_hits == 1, s
+checks += 1
+
+# --- 2. calibration flips resolution to the measured table ----------------
+runtime.calibrate(mesh, topo, sizes=(64, 4096), iters=3)
+for name in runtime.collectives():
+    x = runtime.example_input(name, topo, 64)
+    before = runtime.selection_stats().measured
+    out = np.asarray(runtime.collective(mesh, topo, name, "auto", x))
+    assert runtime.selection_stats().measured == before + 1, name
+    assert np.isfinite(out.astype(np.float64)).all()
+    checks += 1
+sel = autotune.default_selector()
+s = sel.choose("allgather", topo, 64)
+assert s.source == "measured", s
+
+print(f"auto_check N={N} P={P}: {checks} checks OK")

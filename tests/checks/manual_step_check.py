@@ -48,6 +48,18 @@ diffs = jax.tree.map(lambda a, b: float(jnp.abs(
 worst = max(jax.tree.leaves(diffs))
 assert worst < 5e-2, worst  # bf16 params; identical update within rounding
 
+# algo="auto": the selector resolves an allreduce per payload size at trace
+# time; the step must match the reference like the pinned variant does
+params_a = decoder.init(key, cfg)
+opt_a = adamw.init(params_a, ocfg)
+step_auto = manual_step.make_manual_train_step(cfg, tcfg, mesh, topo)
+err_a = manual_step.init_error_state(params_a, False)
+_, _, _, auto_m = step_auto(params_a, opt_a, err_a, batch)
+np.testing.assert_allclose(float(auto_m["loss"]), float(ref_m["loss"]),
+                           rtol=1e-5)
+from repro.core import runtime as _rt
+assert _rt.selection_stats().total > 0, "auto step never hit the selector"
+
 # compressed variant: loss must still go DOWN over a few steps
 # (params/opt were donated above -- rebuild fresh copies)
 params = decoder.init(key, cfg)

@@ -1,0 +1,226 @@
+"""Selection subsystem: candidate coverage, crossover behavior, measured
+calibration beating priors, tuning-table persistence, topology link
+metadata, and the 8-device algo="auto" equivalence check."""
+import jax
+import numpy as np
+import pytest
+
+from repro.core import autotune, costmodel, mcoll
+from repro.core.autotune import Selector, TuningTable
+from repro.core.topology import Topology, derive_link
+
+from subproc import run_check
+
+SIX = ("allgather", "scatter", "broadcast", "allreduce", "reduce_scatter",
+       "alltoall")
+
+# algorithms whose latency scales with round count (log-ish), vs the
+# bandwidth-optimal ones that win at large sizes
+LOW_ROUND = {"pip_mcoll", "recursive_doubling", "bruck", "binomial",
+             "single_leader", "linear"}
+BANDWIDTH = {"xla", "ring"}
+
+
+# ---------------------------------------------------------------------------
+# candidate registry: full coverage, no drift from mcoll
+# ---------------------------------------------------------------------------
+
+
+def test_candidates_cover_every_implemented_algorithm():
+    """Regression for the old _CANDIDATES gaps (bruck missing, three
+    collectives absent): candidates == the mcoll registry."""
+    for coll in SIX:
+        assert autotune.candidates(coll) == tuple(mcoll.algorithms(coll))
+
+
+def test_cost_fns_cover_every_candidate():
+    """Every registered algorithm has a cost-model branch."""
+    topo = Topology(4, 4)
+    for coll in SIX:
+        fn = costmodel.COST_FNS[coll]
+        for algo in autotune.candidates(coll, topo):
+            c = fn(algo, topo, 1024, costmodel.tpu_v5e_pod())
+            assert c.time > 0, (coll, algo)
+
+
+def test_recursive_doubling_filtered_on_non_pow2():
+    assert "recursive_doubling" not in autotune.candidates(
+        "allgather", Topology(3, 2))
+    assert "recursive_doubling" in autotune.candidates(
+        "allgather", Topology(4, 2))
+
+
+# ---------------------------------------------------------------------------
+# crossover: small -> low-round, large -> bandwidth-optimal, no oscillation
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("coll", SIX)
+def test_crossover_monotone_small_latency_large_bandwidth(coll):
+    topo = Topology(16, 16, node_link="tpu_v5e_ici", local_link="tpu_v5e_ici")
+    sel = Selector()
+    table = sel.crossover_table(coll, topo)
+    sizes = sorted(table)
+    assert table[sizes[0]].algo in LOW_ROUND, (coll, table[sizes[0]])
+    assert table[sizes[-1]].algo in (BANDWIDTH if coll != "scatter"
+                                     else LOW_ROUND | BANDWIDTH), coll
+    # monotone: once a bandwidth-optimal algorithm wins, larger sizes never
+    # fall back to a latency-bound one
+    seen_bandwidth = False
+    for s in sizes:
+        if table[s].algo in BANDWIDTH:
+            seen_bandwidth = True
+        elif seen_bandwidth:
+            pytest.fail(f"{coll}: crossover oscillated at {s}B "
+                        f"-> {table[s].algo}")
+
+
+def test_choose_small_prefers_multiobject_on_paper_cluster():
+    topo = Topology(128, 18, node_link="pip", local_link="pip")
+    sel = Selector()
+    s = sel.choose("allgather", topo, 64)
+    assert s.algo == "pip_mcoll" and s.source == "prior"
+
+
+# ---------------------------------------------------------------------------
+# measured calibration beats the prior; stats track sources
+# ---------------------------------------------------------------------------
+
+
+def test_measured_entry_overrides_prior_and_counts():
+    topo = Topology(4, 2)
+    sel = Selector()
+    prior = sel.choose("allgather", topo, 256)
+    assert prior.source == "prior"
+    # fake calibration: "ring" measured fastest in the 256B bucket
+    for algo in autotune.candidates("allgather", topo):
+        sel.table.record(topo, "allgather", "float32", 256, algo,
+                         1e-6 if algo == "ring" else 1e-3)
+    s = sel.choose("allgather", topo, 200)  # same bucket (pow2 ceiling)
+    assert s.algo == "ring" and s.source == "measured"
+    # other dtypes / buckets still fall back to the prior
+    assert sel.choose("allgather", topo, 1 << 20).source == "prior"
+    assert sel.choose("allgather", topo, 256, dtype="bfloat16").source == \
+        "prior"
+    assert sel.stats.measured == 1 and sel.stats.prior == 3
+    assert 0 < sel.stats.measured_fraction < 1
+    assert sel.stats.by_choice[("allgather", "ring")] == 1
+
+
+def test_measured_entry_ignored_when_infeasible():
+    """A measurement for an algorithm that is infeasible on this topology
+    (recursive_doubling on non-pow2) must not be selected."""
+    topo = Topology(3, 2)
+    sel = Selector()
+    sel.table.record(topo, "allreduce", "float32", 256,
+                     "recursive_doubling", 1e-9)
+    sel.table.record(topo, "allreduce", "float32", 256, "xla", 1e-3)
+    s = sel.choose("allreduce", topo, 256)
+    assert s.algo == "xla" and s.source == "measured"
+
+
+# ---------------------------------------------------------------------------
+# tuning table persistence
+# ---------------------------------------------------------------------------
+
+
+def test_tuning_table_json_round_trip(tmp_path):
+    topo = Topology(4, 2, node_link="tpu_v5e_dcn", local_link="tpu_v5e_ici")
+    t = TuningTable()
+    t.record(topo, "allgather", "float32", 256, "pip_mcoll", 1.5e-6)
+    t.record(topo, "allgather", "float32", 200, "ring", 2.5e-6)  # same bucket
+    t.record(topo, "alltoall", "bfloat16", 4096, "xla", 9e-6)
+    path = tmp_path / "table.json"
+    t.save(path)
+    t2 = TuningTable.load(path)
+    assert t2.entries == t.entries
+    assert len(t2) == len(t) == 3
+    assert t2.lookup(topo, "allgather", "float32", 250) == {
+        "pip_mcoll": 1.5e-6, "ring": 2.5e-6}
+    # a selector loading the file resolves from measurement
+    sel = Selector()
+    sel.load_table(path)
+    assert sel.choose("allgather", topo, 256).source == "measured"
+
+
+def test_tuning_table_version_gate(tmp_path):
+    with pytest.raises(ValueError):
+        TuningTable.from_json({"version": 999, "entries": {}})
+
+
+def test_tuning_table_keys_include_links():
+    ici = Topology(4, 2, node_link="tpu_v5e_ici", local_link="tpu_v5e_ici")
+    dcn = Topology(4, 2, node_link="tpu_v5e_dcn", local_link="tpu_v5e_ici")
+    t = TuningTable()
+    t.record(ici, "allgather", "float32", 256, "xla", 1e-6)
+    assert t.lookup(dcn, "allgather", "float32", 256) is None, \
+        "different link metadata must not share measurements"
+
+
+def test_memo_invalidated_by_new_measurements():
+    topo = Topology(4, 2)
+    sel = Selector()
+    first = sel.choose("allgather", topo, 256)
+    assert first.source == "prior"
+    for algo in autotune.candidates("allgather", topo):
+        sel.table.record(topo, "allgather", "float32", 256, algo,
+                         1e-6 if algo == "ring" else 1e-3)
+    assert sel.choose("allgather", topo, 256).source == "measured"
+
+
+# ---------------------------------------------------------------------------
+# topology link metadata -> cost-model parameterisation
+# ---------------------------------------------------------------------------
+
+
+def test_net_for_composes_per_axis_links():
+    topo = Topology(2, 256, node_link="tpu_v5e_dcn", local_link="tpu_v5e_ici")
+    net = costmodel.net_for(topo)
+    dcn, ici = costmodel.tpu_v5e_multipod(), costmodel.tpu_v5e_pod()
+    assert net.alpha_inter == dcn.alpha_inter
+    assert net.beta_inter == dcn.beta_inter
+    assert net.alpha_intra == ici.alpha_intra
+    assert net.beta_intra == ici.beta_intra
+    assert "tpu_v5e_dcn" in net.name and "tpu_v5e_ici" in net.name
+
+
+def test_net_for_defaults_and_overrides():
+    assert costmodel.net_for(Topology(4, 2)).name == "tpu_v5e_dcn"
+    override = costmodel.paper_cluster_pip()
+    topo = Topology(4, 2, node_link=override, local_link=override)
+    assert costmodel.net_for(topo) == override
+    with pytest.raises(ValueError):
+        costmodel.resolve_net("no_such_preset")
+
+
+def test_from_mesh_derives_host_cpu_links():
+    mesh = jax.make_mesh((1, 1), ("node", "local"))
+    topo = Topology.from_mesh(mesh)
+    assert topo.link_names == ("host_cpu", "host_cpu")
+    assert derive_link(mesh, "node", "inter") == "host_cpu"
+    assert costmodel.net_for(topo).name == "host_cpu"
+    # explicit links win over derivation
+    topo2 = Topology.from_mesh(mesh, node_link="tpu_v5e_dcn")
+    assert topo2.link_names == ("tpu_v5e_dcn", "host_cpu")
+
+
+def test_back_compat_choose_and_tuning_table():
+    topo = Topology(16, 16)
+    net = costmodel.tpu_v5e_pod()
+    algo, t = autotune.choose("allgather", topo, 256, net)
+    assert algo == "pip_mcoll" and t > 0
+    table = autotune.tuning_table("allgather", topo, net)
+    assert set(table) == {2 ** i for i in range(4, 27)}
+    assert all(isinstance(a, str) for a in table.values())
+
+
+# ---------------------------------------------------------------------------
+# the real thing: algo="auto" on an 8-device mesh matches every explicit
+# algorithm, and calibration flips resolution to the measured table
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.slow
+def test_auto_equivalence_and_calibration_8dev():
+    out = run_check("auto_check.py", 8, 4, 2)
+    assert "auto_check" in out and "OK" in out

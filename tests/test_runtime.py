@@ -132,6 +132,89 @@ def test_unknown_collective_rejected():
         runtime.build(mesh, topo, "gossip", "xla")
 
 
+def test_build_rejects_auto():
+    """auto needs an operand (size/dtype drive selection) — build has none."""
+    mesh, topo = _mesh_topo()
+    with pytest.raises(ValueError):
+        runtime.build(mesh, topo, "allgather", "auto")
+
+
+# ---------------------------------------------------------------------------
+# LRU bounds: shape-diverse traffic cannot grow the caches without limit
+# ---------------------------------------------------------------------------
+
+
+def test_exec_cache_lru_bounded_and_counts_evictions():
+    mesh, topo = _mesh_topo()
+    runtime.clear_cache()
+    old = runtime.set_cache_limits()
+    runtime.set_cache_limits(max_exec=2)
+    try:
+        for n in (4, 8, 16):  # 3 distinct shapes through a 2-entry cache
+            runtime.collective(mesh, topo, "allgather", "xla",
+                               jnp.arange(float(n)))
+        s = runtime.cache_stats()
+        assert s.exec_misses == 3 and s.exec_evictions == 1
+        # oldest entry (n=4) was evicted -> re-miss; newest still hits
+        runtime.collective(mesh, topo, "allgather", "xla", jnp.arange(16.0))
+        assert runtime.cache_stats().exec_hits == 1
+        runtime.collective(mesh, topo, "allgather", "xla", jnp.arange(4.0))
+        assert runtime.cache_stats().exec_misses == 4
+    finally:
+        runtime.set_cache_limits(**{f"max_{k}": v for k, v in old.items()})
+
+
+def test_exec_cache_lru_recency_order():
+    """A hit refreshes recency: the least-recently-USED entry is evicted,
+    not the least-recently-inserted."""
+    mesh, topo = _mesh_topo()
+    runtime.clear_cache()
+    old = runtime.set_cache_limits()
+    runtime.set_cache_limits(max_exec=2)
+    try:
+        runtime.collective(mesh, topo, "allgather", "xla", jnp.arange(4.0))
+        runtime.collective(mesh, topo, "allgather", "xla", jnp.arange(8.0))
+        runtime.collective(mesh, topo, "allgather", "xla", jnp.arange(4.0))
+        # inserting a third evicts n=8 (LRU), keeping the refreshed n=4
+        runtime.collective(mesh, topo, "allgather", "xla", jnp.arange(16.0))
+        runtime.collective(mesh, topo, "allgather", "xla", jnp.arange(4.0))
+        s = runtime.cache_stats()
+        assert s.exec_hits == 2 and s.exec_misses == 3, s
+    finally:
+        runtime.set_cache_limits(**{f"max_{k}": v for k, v in old.items()})
+
+
+def test_build_cache_lru_bounded():
+    mesh, topo = _mesh_topo()
+    runtime.clear_cache()
+    old = runtime.set_cache_limits()
+    runtime.set_cache_limits(max_build=2)
+    try:
+        for algo in ("xla", "pip_mcoll", "ring"):
+            runtime.build(mesh, topo, "allgather", algo)
+        s = runtime.cache_stats()
+        assert s.build_misses == 3 and s.build_evictions == 1
+        runtime.build(mesh, topo, "allgather", "xla")  # evicted -> rebuild
+        assert runtime.cache_stats().build_misses == 4
+    finally:
+        runtime.set_cache_limits(**{f"max_{k}": v for k, v in old.items()})
+
+
+def test_shrinking_limit_evicts_immediately():
+    mesh, topo = _mesh_topo()
+    runtime.clear_cache()
+    old = runtime.set_cache_limits()
+    try:
+        for n in (4, 8, 16):
+            runtime.collective(mesh, topo, "allgather", "xla",
+                               jnp.arange(float(n)))
+        assert runtime.cache_stats().exec_evictions == 0
+        runtime.set_cache_limits(max_exec=1)
+        assert runtime.cache_stats().exec_evictions == 2
+    finally:
+        runtime.set_cache_limits(**{f"max_{k}": v for k, v in old.items()})
+
+
 # ---------------------------------------------------------------------------
 # regression: compat.py is the only module touching the raw API
 # ---------------------------------------------------------------------------

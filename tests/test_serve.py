@@ -1,11 +1,14 @@
 """Serving engine: continuous batching semantics + data pipeline checks."""
 import jax
 import numpy as np
+import pytest
 
 from repro.configs import reduced_config
 from repro.data.pipeline import SyntheticLM
 from repro.models import decoder
 from repro.serve.engine import Engine, Request
+
+from subproc import run_check
 
 
 def test_engine_continuous_batching():
@@ -43,6 +46,39 @@ def test_engine_greedy_matches_direct_decode():
             caches=caches, cache_index=step)
         toks.append(int(logits[0, 0].argmax()))
     assert out == toks, (out, toks)
+
+
+def test_engine_degenerate_mesh_skips_sync_dispatch():
+    """On a world-size-1 mesh there is nothing to reconcile: the engine
+    must produce identical tokens WITHOUT dispatching a per-tick
+    collective."""
+    from repro.core import runtime
+    from repro.core.topology import Topology
+
+    cfg = reduced_config("smollm-360m")
+    params = decoder.init(jax.random.PRNGKey(0), cfg)
+    prompt = np.arange(5, dtype=np.int32) + 2
+    ref = Engine(params, cfg, max_batch=1, max_len=32)
+    want = ref.run([Request(prompt=prompt.copy(), max_new_tokens=4)])[0]
+
+    mesh = jax.make_mesh((1, 1), ("node", "local"))
+    topo = Topology.from_mesh(mesh)
+    runtime.clear_cache()
+    eng = Engine(params, cfg, max_batch=1, max_len=32, mesh=mesh, topo=topo)
+    assert eng.sync_algo == "auto"
+    got = eng.run([Request(prompt=prompt.copy(), max_new_tokens=4)])[0]
+    assert got.out_tokens == want.out_tokens
+    s = runtime.cache_stats()
+    assert s.exec_misses == 0 and s.exec_hits == 0, s
+
+
+@pytest.mark.slow
+def test_engine_token_sync_resolves_through_selector_2dev():
+    """With a real 2-device mesh, every decode tick syncs tokens via
+    runtime.collective (algo="auto"): same outputs as the sync-free engine,
+    selection stats advance, ticks amortize through the exec cache."""
+    out = run_check("serve_sync_check.py", 2, 1, 2)
+    assert "serve_sync_check" in out and "OK" in out
 
 
 def test_data_determinism_and_structure():
