@@ -12,10 +12,12 @@ numbers. Hit/miss totals are emitted as a measured/ row for run.py.
 Modes:
   (default)             measured rows for allgather/allreduce, every
                         explicit algorithm plus algo="auto" (result
-                        asserted identical to the explicit runs).
-  --calibrate OUT.json  run runtime.calibrate over all six collectives,
-                        persist the tuning table + latency rows + a
-                        model-vs-measured crossover comparison as JSON
+                        asserted identical to the explicit runs), plus a
+                        chunk sweep of the pipelined allreduce.
+  --calibrate OUT.json  run runtime.calibrate over all six collectives
+                        (chunked plans included), persist the tuning table
+                        + latency rows + a model-vs-measured crossover
+                        comparison + the pipeline-crossover table as JSON
                         (the BENCH_collectives artifact).
 """
 import argparse
@@ -27,7 +29,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import autotune, mcoll, runtime
+from repro.core import autotune, costmodel, mcoll, runtime
 from repro.core.topology import Topology
 
 N, P = 4, 2
@@ -81,6 +83,21 @@ def measure_mode():
         print(f"measured/allreduce/auto/{nbytes}B,{us:.1f},"
               f"resolved={resolved}")
 
+    # pipelined allreduce chunk sweep at the largest size: wall-clock per
+    # chunk count, results asserted identical to chunks=1
+    m = 65536 // 4 // (N * P)
+    z = jnp.ones((N * P, m), jnp.float32)
+    base = None
+    for c in (1, 2, 4, 8):
+        us, out = bench(lambda a, _c=c: runtime.collective(
+            mesh, topo, "allreduce", "pip_pipeline", a, chunks=_c), z)
+        if base is None:
+            base = np.asarray(out)
+        else:
+            np.testing.assert_allclose(np.asarray(out), base, rtol=1e-6)
+        print(f"measured/allreduce/pip_pipeline_c{c}/65536B,{us:.1f},"
+              f"8cpu-dev ok")
+
     stats = runtime.cache_stats()
     assert stats.exec_hits > 0 and stats.exec_misses > 0, stats
     print(f"measured/runtime_cache,0.0,exec_hits={stats.exec_hits} "
@@ -121,12 +138,48 @@ def calibrate_mode(out_path: str):
                   f"agree={match}")
     total = len(comparison)
     print(f"calibrate/model_vs_measured,0.0,agree={agree}/{total}")
+    # pipeline crossover: per pipelined pair, modeled unchunked vs
+    # optimally-chunked latency across a size sweep (where does chunking
+    # start to win?) plus the measured per-plan medians at the calibrated
+    # sizes, so the artifact shows model and measurement side by side
+    net = costmodel.net_for(topo)
+    pipeline_rows = []
+    for coll in runtime.collectives():
+        for algo in sorted(mcoll.CHUNKED[coll]):
+            fn = costmodel.COST_FNS[coll]
+            xover = costmodel.pipeline_crossover_bytes(coll, algo, topo, net)
+            model_sweep = []
+            for nbytes in (256, 4096, 65536, 1 << 20, 1 << 24):
+                c = costmodel.optimal_chunks(coll, algo, topo, nbytes, net)
+                model_sweep.append({
+                    "nbytes": nbytes, "chunks": c,
+                    "unchunked_us": fn(algo, topo, nbytes, net,
+                                       chunks=1).time * 1e6,
+                    "chunked_us": fn(algo, topo, nbytes, net,
+                                     chunks=c).time * 1e6,
+                })
+            measured = {}
+            for nbytes in CAL_SIZES:
+                entry = sel.table.lookup(topo, coll, "float32", nbytes) or {}
+                plans = {k: v * 1e6 for k, v in entry.items()
+                         if autotune.decode_plan(k)[0] == algo}
+                if plans:
+                    measured[str(nbytes)] = plans
+            pipeline_rows.append({
+                "collective": coll, "algo": algo,
+                "model_crossover_bytes": xover,
+                "model_sweep": model_sweep,
+                "measured_us_by_plan": measured,
+            })
+            print(f"calibrate/pipeline/{coll}/{algo},0.0,"
+                  f"model_crossover={xover}")
     artifact = {
         "topology": autotune.topo_key(topo),
         "sizes": list(CAL_SIZES),
         "table": sel.table.to_json(),
         "latency_rows": [r.__dict__ for r in rows],
         "model_vs_measured": comparison,
+        "pipeline_crossover": pipeline_rows,
     }
     path = pathlib.Path(out_path)
     path.parent.mkdir(parents=True, exist_ok=True)

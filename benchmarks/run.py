@@ -138,20 +138,30 @@ def measured_rounds():
 
 
 def autotune_table():
-    """Model-prior crossover tables for all six collectives, plus (when a
-    calibration artifact exists) the measured-vs-model comparison."""
+    """Model-prior crossover tables for all six collectives (algorithm AND
+    chunk-count plans), plus (when a calibration artifact exists) the
+    measured-vs-model comparison and the measured pipeline crossovers."""
+    from repro.core import mcoll
     topo = Topology(16, 16, node_link="tpu_v5e_ici", local_link="tpu_v5e_ici")
+    net = costmodel.net_for(topo)
     selector = autotune.Selector()
     for coll in sorted(costmodel.COST_FNS):
         table = selector.crossover_table(coll, topo)
         crossovers = []
         prev = None
         for size in sorted(table):
-            algo = table[size].algo
-            if algo != prev:
-                crossovers.append(f"{size}B->{algo}")
-                prev = algo
+            plan = autotune.encode_plan(table[size].algo, table[size].chunks)
+            if plan != prev:
+                crossovers.append(f"{size}B->{plan}")
+                prev = plan
         emit(f"autotune/{coll}/16x16", 0.0, " ".join(crossovers))
+    # modeled pipelining crossover per chunk-capable pair: the size where
+    # the optimally-chunked variant starts beating chunks=1
+    for coll in sorted(costmodel.COST_FNS):
+        for algo in sorted(mcoll.CHUNKED[coll]):
+            xo = costmodel.pipeline_crossover_bytes(coll, algo, topo, net)
+            emit(f"autotune/pipeline_crossover/{coll}/{algo}/16x16", 0.0,
+                 f"model_crossover={xo}B" if xo else "no-crossover")
     art = REPO / "results" / "BENCH_collectives.json"
     if art.exists():
         data = json.loads(art.read_text())
@@ -166,6 +176,11 @@ def autotune_table():
                      c["measured_us"],
                      f"measured={c['measured_algo']} "
                      f"prior={c['prior_algo']}")
+        for row in data.get("pipeline_crossover", ()):
+            emit(f"autotune/measured_pipeline/{row['collective']}/"
+                 f"{row['algo']}", 0.0,
+                 f"model_crossover={row['model_crossover_bytes']}B "
+                 f"measured_sizes={sorted(row['measured_us_by_plan'])}")
 
 
 def calibrate_collectives():

@@ -55,4 +55,22 @@ for m in (256, 4096, 1 << 20):
                                   costmodel.tpu_v5e_pod())
     print(f"  {m:8d}B  pip_mcoll {pip.us():9.1f}us  single-leader "
           f"{sl.us():9.1f}us  speedup {sl.time / pip.time:.2f}x")
+
+print("\n== chunked pipelining: pip_pipeline allreduce (runtime, chunks=) ==")
+z = (jnp.arange(N * P * 12, dtype=jnp.float32) % 13).reshape(N * P, 12)
+expect = np.asarray(z).sum(0)
+for c in (1, 2, 4):
+    out = np.asarray(runtime.collective(mesh, topo, "allreduce",
+                                        "pip_pipeline", z, chunks=c))
+    assert all((out[d] == expect).all() for d in range(N * P))
+    print(f"  chunks={c} correct=True")
+net = costmodel.tpu_v5e_pod()
+for m in (4096, 1 << 20, 1 << 24):
+    c = costmodel.optimal_chunks("allreduce", "pip_pipeline", pod, m, net)
+    t1 = costmodel.allreduce_cost("pip_pipeline", pod, m, net, chunks=1)
+    tc = costmodel.allreduce_cost("pip_pipeline", pod, m, net, chunks=c)
+    print(f"  modeled {m:8d}B  c*={c:3d}  unchunked {t1.us():9.1f}us  "
+          f"chunked {tc.us():9.1f}us  win {t1.time / tc.time:.2f}x")
+xo = costmodel.pipeline_crossover_bytes("allreduce", "pip_pipeline", pod, net)
+print(f"  modeled pipelining crossover: {xo}B")
 print("collectives_demo OK")

@@ -62,19 +62,67 @@ def size_bucket(nbytes: int) -> int:
 
 
 # ---------------------------------------------------------------------------
+# chunked plans: (algorithm, chunk count) pairs for the pipelined algorithms
+# ---------------------------------------------------------------------------
+
+#: separator between an algorithm name and its chunk count in tuning-table
+#: keys ("pip_pipeline#c8"); bare names mean chunks=1, so tables recorded
+#: before chunked pipelining landed keep resolving.
+PLAN_SEP = "#c"
+
+
+def encode_plan(algo: str, chunks: int = 1) -> str:
+    """Tuning-table key for an (algo, chunks) plan."""
+    return algo if chunks <= 1 else f"{algo}{PLAN_SEP}{int(chunks)}"
+
+
+def decode_plan(key: str) -> Tuple[str, int]:
+    """Inverse of :func:`encode_plan` (bare algorithm names -> chunks=1)."""
+    algo, sep, c = key.partition(PLAN_SEP)
+    return (algo, int(c)) if sep else (algo, 1)
+
+
+def chunk_candidates(collective: str, algo: str, topo: Topology, nbytes: int,
+                     net: NetParams,
+                     cap: int = costmodel.MAX_CHUNKS) -> Tuple[int, ...]:
+    """Chunk counts worth evaluating for one pair at one message size:
+    unchunked, the analytic optimum, and its halved/doubled neighbors
+    (selection takes the modeled minimum; calibration measures each)."""
+    if not _mcoll.supports_chunks(collective, algo):
+        return (1,)
+    c = costmodel.optimal_chunks(collective, algo, topo, nbytes, net, cap)
+    return tuple(sorted({1, max(1, c // 2), c, min(cap, c * 2)}))
+
+
+def plans(collective: str, topo: Topology, nbytes: int,
+          net: Optional[Union[str, NetParams]] = None
+          ) -> Tuple[Tuple[str, int], ...]:
+    """(algo, chunks) calibration candidates for one message size: every
+    feasible algorithm, with chunk-count variants for the pipelined ones."""
+    net_p = (costmodel.net_for(topo) if net is None
+             else costmodel.resolve_net(net))
+    return tuple((algo, c)
+                 for algo in candidates(collective, topo)
+                 for c in chunk_candidates(collective, algo, topo, nbytes,
+                                           net_p))
+
+
+# ---------------------------------------------------------------------------
 # selection results + stats
 # ---------------------------------------------------------------------------
 
 
 @dataclasses.dataclass(frozen=True)
 class Selection:
-    """One resolved choice: which algorithm, at what predicted/measured
-    latency, from which evidence source ("prior" | "measured")."""
+    """One resolved choice: which algorithm (at what chunk count, for the
+    pipelined algorithms), at what predicted/measured latency, from which
+    evidence source ("prior" | "measured")."""
     collective: str
     algo: str
     seconds: float
     source: str
     net: str
+    chunks: int = 1
 
 
 @dataclasses.dataclass
@@ -256,26 +304,39 @@ class Selector:
                              f"on {topo_key(topo)}")
         measured = self.table.lookup(topo, collective, dtype, nbytes)
         if measured:
-            usable = {a: s for a, s in measured.items() if a in cands}
+            # entries are plan keys ("algo" or "algo#c8"): feasibility is a
+            # property of the algorithm part only
+            usable = {k: s for k, s in measured.items()
+                      if decode_plan(k)[0] in cands}
             if usable:
-                algo = min(usable, key=usable.get)
-                sel = Selection(collective, algo, usable[algo], "measured",
-                                net_p.name)
+                plan = min(usable, key=usable.get)
+                algo, ch = decode_plan(plan)
+                sel = Selection(collective, algo, usable[plan], "measured",
+                                net_p.name, ch)
                 self._memo[key] = sel
                 self.stats.note(sel)
                 return sel
         fn = costmodel.COST_FNS[collective]
-        best_algo, best_t = None, float("inf")
+        best_algo, best_c, best_t = None, 1, float("inf")
         for algo in cands:
             try:
-                t = fn(algo, topo, nbytes, net_p).time
+                for c in chunk_candidates(collective, algo, topo, nbytes,
+                                          net_p):
+                    t = (fn(algo, topo, nbytes, net_p, chunks=c) if c > 1
+                         else fn(algo, topo, nbytes, net_p)).time
+                    # switch only on a STRICT relative improvement: model
+                    # near-ties (e.g. a pipelined variant at chunks=1 vs
+                    # its unchunked parent, equal up to float association)
+                    # must resolve deterministically to the first, simpler
+                    # candidate, not oscillate across size buckets
+                    if best_algo is None or t < best_t * (1 - 1e-9):
+                        best_algo, best_c, best_t = algo, c, t
             except ValueError:  # implemented but not modeled: skip the prior
                 continue
-            if t < best_t:
-                best_algo, best_t = algo, t
         if best_algo is None:  # nothing modeled — arbitrary but deterministic
-            best_algo, best_t = cands[0], float("inf")
-        sel = Selection(collective, best_algo, best_t, "prior", net_p.name)
+            best_algo, best_c, best_t = cands[0], 1, float("inf")
+        sel = Selection(collective, best_algo, best_t, "prior", net_p.name,
+                        best_c)
         self._memo[key] = sel
         self.stats.note(sel)
         return sel

@@ -184,15 +184,189 @@ def _log2_rounds(x: int) -> int:
     return max(0, math.ceil(math.log2(x))) if x > 1 else 0
 
 
+# ---------------------------------------------------------------------------
+# chunked pipelining: (C + P/c·beta) · (rounds + c - 1)
+# ---------------------------------------------------------------------------
+#
+# A chunked collective runs `rounds` uniform stages per segment with c
+# independent segments in flight: total latency is the classic pipeline
+# fill-drain form (C + B/c·beta)·(rounds + c − 1), where C is the per-stage
+# latency (alpha + injection), B the per-stage NIC bytes at c=1. Chunking
+# trades (c−1) extra stage latencies for a c-fold smaller serialized wire
+# term — a large-message win, a small-message loss, with an analytic
+# optimum c* = sqrt(B·beta·(rounds−1)/C).
+
+#: default upper bound on planned chunk counts (keeps unrolled per-segment
+#: chains bounded in compile time and exec-cache keys finite)
+MAX_CHUNKS = 64
+
+
+def pipeline_time(stage_alpha: float, stage_bytes: float, beta: float,
+                  rounds: int, chunks: int) -> float:
+    """Latency of ``rounds`` uniform pipelined stages over ``chunks``
+    segments: ``(C + B/c·beta) · (rounds + c − 1)``."""
+    c = max(1, int(chunks))
+    return (stage_alpha + (stage_bytes / c) * beta) * (rounds + c - 1)
+
+
+def optimal_pipeline_chunks(stage_alpha: float, stage_bytes: float,
+                            beta: float, rounds: int,
+                            cap: int = MAX_CHUNKS) -> int:
+    """Analytic minimizer of :func:`pipeline_time` over c, clamped to
+    [1, cap] and snapped to the better integer neighbor:
+    ``c* = sqrt(B·beta·(rounds−1)/C)``."""
+    if rounds <= 1 or stage_alpha <= 0 or stage_bytes <= 0 or beta <= 0:
+        return 1
+    c = math.sqrt(stage_bytes * beta * (rounds - 1) / stage_alpha)
+    lo = int(max(1, min(cap, math.floor(c))))
+    hi = int(max(1, min(cap, lo + 1)))
+    return min((lo, hi), key=lambda k: pipeline_time(
+        stage_alpha, stage_bytes, beta, rounds, k))
+
+
+@dataclasses.dataclass(frozen=True)
+class PipelineTerms:
+    """Uniform-stage decomposition of one pipelined (collective, algo):
+    latency = fixed + pipeline_time(stage_alpha, stage_bytes, beta,
+    rounds, chunks)."""
+    stage_alpha: float   # per-stage latency C (alpha + injection serialization)
+    stage_bytes: float   # per-stage NIC bytes B at chunks=1
+    beta: float          # s/byte on the stage's link
+    rounds: int          # stages per segment
+    fixed: float         # unpipelined cost (intra staging passes, sync)
+
+
+def pipeline_terms(collective: str, algo: str, topo: Topology, m: int,
+                   net: NetParams):
+    """The stage decomposition for a pipelined (collective, algo) pair, or
+    ``None`` when the pair has no pipelined form (or the topology leaves it
+    no rounds to overlap). ``m`` follows each cost function's size
+    convention."""
+    N, P = topo.n_nodes, topo.n_local
+    M = topo.world
+    inter = N > 1
+    alpha = net.alpha_inter if inter else net.alpha_intra
+    beta = net.beta_inter if inter else net.beta_intra * net.copy_factor
+    if collective == "allgather" and algo == "ring_pipeline":
+        if M <= 1:
+            return None
+        # flat ring: M-1 stages, each boundary NIC carries one block of m
+        return PipelineTerms(alpha, float(m), beta, M - 1,
+                             net.sync_overhead)
+    if collective == "allreduce" and algo == "pip_pipeline":
+        if inter:
+            # intra RS + AG (unpipelined staging) ...
+            fixed = net.sync_overhead + _intra_time(
+                net, 2 * _log2_rounds(P), 2 * (P - 1) / max(P, 1) * m)
+            # ... then per-lane ring RS+AG over nodes: 2(N-1) stages, all P
+            # lanes concurrently inject (m/P)/N each -> m/N per NIC stage
+            stage_a = net.alpha_inter + (P - 1) / net.msg_rate
+            return PipelineTerms(stage_a, m / N, net.beta_inter,
+                                 2 * (N - 1), fixed)
+        if P <= 1:
+            return None
+        # flat single level: ring RS+AG over the local axis
+        return PipelineTerms(alpha, m / P, beta, 2 * (P - 1),
+                             net.sync_overhead)
+    if collective == "alltoall" and algo == "pip_pipeline":
+        if inter:
+            fixed = net.sync_overhead + _intra_time(
+                net, 1, m * (P - 1) / max(P, 1))
+            stage_a = net.alpha_inter + (P - 1) / net.msg_rate
+            return PipelineTerms(stage_a, P * m / N, net.beta_inter,
+                                 N - 1, fixed)
+        if P <= 1:
+            return None
+        return PipelineTerms(alpha, m / P, beta, P - 1, net.sync_overhead)
+    if collective == "scatter" and algo == "pip_mcoll":
+        if not inter:
+            return None  # pure intra slice: nothing to pipeline
+        B = P + 1
+        n_rounds, cap = 1, B
+        while cap < N:
+            cap *= B
+            n_rounds += 1
+        # total root-NIC bytes from the unchunked tree, spread uniformly
+        total = 0.0
+        for S in (B ** i for i in range(n_rounds - 1, -1, -1)):
+            nlanes = min(B - 1, max(1, math.ceil(N / S) - 1))
+            total += sum(min(S, max(0, N - (j + 1) * S)) * P * m
+                         for j in range(nlanes))
+        stage_a = net.alpha_inter + (B - 2) / net.msg_rate
+        fixed = net.sync_overhead + _intra_time(net, 1, m)
+        return PipelineTerms(stage_a, total / n_rounds, net.beta_inter,
+                             n_rounds, fixed)
+    if collective == "broadcast" and algo == "pip_mcoll":
+        if not inter:
+            return None
+        B = P + 1
+        n_rounds, cap = 1, B
+        while cap < N:
+            cap *= B
+            n_rounds += 1
+        lanes = min(P, max(1, N - 1))
+        stage_a = net.alpha_inter + (lanes - 1) / net.msg_rate
+        fixed = net.sync_overhead + _intra_time(net, 1, m)
+        return PipelineTerms(stage_a, float(lanes * m), net.beta_inter,
+                             n_rounds, fixed)
+    return None
+
+
+def optimal_chunks(collective: str, algo: str, topo: Topology, m: int,
+                   net: NetParams, cap: int = MAX_CHUNKS) -> int:
+    """Analytic optimal chunk count for one pipelined pair on one message
+    size (1 when the pair is not pipelined or pipelining cannot help)."""
+    terms = pipeline_terms(collective, algo, topo, m, net)
+    if terms is None:
+        return 1
+    return optimal_pipeline_chunks(terms.stage_alpha, terms.stage_bytes,
+                                   terms.beta, terms.rounds, cap)
+
+
+def pipeline_crossover_bytes(collective: str, algo: str, topo: Topology,
+                             net: NetParams, sizes=None):
+    """Smallest swept message size at which the optimally-chunked variant
+    strictly beats ``chunks=1`` for one pipelined pair — the pipelining
+    crossover. None when chunking never wins on the sweep (latency-bound
+    topology or no rounds to overlap)."""
+    fn = COST_FNS[collective]
+    for s in (tuple(sizes) if sizes else tuple(2 ** i for i in range(6, 27))):
+        c = optimal_chunks(collective, algo, topo, s, net)
+        if c > 1 and (fn(algo, topo, s, net, chunks=c).time
+                      < fn(algo, topo, s, net, chunks=1).time):
+            return int(s)
+    return None
+
+
+def _pipelined_breakdown(collective: str, algo: str, topo: Topology, m: int,
+                         net: NetParams, chunks):
+    """CostBreakdown for a pipelined pair via the uniform-stage model, or
+    None when the topology leaves the pair nothing to pipeline."""
+    terms = pipeline_terms(collective, algo, topo, m, net)
+    if terms is None:
+        return None
+    c = max(1, int(chunks or 1))
+    t = terms.fixed + pipeline_time(terms.stage_alpha, terms.stage_bytes,
+                                    terms.beta, terms.rounds, c)
+    ib = terms.stage_bytes * terms.rounds
+    if topo.n_nodes > 1:
+        return CostBreakdown(algo, terms.rounds, ib, terms.rounds, 0, 0.0, t)
+    return CostBreakdown(algo, 0, 0.0, 0, terms.rounds, ib, t)
+
+
 # ----------------------------- ALLGATHER -----------------------------------
 
 
 def allgather_cost(algo: str, topo: Topology, m: int, net: NetParams,
-                   radix: int | None = None) -> CostBreakdown:
+                   radix: int | None = None,
+                   chunks: int | None = None) -> CostBreakdown:
     """m = bytes contributed per process. Result = N*P*m bytes everywhere."""
     N, P = topo.n_nodes, topo.n_local
     M = topo.world
     t = net.sync_overhead
+    if algo == "ring_pipeline":
+        bd = _pipelined_breakdown("allgather", algo, topo, m, net, chunks)
+        return bd or CostBreakdown(algo, 0, 0.0, 0, 0, 0.0, t)
     if algo == "pip_mcoll":
         B = radix or (P + 1)
         steps = mo_rounds(N, B)
@@ -286,11 +460,16 @@ def allgather_cost(algo: str, topo: Topology, m: int, net: NetParams,
 
 
 def scatter_cost(algo: str, topo: Topology, m: int, net: NetParams,
-                 radix: int | None = None) -> CostBreakdown:
+                 radix: int | None = None,
+                 chunks: int | None = None) -> CostBreakdown:
     """m = bytes delivered per process (root holds N*P*m)."""
     N, P = topo.n_nodes, topo.n_local
     M = topo.world
     t = net.sync_overhead
+    if algo == "pip_mcoll" and chunks and int(chunks) > 1:
+        bd = _pipelined_breakdown("scatter", algo, topo, m, net, chunks)
+        if bd is not None:
+            return bd
     if algo == "pip_mcoll":
         B = radix or (P + 1)
         n_rounds = max(1, math.ceil(round(math.log(N, B), 9))) if N > 1 else 0
@@ -341,12 +520,15 @@ def scatter_cost(algo: str, topo: Topology, m: int, net: NetParams,
 # ----------------------------- ALLREDUCE ------------------------------------
 
 
-def allreduce_cost(algo: str, topo: Topology, m: int, net: NetParams
-                   ) -> CostBreakdown:
+def allreduce_cost(algo: str, topo: Topology, m: int, net: NetParams,
+                   chunks: int | None = None) -> CostBreakdown:
     """m = bytes per process (vector size)."""
     N, P = topo.n_nodes, topo.n_local
     M = topo.world
     t = net.sync_overhead
+    if algo == "pip_pipeline":
+        bd = _pipelined_breakdown("allreduce", algo, topo, m, net, chunks)
+        return bd or CostBreakdown(algo, 0, 0.0, 0, 0, 0.0, t)
     if algo == "pip_mcoll":
         # intra reduce-scatter + per-lane inter allreduce (RD) + intra gather
         ir = _log2_rounds(P) * 2
@@ -390,11 +572,16 @@ def allreduce_cost(algo: str, topo: Topology, m: int, net: NetParams
 
 
 def broadcast_cost(algo: str, topo: Topology, m: int, net: NetParams,
-                   radix: int | None = None) -> CostBreakdown:
+                   radix: int | None = None,
+                   chunks: int | None = None) -> CostBreakdown:
     """m = bytes delivered to every process (root holds m)."""
     N, P = topo.n_nodes, topo.n_local
     M = topo.world
     t = net.sync_overhead
+    if algo == "pip_mcoll" and chunks and int(chunks) > 1:
+        bd = _pipelined_breakdown("broadcast", algo, topo, m, net, chunks)
+        if bd is not None:
+            return bd
     if algo == "pip_mcoll":
         B = radix or (P + 1)
         n_rounds, cap = (1, B) if N > 1 else (0, 1)
@@ -482,12 +669,15 @@ def reduce_scatter_cost(algo: str, topo: Topology, m: int, net: NetParams
 # ----------------------------- ALLTOALL -------------------------------------
 
 
-def alltoall_cost(algo: str, topo: Topology, m: int, net: NetParams
-                  ) -> CostBreakdown:
+def alltoall_cost(algo: str, topo: Topology, m: int, net: NetParams,
+                  chunks: int | None = None) -> CostBreakdown:
     """m = bytes sent per process in total (m/M per peer)."""
     N, P = topo.n_nodes, topo.n_local
     M = topo.world
     t = net.sync_overhead
+    if algo == "pip_pipeline":
+        bd = _pipelined_breakdown("alltoall", algo, topo, m, net, chunks)
+        return bd or CostBreakdown(algo, 0, 0.0, 0, 0, 0.0, t)
     if algo == "pip_mcoll":
         # phase 1 (intra): regroup by destination lane — one shared-memory
         # pass over the (P-1)/P fraction leaving this lane

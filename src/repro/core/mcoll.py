@@ -27,12 +27,22 @@ entry point; ``collective_fn`` below is a thin delegate kept for
 compatibility.
 
 Algorithms (selectable, ``algo=`` everywhere):
-  allgather : pip_mcoll | bruck | recursive_doubling | ring | single_leader | xla
+  allgather : pip_mcoll | bruck | recursive_doubling | ring | ring_pipeline
+              | single_leader | xla
   scatter   : pip_mcoll | binomial | xla(linear)
   broadcast : pip_mcoll | binomial | xla(psum-mask)
-  allreduce : pip_mcoll (two-level multi-lane) | recursive_doubling | xla
+  allreduce : pip_mcoll (two-level multi-lane) | pip_pipeline (chunked
+              two-phase) | recursive_doubling | xla
   reduce_scatter : pip_mcoll (two-level) | xla
-  alltoall  : pip_mcoll (two-level multi-lane) | xla
+  alltoall  : pip_mcoll (two-level multi-lane) | pip_pipeline (segmented) | xla
+
+Large-message pipelining (the paper's segmented-transfer claim): algorithms
+listed in :data:`CHUNKED` accept a ``chunks`` knob that splits the payload
+into segments with *independent* per-segment collective chains, so the XLA
+scheduler overlaps segment k's later phase with segment k+1's earlier phase
+(send segment k while receiving segment k+1). ``chunks=1`` is the unchunked
+algorithm; the selection subsystem picks the chunk count per size bucket
+(``core.autotune``) and the analytic optimum lives in ``core.costmodel``.
 """
 from __future__ import annotations
 
@@ -90,6 +100,38 @@ def _flat_shift_perm(topo: Topology, dist: int) -> list:
     """Flat perm over all M devices: rank r sends to (r - dist) % M."""
     M = topo.world
     return [(r, (r - dist) % M) for r in range(M)]
+
+
+def _pad_to(x, mult):
+    pad = (-x.shape[0]) % mult
+    if pad:
+        x = jnp.concatenate([x, jnp.zeros((pad,) + x.shape[1:], x.dtype)], 0)
+    return x, pad
+
+
+def _norm_chunks(chunks, limit) -> int:
+    """Static chunk count clamped to [1, limit]: a segment must hold at
+    least one element, and SPMD shapes are static so the clamp happens at
+    trace time."""
+    return max(1, min(int(chunks), max(1, int(limit))))
+
+
+def _segments(x, chunks: int, mult: int = 1, axis: int = 0):
+    """Split ``axis`` into ``chunks`` equal segments, zero-padding so every
+    segment length is a multiple of ``mult``. Returns (segments, seg_len).
+
+    Equal static segment shapes keep the per-segment collective chains
+    identical programs (one compiled body, ``chunks`` independent issues);
+    callers slice the concatenated result back to the original length.
+    """
+    per = -(-x.shape[axis] // chunks)       # ceil
+    per += (-per) % mult                    # round up to the level multiple
+    pad = per * chunks - x.shape[axis]
+    if pad:
+        shape = x.shape[:axis] + (pad,) + x.shape[axis + 1:]
+        x = jnp.concatenate([x, jnp.zeros(shape, x.dtype)], axis)
+    return [lax.dynamic_slice_in_dim(x, k * per, per, axis=axis)
+            for k in range(chunks)], per
 
 
 # ---------------------------------------------------------------------------
@@ -206,6 +248,35 @@ def ring_allgather(x, topo: Topology):
     return W.reshape((M * x.shape[0],) + x.shape[1:])
 
 
+def ring_pipeline_allgather(x, topo: Topology, chunks: int = 1):
+    """Segmented ring allgather: the block is split into ``chunks`` segments
+    with an independent ring chain each, so round r of segment k overlaps
+    round r+1 of segment k-1 (each lane sends segment k while receiving
+    segment k+1). ``chunks=1`` degenerates to the plain ring.
+
+    Bandwidth-optimal like the ring, but the pipeline hides all but one
+    round's latency behind the wire time of the other segments — the
+    large-message regime the paper's segmented transfers target.
+    """
+    M = topo.world
+    m = x.shape[0]
+    c = _norm_chunks(chunks, m)
+    r = lax.axis_index(_axes(topo))
+    perm = _flat_shift_perm(topo, -1)  # r sends to r+1, receives from r-1
+    segs, per = _segments(x, c)
+    rows = [jnp.concatenate(segs, axis=0)]  # own (padded) block
+    cur = segs
+    for _ in range(M - 1):
+        # one ppermute per segment per round: independent chains, so XLA
+        # may issue segment k+1's send while segment k's recv is in flight
+        cur = [lax.ppermute(s, _axes(topo), perm) for s in cur]
+        rows.append(jnp.concatenate(cur, axis=0))
+    S = jnp.stack(rows)  # S[i] = padded block of rank (r - i) % M
+    idx = (r - jnp.arange(M)) % M
+    W = jnp.take(S, idx, axis=0)  # W[k] = padded block of rank k
+    return W[:, :m].reshape((M * m,) + x.shape[1:])
+
+
 def single_leader_allgather(x, topo: Topology):
     """Single-object hierarchical baseline (OpenMPI-style): intra gather to a
     leader, leader-only radix-2 Bruck over nodes, intra broadcast. On TPU the
@@ -237,6 +308,7 @@ ALLGATHER = {
     "bruck": bruck_allgather,
     "recursive_doubling": recursive_doubling_allgather,
     "ring": ring_allgather,
+    "ring_pipeline": ring_pipeline_allgather,
     "single_leader": single_leader_allgather,
     "xla": xla_allgather,
 }
@@ -248,7 +320,7 @@ ALLGATHER = {
 
 
 def pip_mcoll_scatter(xfull, topo: Topology, radix: Optional[int] = None,
-                      root: int = 0):
+                      root: int = 0, chunks: int = 1):
     """Multi-object scatter: radix-(P+1) binomial tree over nodes in which an
     active node's P lanes feed P distinct child nodes *in the same round*,
     then a free intra-node slice (PiP shared memory analogue).
@@ -256,7 +328,28 @@ def pip_mcoll_scatter(xfull, topo: Topology, radix: Optional[int] = None,
     ``xfull``: full payload ``(N*P*m, ...)`` (only the root's copy is
     semantically read; other nodes' buffers are zeroed to prove data flow).
     Output: this device's ``(m, ...)`` shard.
+
+    ``chunks > 1`` segments every rank's payload and runs an independent
+    tree per segment, so a lane sends segment k down the tree while
+    receiving segment k+1 (pipelined large-message scatter).
     """
+    M = topo.world
+    if xfull.shape[0] % M:
+        raise ValueError(f"scatter payload dim0 {xfull.shape[0]} must be "
+                         f"divisible by world size {M}")
+    m = xfull.shape[0] // M
+    c = _norm_chunks(chunks, m)
+    if c > 1:
+        blocks = xfull.reshape((M, m) + xfull.shape[1:])
+        segs, per = _segments(blocks, c, axis=1)
+        outs = [_scatter_tree(s.reshape((M * per,) + xfull.shape[1:]),
+                              topo, radix, root) for s in segs]
+        return jnp.concatenate(outs, axis=0)[:m]
+    return _scatter_tree(xfull, topo, radix, root)
+
+
+def _scatter_tree(xfull, topo: Topology, radix: Optional[int], root: int):
+    """One unsegmented multi-object scatter tree (the chunks=1 body)."""
     N, Pl = topo.n_nodes, topo.n_local
     B = int(radix) if radix else Pl + 1
     M = topo.world
@@ -362,9 +455,24 @@ SCATTER = {
 
 
 def pip_mcoll_broadcast(x, topo: Topology, radix: Optional[int] = None,
-                        root: int = 0):
+                        root: int = 0, chunks: int = 1):
     """Multi-object broadcast: radix-(P+1) tree over nodes (active node's P
-    lanes feed P children per round) + free intra share."""
+    lanes feed P children per round) + free intra share.
+
+    ``chunks > 1`` segments the payload along dim0 and runs an independent
+    tree per segment (each round's lane sends segment k while receiving
+    segment k+1 — the pipelined large-message variant)."""
+    c = _norm_chunks(chunks, x.shape[0] if x.ndim else 1)
+    if c > 1:
+        m = x.shape[0]
+        segs, _ = _segments(x, c)
+        outs = [_broadcast_tree(s, topo, radix, root) for s in segs]
+        return jnp.concatenate(outs, axis=0)[:m]
+    return _broadcast_tree(x, topo, radix, root)
+
+
+def _broadcast_tree(x, topo: Topology, radix: Optional[int], root: int):
+    """One unsegmented multi-object broadcast tree (the chunks=1 body)."""
     N, Pl = topo.n_nodes, topo.n_local
     B = int(radix) if radix else Pl + 1
     root_node, _ = divmod(root, Pl)
@@ -442,13 +550,6 @@ BROADCAST = {
 # ---------------------------------------------------------------------------
 
 
-def _pad_to(x, mult):
-    pad = (-x.shape[0]) % mult
-    if pad:
-        x = jnp.concatenate([x, jnp.zeros((pad,) + x.shape[1:], x.dtype)], 0)
-    return x, pad
-
-
 def pip_mcoll_allreduce(x, topo: Topology, inter: str = "psum"):
     """Two-level multi-object allreduce: intra reduce-scatter (each lane owns
     1/P of the vector) -> per-lane inter allreduce over nodes (all P lanes
@@ -484,6 +585,45 @@ def _rd_allreduce_axis(x, topo: Topology, axis: str, size: int):
     return x
 
 
+def pip_pipeline_allreduce(x, topo: Topology, chunks: int = 1):
+    """Pipelined two-phase allreduce: the vector is split into ``chunks``
+    segments; each segment runs an independent two-level reduce-scatter
+    (nodes, then lanes) followed by the mirrored two-level allgather.
+
+    The per-segment chains carry no cross-segment data dependence, so the
+    scheduler overlaps segment k's allgather with segment k+1's
+    reduce-scatter — the paper's segmented-transfer overlap of intra- and
+    inter-node stages. ``chunks=1`` is the plain two-phase (Rabenseifner)
+    split; the chunk count is a tuning knob the selection subsystem picks
+    per size bucket (analytic optimum in ``core.costmodel``).
+    """
+    orig = x.shape[0]
+    M = topo.world
+    # a segment must span all M ranks after the reduce-scatter split:
+    # clamping to orig // M keeps the mult-of-M rounding from amplifying
+    # the communicated volume when chunks is over-asked for a small vector
+    c = _norm_chunks(chunks, orig // M)
+    segs, _ = _segments(x, c, mult=M)
+    outs = []
+    for seg in segs:
+        y = seg
+        # reduce-scatter: nodes first (big contiguous inter chunks, all
+        # lanes active), then lanes; degenerate axes are skipped.
+        if topo.n_nodes > 1:
+            y = lax.psum_scatter(y, topo.node_axis, scatter_dimension=0,
+                                 tiled=True)
+        if topo.n_local > 1:
+            y = lax.psum_scatter(y, topo.local_axis, scatter_dimension=0,
+                                 tiled=True)
+        # allgather mirrors back in reverse axis order
+        if topo.n_local > 1:
+            y = lax.all_gather(y, topo.local_axis, axis=0, tiled=True)
+        if topo.n_nodes > 1:
+            y = lax.all_gather(y, topo.node_axis, axis=0, tiled=True)
+        outs.append(y)
+    return jnp.concatenate(outs, axis=0)[:orig]
+
+
 def flat_rd_allreduce(x, topo: Topology):
     """Flat recursive doubling over all M devices (single-object baseline)."""
     M = topo.world
@@ -503,6 +643,7 @@ def xla_allreduce(x, topo: Topology):
 
 ALLREDUCE = {
     "pip_mcoll": pip_mcoll_allreduce,
+    "pip_pipeline": pip_pipeline_allreduce,
     "recursive_doubling": flat_rd_allreduce,
     "xla": xla_allreduce,
 }
@@ -565,6 +706,24 @@ def pip_mcoll_alltoall(x, topo: Topology):
     return v.reshape((N * Pl,) + s)
 
 
+def pip_pipeline_alltoall(x, topo: Topology, chunks: int = 1):
+    """Segmented hierarchical all-to-all: the per-peer payload (axis 1) is
+    split into ``chunks`` segments, each running an independent
+    :func:`pip_mcoll_alltoall` chain — a lane ships segment k inter-node
+    while segment k+1 is still in its intra regroup (the MoE large-dispatch
+    variant). Rank-0-only payloads (``ndim < 2``) have no payload axis to
+    segment and degrade to the unsegmented algorithm."""
+    if x.ndim < 2:
+        return pip_mcoll_alltoall(x, topo)
+    s0 = x.shape[1]
+    c = _norm_chunks(chunks, s0)
+    if c == 1:
+        return pip_mcoll_alltoall(x, topo)
+    segs, _ = _segments(x, c, axis=1)
+    outs = [pip_mcoll_alltoall(s, topo) for s in segs]
+    return jnp.concatenate(outs, axis=1)[:, :s0]
+
+
 def xla_alltoall(x, topo: Topology):
     return lax.all_to_all(x, _axes(topo), split_axis=0, concat_axis=0,
                           tiled=True)
@@ -572,6 +731,7 @@ def xla_alltoall(x, topo: Topology):
 
 ALLTOALL = {
     "pip_mcoll": pip_mcoll_alltoall,
+    "pip_pipeline": pip_pipeline_alltoall,
     "xla": xla_alltoall,
 }
 
@@ -589,6 +749,24 @@ _REGISTRY = {
     "reduce_scatter": REDUCE_SCATTER,
     "alltoall": ALLTOALL,
 }
+
+# collective -> algorithms accepting the ``chunks`` pipelining knob. The
+# selection subsystem plans chunk counts only for these; the runtime
+# normalizes their default (chunks=1) into cache keys so auto and explicit
+# callers share compiled executables.
+CHUNKED = {
+    "allgather": frozenset({"ring_pipeline"}),
+    "scatter": frozenset({"pip_mcoll"}),
+    "broadcast": frozenset({"pip_mcoll"}),
+    "allreduce": frozenset({"pip_pipeline"}),
+    "reduce_scatter": frozenset(),
+    "alltoall": frozenset({"pip_pipeline"}),
+}
+
+
+def supports_chunks(collective: str, algo: str) -> bool:
+    """True when ``algo`` accepts the ``chunks`` pipelining knob."""
+    return algo in CHUNKED.get(collective, ())
 
 
 def algorithms(collective: str):

@@ -20,7 +20,11 @@ This layer owns, for the whole codebase:
   4. **algorithm selection** — ``algo="auto"`` resolves through the
      selection subsystem (``repro.core.autotune``: cost-model priors +
      measured calibration) at exec-cache time, keyed on the *resolved*
-     algorithm so auto and explicit callers share cache entries.
+     algorithm so auto and explicit callers share cache entries. For the
+     pipelined algorithms the resolution is a full ``(algo, chunks)`` plan:
+     the chunk count is normalized into the kwargs (and therefore the
+     exec-cache key), and ``chunk_bytes=<b>`` is accepted as a
+     size-relative way to pin it.
 
 Public API:
 
@@ -232,20 +236,43 @@ def _filter_kwargs(fn: Callable, kw: Dict[str, Any]) -> Dict[str, Any]:
 def resolve_algo(topo: Topology, collective: str, algo: str, x,
                  kw: Optional[Dict[str, Any]] = None
                  ) -> Tuple[str, Dict[str, Any]]:
-    """Resolve ``algo`` ("auto" -> selector choice) for operand ``x``.
+    """Resolve ``algo`` ("auto" -> selector (algo, chunks) plan) for
+    operand ``x``.
 
-    Returns (resolved_algo, filtered_kwargs). Explicit algorithm names pass
-    through untouched, so exec-cache keys are shared between auto and
-    explicit callers of the same algorithm.
+    Returns (resolved_algo, normalized_kwargs). Explicit algorithm names
+    pass through untouched; chunk knobs are normalized either way so
+    exec-cache keys are shared between auto and explicit callers of the
+    same plan:
+
+      * ``chunk_bytes=<b>`` converts to ``chunks=ceil(payload/b)`` against
+        the per-process payload of ``x`` (so one knob serves every size);
+      * a chunk-capable algorithm always carries an explicit ``chunks``
+        entry (default 1), so ``chunks=1`` and "no kwarg" are one cache key;
+      * ``algo="auto"`` fills ``chunks`` from the selector's plan unless
+        the caller pinned the knob.
     """
     kw = dict(kw or {})
-    if algo != AUTO:
-        return algo, kw
     nbytes = _message_bytes(collective, topo, x)
+    cb = kw.pop("chunk_bytes", None)
+    if cb:
+        kw.setdefault("chunks", max(1, -(-nbytes // int(cb))))
+    if algo != AUTO:
+        if _mcoll.supports_chunks(collective, algo):
+            kw["chunks"] = int(kw.get("chunks", 1))
+        elif "chunks" in kw:
+            # fail clearly at resolution time, not as an opaque TypeError
+            # deep inside trace (the auto path filters this instead)
+            raise ValueError(
+                f"{collective}/{algo} does not support chunking; "
+                f"chunk-capable algorithms: "
+                f"{sorted(_mcoll.CHUNKED[collective]) or 'none'}")
+        return algo, kw
     sel = autotune.default_selector().choose(
         collective, topo, nbytes, dtype=str(x.dtype))
-    return sel.algo, _filter_kwargs(_mcoll.algorithm(collective, sel.algo),
-                                    kw)
+    kw = _filter_kwargs(_mcoll.algorithm(collective, sel.algo), kw)
+    if _mcoll.supports_chunks(collective, sel.algo):
+        kw["chunks"] = int(kw.get("chunks", sel.chunks or 1))
+    return sel.algo, kw
 
 
 # ---------------------------------------------------------------------------
@@ -373,6 +400,7 @@ class CalibrationRow:
     nbytes: int
     dtype: str
     seconds: float
+    chunks: int = 1
 
 
 def calibrate(mesh, topo: Topology,
@@ -395,20 +423,27 @@ def calibrate(mesh, topo: Topology,
     for name in (tuple(names) if names else collectives()):
         for nbytes in sizes:
             x = example_input(name, topo, int(nbytes), dtype)
-            for algo in autotune.candidates(name, topo):
+            # plans = every feasible algorithm, plus chunk-count variants
+            # for the pipelined ones (measured per plan, so the table can
+            # pick the chunk count per size bucket)
+            for algo, chunks in autotune.plans(name, topo, int(nbytes)):
+                kw = {"chunks": chunks} if \
+                    _mcoll.supports_chunks(name, algo) else {}
                 jax.block_until_ready(
-                    collective(mesh, topo, name, algo, x))  # compile
+                    collective(mesh, topo, name, algo, x, **kw))  # compile
                 samples = []
                 for _ in range(max(1, iters)):
                     t0 = _time.perf_counter()
                     jax.block_until_ready(
-                        collective(mesh, topo, name, algo, x))
+                        collective(mesh, topo, name, algo, x, **kw))
                     samples.append(_time.perf_counter() - t0)
                 sec = float(np.median(samples))
                 sel.table.record(topo, name, str(jnp.dtype(dtype)),
-                                 int(nbytes), algo, sec)
+                                 int(nbytes),
+                                 autotune.encode_plan(algo, chunks), sec)
                 rows.append(CalibrationRow(name, algo, int(nbytes),
-                                           str(jnp.dtype(dtype)), sec))
+                                           str(jnp.dtype(dtype)), sec,
+                                           chunks))
     if path is not None:
         sel.table.save(path)
     return rows

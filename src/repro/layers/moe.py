@@ -12,11 +12,14 @@ expert shards with a fixed per-peer capacity (dropped tokens get zero
 combine-weight, standard token-dropping semantics), computes with ragged_dot,
 and ships results back.
 
-The dispatch/combine all-to-alls are not hardcoded to one primitive: the
-algorithm is resolved per message size through the selection subsystem
-(``core.autotune``, the same selector ``runtime.collective(algo="auto")``
-uses), over a (1 x TP) topology whose link metadata is derived from the
-mesh. The resolved ``core.mcoll`` algorithm runs inside the shard_map body.
+The dispatch/combine all-to-alls are not hardcoded to one primitive: a full
+(algorithm, chunk count) plan is resolved per message size through the
+selection subsystem (``core.autotune``, the same selector
+``runtime.collective(algo="auto")`` uses), over a (1 x TP) topology whose
+link metadata is derived from the mesh. Large dispatch payloads resolve to
+the segmented ``pip_pipeline`` all-to-all, which pipelines the exchange in
+``chunks`` independent segments. The resolved ``core.mcoll`` algorithm runs
+inside the shard_map body.
 """
 from __future__ import annotations
 
@@ -106,7 +109,7 @@ def _ep_capacity(n_tokens: int, tp_size: int, moe) -> int:
 
 
 def _moe_ep_shard(p_router, wg, wu, wd, x, cfg, tp_axis, tp_size, a2a_algo,
-                  tp_topo):
+                  a2a_chunks, tp_topo):
     """Runs inside shard_map. x: (B_l, S, D) replicated over tp."""
     moe = cfg.moe
     B, S, D = x.shape
@@ -141,11 +144,20 @@ def _moe_ep_shard(p_router, wg, wu, wd, x, cfg, tp_axis, tp_size, a2a_algo,
     send_ok = jnp.zeros((tp_size, cap), jnp.bool_).at[dest, pos_c].set(
         valid, mode="drop")
 
-    # dispatch/combine exchanges run the selector-resolved mcoll algorithm
-    a2a = partial(mcoll.algorithm("alltoall", a2a_algo), topo=tp_topo)
+    # dispatch/combine exchanges run the selector-resolved mcoll algorithm;
+    # large token payloads resolve to the segmented pipeline (chunks > 1),
+    # which overlaps one segment's send with the next segment's regroup.
+    # The chunk plan is sized for the token payload — the tiny eid/ok
+    # metadata exchanges stay unsegmented (chunking them would only add
+    # per-collective latency in their latency-bound regime).
+    fn = mcoll.algorithm("alltoall", a2a_algo)
+    a2a_kw = ({"chunks": a2a_chunks}
+              if mcoll.supports_chunks("alltoall", a2a_algo) else {})
+    a2a = partial(fn, topo=tp_topo, **a2a_kw)
+    a2a_meta = partial(fn, topo=tp_topo)
     rx = a2a(send_x).reshape(tp_size * cap, D)
-    re = a2a(send_eid).reshape(tp_size * cap)
-    rok = a2a(send_ok).reshape(tp_size * cap)
+    re = a2a_meta(send_eid).reshape(tp_size * cap)
+    rok = a2a_meta(send_ok).reshape(tp_size * cap)
 
     eid_eff = jnp.where(rok, re, E_local - 1)
     order = jnp.argsort(eid_eff, stable=True)
@@ -186,13 +198,14 @@ def apply(p, x, cfg, rules=None, mesh=None):
     tp_topo = Topology(1, tp_size, local_axis=tp,
                        local_link=derive_link(mesh, tp, "intra"))
     nbytes = tp_size * cap * D * x.dtype.itemsize
-    a2a_algo = autotune.default_selector().choose(
-        "alltoall", tp_topo, nbytes, dtype=str(x.dtype)).algo
+    a2a_sel = autotune.default_selector().choose(
+        "alltoall", tp_topo, nbytes, dtype=str(x.dtype))
 
     xspec = P(batch_axes if batch_axes else None, None, None)
     fn = runtime.sharded(
         partial(_moe_ep_shard, cfg=cfg, tp_axis=tp, tp_size=tp_size,
-                a2a_algo=a2a_algo, tp_topo=tp_topo),
+                a2a_algo=a2a_sel.algo, a2a_chunks=a2a_sel.chunks,
+                tp_topo=tp_topo),
         mesh,
         in_specs=(P(None, None), P(tp, None, None), P(tp, None, None),
                   P(tp, None, None), xspec),

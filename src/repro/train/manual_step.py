@@ -3,15 +3,19 @@ DP gradient-sync path.
 
 Where PiP-MColl fits in training: the per-step *small-message* syncs are
 latency-bound at scale — global grad-norm scalars, MoE router load stats,
-metric reductions, and (with int8 compression) the compressed-gradient
-exchange across the slow pod axis. This module builds a shard_map'd step in
-which
+metric reductions — while the gradient payload itself is the bandwidth-bound
+large-message case the paper's segmented transfers target. This module
+builds a shard_map'd step in which
 
-  - gradients are synced with an mcoll allreduce whose algorithm is
-    resolved per payload size through the selection subsystem
-    (``algo="auto"``, the default: pip_mcoll two-level multi-lane for
-    latency-bound sizes, xla/ring for bandwidth-bound ones, per the
-    topology's link metadata) — or pinned explicitly via ``algo=``,
+  - gradients are synced **bucketed** by default: the whole grad tree is
+    flattened into fixed-size buckets (``bucket_bytes``, default 4 MiB) and
+    each bucket runs one pipelined allreduce. Bucketing turns many
+    per-tensor latency-bound syncs into few large transfers sized where the
+    chunked pipeline (``pip_pipeline`` + per-bucket chunk count from the
+    selection subsystem) overlaps intra- and inter-node stages,
+  - the algorithm per payload is resolved through the selection subsystem
+    (``algo="auto"``, the default) — or pinned explicitly via ``algo=`` /
+    ``chunks=``,
   - optional int8 block-quantized compression with error feedback halves
     the wire bytes across the `node` (slow) axis,
   - scalar metrics run through the same selection (small-message regime —
@@ -19,12 +23,16 @@ which
 
 The pjit path (train.step) remains the default for the dry-run; this path
 is validated against it on multi-device CPU meshes in
-tests/checks/manual_step_check.py (same loss/grads to fp32 tolerance).
+tests/checks/manual_step_check.py (same loss/grads to fp32 tolerance, and
+the bucketed path bit-exact against the unbucketed one).
 """
 from __future__ import annotations
 
+from typing import List, Optional, Tuple
+
 import jax
 import jax.numpy as jnp
+from jax import lax
 from jax.sharding import PartitionSpec as P
 
 from repro.core import autotune, costmodel, mcoll, runtime
@@ -32,34 +40,89 @@ from repro.core.topology import Topology
 from repro.optim import adamw, compress
 from repro.train.step import TrainConfig, loss_fn
 
+#: default gradient bucket size — large enough that the pipelined allreduce
+#: is the modeled winner, small enough to bound the peak fused buffer
+DEFAULT_BUCKET_BYTES = 4 << 20
 
-def _make_sync(topo: Topology, algo: str):
-    """Mean-allreduce for one payload: ``algo="auto"`` resolves through the
-    default selector at trace time (shapes are static, so selection is a
-    Python-level decision baked into the jitted step)."""
+
+def _make_sync(topo: Topology, algo: str, chunks: Optional[int] = None):
+    """Mean-allreduce for one payload: ``algo="auto"`` resolves a full
+    (algorithm, chunk count) plan through the default selector at trace
+    time (shapes are static, so selection is a Python-level decision baked
+    into the jitted step). An explicit ``chunks`` pins the pipelining knob
+    for chunk-capable algorithms."""
     net = costmodel.net_for(topo)
 
     def sync_mean(v):
         g = jnp.asarray(v, jnp.float32).reshape(-1)
-        name = algo
+        name, c = algo, chunks
         if name == "auto":
-            name = autotune.default_selector().choose(
+            sel = autotune.default_selector().choose(
                 "allreduce", topo, g.size * g.dtype.itemsize, net=net,
-                dtype=str(g.dtype)).algo
-        out = mcoll.algorithm("allreduce", name)(g, topo) / topo.world
+                dtype=str(g.dtype))
+            name = sel.algo
+            if c is None:
+                c = sel.chunks
+        kw = ({"chunks": int(c)}
+              if c and mcoll.supports_chunks("allreduce", name) else {})
+        out = mcoll.algorithm("allreduce", name)(g, topo, **kw) / topo.world
         return out.reshape(jnp.shape(v))
 
     return sync_mean
 
 
+def bucket_slices(total: int, bucket_elems: int) -> List[Tuple[int, int]]:
+    """(start, length) windows covering [0, total) in fixed-size buckets
+    (the last bucket carries the remainder)."""
+    if total <= 0:
+        return []
+    b = max(1, int(bucket_elems))
+    return [(s, min(b, total - s)) for s in range(0, total, b)]
+
+
+def sync_tree_bucketed(grads, sync_fn, bucket_bytes: int):
+    """Flatten a gradient tree into fp32 buckets of ``bucket_bytes``, run
+    ``sync_fn`` once per bucket, and restore the tree structure.
+
+    One allreduce per bucket instead of one per tensor: small tensors stop
+    paying per-collective latency, and every bucket is large enough for the
+    pipelined algorithms to win. Elementwise reductions make the result
+    bit-identical to syncing each leaf with the same algorithm.
+    """
+    leaves, treedef = jax.tree_util.tree_flatten(grads)
+    if not leaves:
+        return grads
+    flat = (jnp.concatenate(
+        [jnp.asarray(l, jnp.float32).reshape(-1) for l in leaves])
+        if len(leaves) > 1
+        else jnp.asarray(leaves[0], jnp.float32).reshape(-1))
+    bucket_elems = max(1, int(bucket_bytes) // 4)  # fp32 wire dtype
+    synced = [sync_fn(lax.dynamic_slice_in_dim(flat, start, n, axis=0))
+              for start, n in bucket_slices(flat.size, bucket_elems)]
+    flat = jnp.concatenate(synced) if len(synced) > 1 else synced[0]
+    out, off = [], 0
+    for l in leaves:
+        out.append(flat[off:off + l.size].reshape(jnp.shape(l)))
+        off += l.size
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
 def make_manual_train_step(cfg, tcfg: TrainConfig, mesh, topo: Topology,
                            algo: str = "auto",
-                           compress_grads: bool = False):
+                           compress_grads: bool = False,
+                           bucketed: bool = True,
+                           bucket_bytes: int = DEFAULT_BUCKET_BYTES,
+                           chunks: Optional[int] = None):
     """Data-parallel over topo.axes (node=slow/pod axis, local=fast axis).
-    Params replicated; batch sharded over both axes. ``algo`` names an
-    allreduce algorithm from core.mcoll, or "auto" (default) to let the
-    selection subsystem pick one per payload size."""
-    sync_mean = _make_sync(topo, algo)
+    Params replicated; batch sharded over both axes.
+
+    ``algo`` names an allreduce algorithm from core.mcoll, or "auto"
+    (default) to let the selection subsystem pick an (algorithm, chunks)
+    plan per payload size. ``bucketed`` (default) flattens the grad tree
+    into ``bucket_bytes`` buckets with one pipelined allreduce each —
+    bit-exact with the per-tensor path for the same algorithm;
+    ``chunks`` pins the pipelining knob instead of the selector's plan."""
+    sync_mean = _make_sync(topo, algo, chunks)
 
     def step(params, opt_state, err_state, batch):
         (loss, metrics), grads = jax.value_and_grad(
@@ -71,7 +134,10 @@ def make_manual_train_step(cfg, tcfg: TrainConfig, mesh, topo: Topology,
             # dequantized fp32 (scales ride along) — wire bytes modeled by
             # the cost layer; semantics validated in tests.
             grads = compress.decompress_tree(comp, grads)
-        grads = jax.tree.map(sync_mean, grads)
+        if bucketed:
+            grads = sync_tree_bucketed(grads, sync_mean, bucket_bytes)
+        else:
+            grads = jax.tree.map(sync_mean, grads)
         loss = sync_mean(loss.reshape(1))[0]
 
         new_params, new_opt, om = adamw.update(params, grads, opt_state,

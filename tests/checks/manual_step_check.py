@@ -35,9 +35,9 @@ batch = {"tokens": jax.random.randint(key, (B, T), 0, cfg.vocab),
 ref_p, ref_o, ref_m = jax.jit(
     lambda p, o, b: train_step(p, o, b, cfg, tcfg))(params, opt, batch)
 
-# manual mcoll step (pip_mcoll allreduce)
+# manual mcoll step (pip_mcoll allreduce, per-tensor sync)
 step = manual_step.make_manual_train_step(cfg, tcfg, mesh, topo,
-                                          algo="pip_mcoll")
+                                          algo="pip_mcoll", bucketed=False)
 err = manual_step.init_error_state(params, False)
 man_p, man_o, _, man_m = step(params, opt, err, batch)
 
@@ -48,8 +48,9 @@ diffs = jax.tree.map(lambda a, b: float(jnp.abs(
 worst = max(jax.tree.leaves(diffs))
 assert worst < 5e-2, worst  # bf16 params; identical update within rounding
 
-# algo="auto": the selector resolves an allreduce per payload size at trace
-# time; the step must match the reference like the pinned variant does
+# default step (algo="auto", bucketed): grads flatten into fixed-size
+# buckets, one selector-planned allreduce per bucket; must match the
+# reference like the pinned variant does
 params_a = decoder.init(key, cfg)
 opt_a = adamw.init(params_a, ocfg)
 step_auto = manual_step.make_manual_train_step(cfg, tcfg, mesh, topo)
@@ -59,6 +60,37 @@ np.testing.assert_allclose(float(auto_m["loss"]), float(ref_m["loss"]),
                            rtol=1e-5)
 from repro.core import runtime as _rt
 assert _rt.selection_stats().total > 0, "auto step never hit the selector"
+
+# the default bucket size sits in the pipelined-allreduce regime: gradient
+# sync defaults to bucketed pipelined allreduce on this topology
+from repro.core import autotune as _at, costmodel as _cm
+_sel = _at.default_selector().choose(
+    "allreduce", topo, manual_step.DEFAULT_BUCKET_BYTES,
+    net=_cm.net_for(topo))
+assert _sel.algo == "pip_pipeline", _sel
+assert _sel.chunks >= 1, _sel
+
+# bucketed-vs-unbucketed equivalence: same pinned algorithm on both paths
+# must be BIT-EXACT (elementwise reductions are bucket-boundary-invariant)
+pb = decoder.init(key, cfg)
+ob = adamw.init(pb, ocfg)
+step_b = manual_step.make_manual_train_step(
+    cfg, tcfg, mesh, topo, algo="pip_pipeline", bucketed=True,
+    bucket_bytes=256 << 10)  # several buckets for this model
+bp, bo, _, bm = step_b(pb, ob, manual_step.init_error_state(pb, False),
+                       batch)
+pu = decoder.init(key, cfg)
+ou = adamw.init(pu, ocfg)
+step_u = manual_step.make_manual_train_step(
+    cfg, tcfg, mesh, topo, algo="pip_pipeline", bucketed=False)
+up, uo, _, um = step_u(pu, ou, manual_step.init_error_state(pu, False),
+                       batch)
+bucket_diffs = jax.tree.map(
+    lambda a, b: float(jnp.abs(a.astype(jnp.float32)
+                               - b.astype(jnp.float32)).max()), bp, up)
+worst_bucket = max(jax.tree.leaves(bucket_diffs))
+assert worst_bucket == 0.0, f"bucketed sync not bit-exact: {worst_bucket}"
+assert float(bm["loss"]) == float(um["loss"]), (bm["loss"], um["loss"])
 
 # compressed variant: loss must still go DOWN over a few steps
 # (params/opt were donated above -- rebuild fresh copies)
@@ -75,4 +107,5 @@ for i in range(6):
     losses.append(float(m["loss"]))
 assert losses[-1] < losses[0], losses
 print(f"manual_step_check N={N} P={P}: OK worst_param_diff={worst:.2e} "
+      f"bucketed_bitexact_diff={worst_bucket:.1e} "
       f"compressed_losses={losses[0]:.4f}->{losses[-1]:.4f}")

@@ -120,9 +120,45 @@ def check_reduce_scatter_alltoall():
         checks += 1
 
 
+def check_chunked():
+    """Pipelined variants with chunk counts that do not divide the payload
+    (remainder segments must round-trip exactly on this topology)."""
+    global checks
+    m = 5
+    x = jnp.arange(M * m, dtype=jnp.float32)
+    y = jnp.arange(m, dtype=jnp.float32) + 3
+    z = (jnp.arange(M * m, dtype=jnp.float32) % 13).reshape(M, m)
+    a = jnp.arange(M * M * m, dtype=jnp.float32).reshape(M, M, m)
+    for c in (2, 3):
+        fn = mcoll.collective_fn(mesh, topo, "allgather", "ring_pipeline",
+                                 stacked=True, chunks=c)
+        out = np.array(fn(x))
+        for d in range(M):
+            np.testing.assert_array_equal(out[d], np.array(x))
+        fn = mcoll.collective_fn(mesh, topo, "scatter", "pip_mcoll",
+                                 root=M - 1, chunks=c)
+        np.testing.assert_array_equal(np.array(fn(x)), np.array(x))
+        fn = mcoll.collective_fn(mesh, topo, "broadcast", "pip_mcoll",
+                                 root=1, chunks=c)
+        out = np.array(fn(y))
+        for d in range(M):
+            np.testing.assert_array_equal(out[d], np.array(y))
+        fn = mcoll.collective_fn(mesh, topo, "allreduce", "pip_pipeline",
+                                 chunks=c)
+        out = np.array(fn(z))
+        for d in range(M):
+            np.testing.assert_allclose(out[d], np.array(z).sum(0), rtol=1e-6)
+        fn = mcoll.collective_fn(mesh, topo, "alltoall", "pip_pipeline",
+                                 chunks=c)
+        np.testing.assert_array_equal(np.array(fn(a)),
+                                      np.array(a).transpose(1, 0, 2))
+        checks += 5
+
+
 check_allgather()
 check_scatter()
 check_broadcast()
 check_allreduce()
 check_reduce_scatter_alltoall()
+check_chunked()
 print(f"mcoll_check N={N} P={P}: {checks} checks OK")

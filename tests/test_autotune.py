@@ -15,10 +15,11 @@ SIX = ("allgather", "scatter", "broadcast", "allreduce", "reduce_scatter",
        "alltoall")
 
 # algorithms whose latency scales with round count (log-ish), vs the
-# bandwidth-optimal ones that win at large sizes
+# bandwidth-optimal ones that win at large sizes (the chunked pipelines
+# belong to the bandwidth regime: chunking amortizes round latency)
 LOW_ROUND = {"pip_mcoll", "recursive_doubling", "bruck", "binomial",
              "single_leader", "linear"}
-BANDWIDTH = {"xla", "ring"}
+BANDWIDTH = {"xla", "ring", "ring_pipeline", "pip_pipeline"}
 
 
 # ---------------------------------------------------------------------------
@@ -80,6 +81,34 @@ def test_choose_small_prefers_multiobject_on_paper_cluster():
     sel = Selector()
     s = sel.choose("allgather", topo, 64)
     assert s.algo == "pip_mcoll" and s.source == "prior"
+    assert s.chunks == 1, "latency regime must not chunk"
+
+
+def test_choose_large_plans_chunked_pipeline():
+    """The bandwidth regime resolves to a chunked pipelined plan: the
+    chunk count is part of the selection, >1 only where the model says
+    pipelining pays (the crossover vs. the unchunked variant)."""
+    topo = Topology(16, 16, node_link="tpu_v5e_dcn", local_link="tpu_v5e_ici")
+    sel = Selector()
+    small = sel.choose("allreduce", topo, 256)
+    assert small.chunks == 1, small
+    large = sel.choose("allreduce", topo, 1 << 24)
+    assert large.algo == "pip_pipeline" and large.chunks > 1, large
+    net = costmodel.net_for(topo)
+    unchunked = costmodel.allreduce_cost("pip_pipeline", topo, 1 << 24, net,
+                                         chunks=1).time
+    assert large.seconds < unchunked, "chunked plan must beat unchunked"
+
+
+def test_measured_chunked_plan_decodes():
+    """A measured plan key ("algo#cN") resolves to (algo, chunks)."""
+    topo = Topology(4, 2)
+    sel = Selector()
+    sel.table.record(topo, "allreduce", "float32", 1 << 20, "xla", 1e-3)
+    sel.table.record(topo, "allreduce", "float32", 1 << 20,
+                     autotune.encode_plan("pip_pipeline", 8), 1e-6)
+    s = sel.choose("allreduce", topo, 1 << 20)
+    assert (s.algo, s.chunks, s.source) == ("pip_pipeline", 8, "measured")
 
 
 # ---------------------------------------------------------------------------

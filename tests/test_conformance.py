@@ -1,0 +1,238 @@
+"""Collective conformance suite: every registered (collective x algorithm)
+pair against the ``xla_*`` reference, across dtypes, odd / non-power-of-two
+payload shapes, and chunk counts.
+
+Unlike the subprocess checks (tests/checks/*), this suite runs IN-PROCESS
+on whatever devices the interpreter was started with, factoring
+``jax.device_count()`` into a (node, local) mesh. Under the tier-1 run
+that is the 1-device degenerate topology (cheap, still exercises every
+algorithm's trace path and the chunking/padding arithmetic); CI runs the
+same suite under a device-count matrix
+(``XLA_FLAGS=--xla_force_host_platform_device_count={1,2,8}``) so the
+multi-device routing is conformance-tested per count. The exhaustive
+dtype/shape/chunk sweeps are marked ``slow`` so the matrix can split fast
+and slow legs.
+
+Property sweeps use ``_hypothesis_compat``: full property search with
+hypothesis installed, a fixed deterministic replay without it.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from _hypothesis_compat import given, settings, strategies as st
+
+from repro.core import autotune, costmodel, mcoll, runtime
+from repro.core.topology import Topology
+
+# ---------------------------------------------------------------------------
+# mesh from the ambient device count (the CI matrix sets XLA_FLAGS)
+# ---------------------------------------------------------------------------
+
+DC = jax.device_count()
+P = 2 if DC % 2 == 0 else 1
+N = DC // P
+M = N * P
+mesh = jax.make_mesh((N, P), ("node", "local"))
+topo = Topology(N, P)
+
+PAIRS = [(coll, algo) for coll in runtime.collectives()
+         for algo in mcoll.algorithms(coll)]
+CHUNKED_PAIRS = [(coll, algo) for coll, algo in PAIRS
+                 if mcoll.supports_chunks(coll, algo)]
+DTYPES = ("float32", "bfloat16", "int32")
+
+# reference algorithm per collective: the vendor lowering ("linear" is
+# scatter's vendor-equivalent masked select)
+REF = {coll: ("xla" if "xla" in mcoll.algorithms(coll) else "linear")
+       for coll in runtime.collectives()}
+
+
+def _operand(coll: str, m: int, dtype: str):
+    """Global operand with per-rank payload ``m`` elements. Values are
+    small integers so every reduction is exact in every swept dtype
+    (bf16 represents ints < 256 exactly) and equality checks can be
+    bitwise across algorithms."""
+    dt = jnp.dtype(dtype)
+    if coll == "allgather" or coll == "scatter":
+        return (jnp.arange(M * m) % 97).astype(dt)
+    if coll == "broadcast":
+        return (jnp.arange(m) % 97 + 1).astype(dt)
+    if coll == "allreduce":
+        return (jnp.arange(M * m) % 5).astype(dt).reshape(M, m)
+    if coll == "reduce_scatter":
+        return (jnp.arange(M * M * m) % 5).astype(dt).reshape(M, M * m)
+    if coll == "alltoall":
+        return (jnp.arange(M * M * m) % 97).astype(dt).reshape(M, M, m)
+    raise ValueError(coll)
+
+
+def _oracle(coll: str, x):
+    """Pure-numpy semantics of each collective on the global operand."""
+    a = np.asarray(x.astype(jnp.float32))
+    if coll == "allgather":
+        return np.stack([a] * M)          # row d = full gather on device d
+    if coll == "scatter":
+        return a                           # shards concatenate to the input
+    if coll == "broadcast":
+        return np.stack([a] * M)
+    if coll == "allreduce":
+        return np.stack([a.sum(0)] * M)
+    if coll == "reduce_scatter":
+        return a.sum(0)
+    if coll == "alltoall":
+        return a.transpose(1, 0, 2)
+    raise ValueError(coll)
+
+
+def _feasible(coll: str, algo: str) -> bool:
+    return algo in autotune.candidates(coll, topo)
+
+
+def _run(coll: str, algo: str, x, **kw):
+    out = runtime.collective(mesh, topo, coll, algo, x, **kw)
+    return np.asarray(out.astype(jnp.float32))
+
+
+def _assert_conforms(coll: str, algo: str, m: int, dtype: str, **kw):
+    if not _feasible(coll, algo):
+        pytest.skip(f"{algo} infeasible on {N}x{P}")
+    x = _operand(coll, m, dtype)
+    got = _run(coll, algo, x, **kw)
+    ref = _run(coll, REF[coll], x)
+    # integer-valued payloads: every algorithm must agree with the vendor
+    # reference bitwise, in every dtype
+    np.testing.assert_array_equal(
+        got, ref, err_msg=f"{coll}/{algo} m={m} {dtype} {kw}")
+    np.testing.assert_array_equal(
+        ref, _oracle(coll, x), err_msg=f"{coll}/{REF[coll]} oracle m={m}")
+
+
+# ---------------------------------------------------------------------------
+# fast leg: every registered pair, f32, odd payload (runs at every device
+# count in the CI matrix; 1-device under tier-1)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("coll,algo", PAIRS)
+def test_conformance_every_pair_odd_payload(coll, algo):
+    _assert_conforms(coll, algo, 5, "float32")
+
+
+@pytest.mark.parametrize("coll,algo", CHUNKED_PAIRS)
+def test_conformance_chunked_pairs_basic(coll, algo):
+    # a chunk count that does not divide the payload (remainder segment)
+    _assert_conforms(coll, algo, 5, "float32", chunks=2)
+    _assert_conforms(coll, algo, 5, "float32", chunks=3)
+
+
+# ---------------------------------------------------------------------------
+# slow legs: dtype x odd-shape sweep, chunk-count sweep, auto-plan sweep
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("coll,algo", PAIRS)
+@given(m=st.sampled_from([1, 3, 6, 7]), dtype=st.sampled_from(DTYPES))
+@settings(max_examples=8, deadline=None)
+def test_conformance_dtype_shape_sweep(coll, algo, m, dtype):
+    _assert_conforms(coll, algo, m, dtype)
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("coll,algo", CHUNKED_PAIRS)
+@given(m=st.sampled_from([1, 4, 7]), chunks=st.integers(1, 5))
+@settings(max_examples=8, deadline=None)
+def test_conformance_chunk_sweep(coll, algo, m, chunks):
+    # chunk counts beyond the payload clamp internally; remainder segments
+    # must round-trip exactly (zero padding never leaks into results)
+    _assert_conforms(coll, algo, m, "float32", chunks=chunks)
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("coll", sorted(runtime.collectives()))
+@given(m=st.sampled_from([1, 5, 64]), dtype=st.sampled_from(DTYPES))
+@settings(max_examples=6, deadline=None)
+def test_conformance_auto_plan(coll, m, dtype):
+    """algo="auto" resolves an (algo, chunks) plan that conforms too."""
+    x = _operand(coll, m, dtype)
+    got = _run(coll, "auto", x)
+    ref = _run(coll, REF[coll], x)
+    np.testing.assert_array_equal(got, ref,
+                                  err_msg=f"{coll}/auto m={m} {dtype}")
+
+
+# ---------------------------------------------------------------------------
+# pure-logic properties: chunk planning math (no devices involved)
+# ---------------------------------------------------------------------------
+
+
+@given(rounds=st.integers(2, 512), nbytes=st.integers(64, 1 << 26))
+@settings(max_examples=60, deadline=None)
+def test_optimal_pipeline_chunks_is_local_minimum(rounds, nbytes):
+    """The analytic c* beats its integer neighbors under the stage model
+    (C + B/c·beta)(rounds + c − 1)."""
+    alpha, beta = 1.0e-6, 1 / 2.5e10
+    c = costmodel.optimal_pipeline_chunks(alpha, nbytes, beta, rounds)
+    t = costmodel.pipeline_time(alpha, nbytes, beta, rounds, c)
+    assert 1 <= c <= costmodel.MAX_CHUNKS
+    if c > 1:
+        assert t <= costmodel.pipeline_time(alpha, nbytes, beta, rounds,
+                                            c - 1) * (1 + 1e-12)
+    if c < costmodel.MAX_CHUNKS:
+        assert t <= costmodel.pipeline_time(alpha, nbytes, beta, rounds,
+                                            c + 1) * (1 + 1e-12)
+
+
+@given(nbytes=st.sampled_from([256, 4096, 1 << 16, 1 << 20, 1 << 24]))
+@settings(max_examples=10, deadline=None)
+def test_pipeline_crossover_vs_unchunked(nbytes):
+    """The cost model must show the pipelining crossover: chunking never
+    helps the latency regime, and wins the bandwidth regime."""
+    t16 = Topology(16, 16, node_link="tpu_v5e_dcn", local_link="tpu_v5e_ici")
+    net = costmodel.net_for(t16)
+    c = costmodel.optimal_chunks("allreduce", "pip_pipeline", t16, nbytes,
+                                 net)
+    t1 = costmodel.allreduce_cost("pip_pipeline", t16, nbytes, net,
+                                  chunks=1).time
+    tc = costmodel.allreduce_cost("pip_pipeline", t16, nbytes, net,
+                                  chunks=c).time
+    assert tc <= t1 * (1 + 1e-12)
+    if nbytes >= 1 << 20:
+        assert c > 1 and tc < t1, (nbytes, c)
+    if nbytes <= 256:
+        assert c == 1
+
+
+def test_scatter_rejects_non_divisible_payload():
+    """Regression: a payload that cannot shard evenly used to silently
+    truncate (dim0 // world); it must be a clear error instead."""
+    if M == 1:
+        pytest.skip("every payload divides on 1 device")
+    x = jnp.arange(float(M * 3 + 1))
+    with pytest.raises(ValueError, match="divisible by world"):
+        runtime.collective(mesh, topo, "scatter", "pip_mcoll", x)
+
+
+def test_plan_encode_decode_round_trip():
+    assert autotune.encode_plan("pip_pipeline", 1) == "pip_pipeline"
+    assert autotune.encode_plan("pip_pipeline", 8) == "pip_pipeline#c8"
+    assert autotune.decode_plan("pip_pipeline#c8") == ("pip_pipeline", 8)
+    assert autotune.decode_plan("ring") == ("ring", 1)
+
+
+def test_plans_cover_registry_with_chunk_variants():
+    t = Topology(4, 4, node_link="tpu_v5e_dcn", local_link="tpu_v5e_ici")
+    for coll in runtime.collectives():
+        ps = autotune.plans(coll, t, 1 << 20)
+        algos = {a for a, _ in ps}
+        assert algos == set(autotune.candidates(coll, t))
+        for a, c in ps:
+            assert c >= 1
+            if c > 1:
+                assert mcoll.supports_chunks(coll, a)
+        # every chunk-capable algorithm gets at least one chunked variant
+        # at a bandwidth-regime size
+        for a in algos:
+            if mcoll.supports_chunks(coll, a):
+                assert any(c > 1 for aa, c in ps if aa == a), (coll, a)

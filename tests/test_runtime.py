@@ -140,6 +140,93 @@ def test_build_rejects_auto():
 
 
 # ---------------------------------------------------------------------------
+# chunked plans in the exec cache
+# ---------------------------------------------------------------------------
+
+
+def test_exec_cache_chunked_plans_do_not_collide():
+    """The same algorithm at different chunk counts compiles different
+    programs — the exec-cache key must separate them."""
+    mesh, topo = _mesh_topo()
+    runtime.clear_cache()
+    z = jnp.ones((1, 64), jnp.float32)
+    runtime.collective(mesh, topo, "allreduce", "pip_pipeline", z, chunks=1)
+    runtime.collective(mesh, topo, "allreduce", "pip_pipeline", z, chunks=2)
+    assert runtime.cache_stats().exec_misses == 2, "chunk change re-compiles"
+    runtime.collective(mesh, topo, "allreduce", "pip_pipeline", z, chunks=2)
+    s = runtime.cache_stats()
+    assert s.exec_hits == 1 and s.exec_misses == 2, s
+
+
+def test_exec_cache_default_chunks_normalized():
+    """Omitting ``chunks`` on a chunk-capable algorithm is the same plan as
+    ``chunks=1`` — one cache entry, not two."""
+    mesh, topo = _mesh_topo()
+    runtime.clear_cache()
+    z = jnp.ones((1, 64), jnp.float32)
+    runtime.collective(mesh, topo, "allreduce", "pip_pipeline", z)
+    runtime.collective(mesh, topo, "allreduce", "pip_pipeline", z, chunks=1)
+    s = runtime.cache_stats()
+    assert s.exec_hits == 1 and s.exec_misses == 1, s
+
+
+def test_auto_and_explicit_chunked_callers_share_entries():
+    """auto resolves to an (algo, chunks) plan whose exec-cache entry is
+    the one an explicit caller of the same plan uses."""
+    mesh, topo = _mesh_topo()
+    runtime.clear_cache()
+    z = jnp.ones((1, 1 << 20), jnp.float32)  # bandwidth regime
+    algo, kw = runtime.resolve_algo(topo, "allreduce", "auto", z)
+    runtime.collective(mesh, topo, "allreduce", algo, z, **kw)  # explicit
+    runtime.collective(mesh, topo, "allreduce", "auto", z)      # auto: hit
+    s = runtime.cache_stats()
+    assert s.exec_misses == 1 and s.exec_hits == 1, s
+
+
+def test_chunk_bytes_converts_to_chunks_plan():
+    """chunk_bytes is sugar for chunks=ceil(payload/chunk_bytes) and shares
+    the cache entry with the equivalent explicit chunks."""
+    mesh, topo = _mesh_topo()
+    runtime.clear_cache()
+    z = jnp.ones((1, 1024), jnp.float32)  # payload 4096 B
+    algo, kw = runtime.resolve_algo(topo, "allreduce", "pip_pipeline", z,
+                                    {"chunk_bytes": 1024})
+    assert algo == "pip_pipeline" and kw == {"chunks": 4}, kw
+    runtime.collective(mesh, topo, "allreduce", "pip_pipeline", z,
+                       chunk_bytes=1024)
+    runtime.collective(mesh, topo, "allreduce", "pip_pipeline", z, chunks=4)
+    s = runtime.cache_stats()
+    assert s.exec_misses == 1 and s.exec_hits == 1, s
+
+
+def test_chunks_on_non_capable_algo_rejected_clearly():
+    """chunks/chunk_bytes with an algorithm that has no pipelined form must
+    be a clear resolution-time error, not a TypeError mid-trace."""
+    mesh, topo = _mesh_topo()
+    z = jnp.ones((1, 64), jnp.float32)
+    with pytest.raises(ValueError, match="does not support chunking"):
+        runtime.collective(mesh, topo, "allreduce", "xla", z, chunks=2)
+    with pytest.raises(ValueError, match="does not support chunking"):
+        runtime.collective(mesh, topo, "allreduce", "xla", z, chunk_bytes=64)
+
+
+def test_calibrate_records_chunked_plans(tmp_path):
+    """Calibration measures chunk-count variants for the pipelined
+    algorithms and records them under plan keys the selector decodes."""
+    from repro.core import autotune as at
+    mesh, topo = _mesh_topo()
+    sel = at.Selector()
+    rows = runtime.calibrate(mesh, topo, names=("allreduce",),
+                             sizes=(1 << 20,), iters=1, selector=sel)
+    assert any(r.algo == "pip_pipeline" and r.chunks > 1 for r in rows), \
+        "no chunked plan measured at a bandwidth-regime size"
+    measured = sel.table.lookup(topo, "allreduce", "float32", 1 << 20)
+    assert any(at.decode_plan(k)[1] > 1 for k in measured), measured
+    s = sel.choose("allreduce", topo, 1 << 20)
+    assert s.source == "measured" and s.chunks >= 1
+
+
+# ---------------------------------------------------------------------------
 # LRU bounds: shape-diverse traffic cannot grow the caches without limit
 # ---------------------------------------------------------------------------
 
