@@ -12,12 +12,16 @@ numbers. Hit/miss totals are emitted as a measured/ row for run.py.
 Modes:
   (default)             measured rows for allgather/allreduce, every
                         explicit algorithm plus algo="auto" (result
-                        asserted identical to the explicit runs), plus a
-                        chunk sweep of the pipelined allreduce.
+                        asserted identical to the explicit runs), a chunk
+                        sweep of the pipelined allreduce, and compressed
+                        rows per codec (wall-clock + achieved error vs the
+                        codec's stated bound).
   --calibrate OUT.json  run runtime.calibrate over all six collectives
-                        (chunked plans included), persist the tuning table
-                        + latency rows + a model-vs-measured crossover
-                        comparison + the pipeline-crossover table as JSON
+                        (chunked and codec plans included), persist the
+                        tuning table + latency rows + a model-vs-measured
+                        crossover comparison + the pipeline-crossover
+                        table + a compression section (achieved ratio /
+                        error, crossover vs lossless) as JSON
                         (the BENCH_collectives artifact).
 """
 import argparse
@@ -29,7 +33,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import autotune, costmodel, mcoll, runtime
+from repro.core import autotune, compress, costmodel, mcoll, runtime
 from repro.core.topology import Topology
 
 N, P = 4, 2
@@ -98,6 +102,23 @@ def measure_mode():
         print(f"measured/allreduce/pip_pipeline_c{c}/65536B,{us:.1f},"
               f"8cpu-dev ok")
 
+    # compressed allreduce per codec at the largest size: wall-clock +
+    # achieved relative error vs the exact sum (the accuracy side of the
+    # wire-ratio trade, asserted against the codec's stated bound)
+    zr = (jax.random.normal(jax.random.PRNGKey(0), (N * P, m)) * 0.01)
+    exact = np.asarray(zr).sum(0)
+    A = float(np.abs(np.asarray(zr)).max())
+    denom = np.abs(exact).max() + 1e-12
+    for cd in compress.lossy():
+        us, out = bench(lambda a, _cd=cd: runtime.collective(
+            mesh, topo, "allreduce", "pip_mcoll", a, codec=_cd), zr)
+        err = float(np.abs(np.asarray(out)[0] - exact).max())
+        tol = compress.collective_tolerance(cd, "allreduce", N * P, A)
+        assert err <= tol + 1e-7, (cd, err, tol)
+        print(f"measured/allreduce/pip_mcoll@{cd}/65536B,{us:.1f},"
+              f"rel_err={err / denom:.5f} "
+              f"ratio={compress.meta(cd).wire_ratio:.2f}x")
+
     stats = runtime.cache_stats()
     assert stats.exec_hits > 0 and stats.exec_misses > 0, stats
     print(f"measured/runtime_cache,0.0,exec_hits={stats.exec_hits} "
@@ -112,7 +133,8 @@ def calibrate_mode(out_path: str):
     sel = autotune.default_selector()
     rows = runtime.calibrate(mesh, topo, sizes=CAL_SIZES, iters=10)
     for r in rows:
-        print(f"calibrate/{r.collective}/{r.algo}/{r.nbytes}B,"
+        plan = autotune.encode_plan(r.algo, r.chunks, r.codec)
+        print(f"calibrate/{r.collective}/{plan}/{r.nbytes}B,"
               f"{r.seconds * 1e6:.1f},measured")
     # model-vs-measured: where does the measured winner disagree with the
     # cost-model prior on this mesh?
@@ -173,6 +195,48 @@ def calibrate_mode(out_path: str):
             })
             print(f"calibrate/pipeline/{coll}/{algo},0.0,"
                   f"model_crossover={xover}")
+    # compression: per codec — declared + achieved wire ratio, achieved
+    # error on a measured compressed allreduce (vs its stated bound), the
+    # same-algo modeled crossover vs lossless, and the budget-selection
+    # crossover (smallest size where auto under that codec's budget goes
+    # lossy on this topology)
+    compression_rows = []
+    m = 65536 // 4 // (N * P)
+    zr = (jax.random.normal(jax.random.PRNGKey(0), (N * P, m)) * 0.01)
+    exact = np.asarray(zr).sum(0)
+    A = float(np.abs(np.asarray(zr)).max())
+    sweep_sizes = tuple(2 ** i for i in range(6, 25))
+    for cd in compress.lossy():
+        c = compress.codec(cd)
+        sample = jax.random.normal(jax.random.PRNGKey(1), (1, m))
+        achieved_ratio = 4.0 * m / c.wire_bytes(c.encode(sample))
+        out = runtime.collective(mesh, topo, "allreduce", "pip_mcoll", zr,
+                                 codec=cd)
+        err = float(np.abs(np.asarray(out)[0] - exact).max())
+        bound_abs = compress.collective_tolerance(cd, "allreduce", N * P, A)
+        xover_model = costmodel.compressed_crossover_bytes(
+            "allreduce", "pip_pipeline", topo, net, cd, sizes=sweep_sizes)
+        budget = c.meta.error_bound
+        prior_only = autotune.Selector()
+        xover_budget = next(
+            (s for s in sweep_sizes
+             if prior_only.choose("allreduce", topo, s,
+                                  error_budget=budget).codec != "none"),
+            None)
+        compression_rows.append({
+            "codec": cd,
+            "declared_ratio": c.meta.wire_ratio,
+            "achieved_ratio": achieved_ratio,
+            "stated_rel_bound": c.meta.error_bound,
+            "achieved_abs_error": err,
+            "bound_abs_tolerance": bound_abs,
+            "model_crossover_vs_lossless_bytes": xover_model,
+            "budget_selection_crossover_bytes": xover_budget,
+        })
+        print(f"calibrate/compression/{cd},0.0,"
+              f"ratio={achieved_ratio:.2f}x err={err:.2e} "
+              f"bound={bound_abs:.2e} model_crossover={xover_model} "
+              f"budget_crossover={xover_budget}")
     artifact = {
         "topology": autotune.topo_key(topo),
         "sizes": list(CAL_SIZES),
@@ -180,6 +244,7 @@ def calibrate_mode(out_path: str):
         "latency_rows": [r.__dict__ for r in rows],
         "model_vs_measured": comparison,
         "pipeline_crossover": pipeline_rows,
+        "compression": compression_rows,
     }
     path = pathlib.Path(out_path)
     path.parent.mkdir(parents=True, exist_ok=True)

@@ -150,7 +150,9 @@ def autotune_table():
         crossovers = []
         prev = None
         for size in sorted(table):
-            plan = autotune.encode_plan(table[size].algo, table[size].chunks)
+            plan = autotune.encode_plan(table[size].algo,
+                                        table[size].chunks,
+                                        table[size].codec)
             if plan != prev:
                 crossovers.append(f"{size}B->{plan}")
                 prev = plan
@@ -162,6 +164,16 @@ def autotune_table():
             xo = costmodel.pipeline_crossover_bytes(coll, algo, topo, net)
             emit(f"autotune/pipeline_crossover/{coll}/{algo}/16x16", 0.0,
                  f"model_crossover={xo}B" if xo else "no-crossover")
+    # modeled codec crossovers (compression axis): per codec-capable pair
+    # and codec, the size where the compressed plan beats lossless
+    from repro.core import compress
+    for coll in sorted(costmodel.COST_FNS):
+        for algo in sorted(mcoll.COMPRESSED[coll]):
+            for cd in compress.lossy():
+                xo = costmodel.compressed_crossover_bytes(coll, algo, topo,
+                                                          net, cd)
+                emit(f"autotune/codec_crossover/{coll}/{algo}@{cd}/16x16",
+                     0.0, f"model_crossover={xo}B" if xo else "no-crossover")
     art = REPO / "results" / "BENCH_collectives.json"
     if art.exists():
         data = json.loads(art.read_text())
@@ -181,6 +193,14 @@ def autotune_table():
                  f"{row['algo']}", 0.0,
                  f"model_crossover={row['model_crossover_bytes']}B "
                  f"measured_sizes={sorted(row['measured_us_by_plan'])}")
+        for row in data.get("compression", ()):
+            emit(f"autotune/compression/{row['codec']}", 0.0,
+                 f"ratio={row['achieved_ratio']:.2f}x "
+                 f"err={row['achieved_abs_error']:.2e} "
+                 f"bound={row['bound_abs_tolerance']:.2e} "
+                 f"crossover={row['model_crossover_vs_lossless_bytes']}B "
+                 f"budget_crossover="
+                 f"{row['budget_selection_crossover_bytes']}B")
 
 
 def calibrate_collectives():

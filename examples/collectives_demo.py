@@ -15,7 +15,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import costmodel, mcoll, runtime
+from repro.core import autotune, compress, costmodel, mcoll, runtime
 from repro.core.topology import Topology
 
 N, P = 4, 2
@@ -73,4 +73,32 @@ for m in (4096, 1 << 20, 1 << 24):
           f"chunked {tc.us():9.1f}us  win {t1.time / tc.time:.2f}x")
 xo = costmodel.pipeline_crossover_bytes("allreduce", "pip_pipeline", pod, net)
 print(f"  modeled pipelining crossover: {xo}B")
+
+print("\n== error-bounded compressed collectives (codec=) ==")
+zr = (jax.random.normal(jax.random.PRNGKey(0), (N * P, 2048)) * 0.01)
+exact = np.asarray(zr).sum(0)
+A = float(np.abs(np.asarray(zr)).max())
+for cd in compress.lossy():
+    out = np.asarray(runtime.collective(mesh, topo, "allreduce",
+                                        "pip_mcoll", zr, codec=cd))
+    err = np.abs(out[0] - exact).max()
+    tol = compress.collective_tolerance(cd, "allreduce", N * P, A)
+    assert err <= tol + 1e-7, (cd, err, tol)
+    m = compress.meta(cd)
+    print(f"  {cd:11s} ratio={m.wire_ratio:4.1f}x stated_bound="
+          f"{m.error_bound:.4f}  achieved_err={err:.2e} (tol {tol:.2e})")
+
+print("\n== codec selection under an error budget (16x16 DCN pod) ==")
+dcn = Topology(16, 16, node_link="tpu_v5e_dcn", local_link="tpu_v5e_ici")
+sel = autotune.Selector()
+print(f"  {'size':>10s}  " + "  ".join(f"budget={b:<7g}"
+                                       for b in (0.0, 0.004, 0.07, 1.0)))
+for size in (256, 65536, 1 << 20, 1 << 24):
+    plans = []
+    for b in (0.0, 0.004, 0.07, 1.0):
+        s = sel.choose("allreduce", dcn, size, error_budget=b)
+        plans.append(autotune.encode_plan(s.algo, s.chunks, s.codec))
+    print(f"  {size:>9d}B  " + "  ".join(f"{p:<14s}" for p in plans))
+zero = sel.choose("allreduce", dcn, 1 << 24, error_budget=0.0)
+assert zero.codec == "none", "error_budget=0.0 must stay lossless"
 print("collectives_demo OK")

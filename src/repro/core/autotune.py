@@ -16,6 +16,15 @@ variants over defaults:
      bucket). When a measurement exists for the exact key it wins over the
      prior.
 
+A resolved plan has three dimensions: the **algorithm**, its **chunk
+count** (pipelining, PR 3), and its **codec** (error-bounded compression,
+``core.compress``). Plans serialize as ``algo#cN@codec`` tuning-table keys
+(:func:`encode_plan` / :func:`decode_plan`; defaults omitted, so old tables
+keep resolving). Codec plans are gated by the caller's ``error_budget``:
+a codec is a candidate only when its stated relative-error bound fits the
+budget, and ``error_budget=0.0`` admits lossless plans only — in both the
+prior enumeration and the measured-table filter.
+
 The module-level :func:`choose` / :func:`tuning_table` keep the original
 API, now backed by a shared default :class:`Selector`. ``runtime`` resolves
 ``algo="auto"`` through the same default selector, so every consumer
@@ -29,6 +38,7 @@ import json
 import pathlib
 from typing import Dict, Iterable, Optional, Tuple, Union
 
+from repro.core import compress as _codecs
 from repro.core import costmodel
 from repro.core import mcoll as _mcoll
 from repro.core.costmodel import NetParams
@@ -62,7 +72,7 @@ def size_bucket(nbytes: int) -> int:
 
 
 # ---------------------------------------------------------------------------
-# chunked plans: (algorithm, chunk count) pairs for the pipelined algorithms
+# plan keys: (algorithm, chunk count, codec) -> "algo#cN@codec"
 # ---------------------------------------------------------------------------
 
 #: separator between an algorithm name and its chunk count in tuning-table
@@ -70,16 +80,26 @@ def size_bucket(nbytes: int) -> int:
 #: before chunked pipelining landed keep resolving.
 PLAN_SEP = "#c"
 
+#: separator before the codec name ("pip_pipeline#c8@int8_block"); absent
+#: means codec="none", so pre-compression tables keep resolving.
+CODEC_SEP = "@"
 
-def encode_plan(algo: str, chunks: int = 1) -> str:
-    """Tuning-table key for an (algo, chunks) plan."""
-    return algo if chunks <= 1 else f"{algo}{PLAN_SEP}{int(chunks)}"
+
+def encode_plan(algo: str, chunks: int = 1, codec: str = "none") -> str:
+    """Tuning-table key for an (algo, chunks, codec) plan. Defaults are
+    omitted, so the key for a plain algorithm is its bare name."""
+    key = algo if chunks <= 1 else f"{algo}{PLAN_SEP}{int(chunks)}"
+    if codec and codec != _codecs.NONE:
+        key = f"{key}{CODEC_SEP}{codec}"
+    return key
 
 
-def decode_plan(key: str) -> Tuple[str, int]:
-    """Inverse of :func:`encode_plan` (bare algorithm names -> chunks=1)."""
-    algo, sep, c = key.partition(PLAN_SEP)
-    return (algo, int(c)) if sep else (algo, 1)
+def decode_plan(key: str) -> Tuple[str, int, str]:
+    """Inverse of :func:`encode_plan` (bare algorithm names -> chunks=1,
+    codec="none")."""
+    base, csep, codec = key.partition(CODEC_SEP)
+    algo, sep, c = base.partition(PLAN_SEP)
+    return (algo, int(c) if sep else 1, codec if csep else _codecs.NONE)
 
 
 def chunk_candidates(collective: str, algo: str, topo: Topology, nbytes: int,
@@ -94,17 +114,43 @@ def chunk_candidates(collective: str, algo: str, topo: Topology, nbytes: int,
     return tuple(sorted({1, max(1, c // 2), c, min(cap, c * 2)}))
 
 
+def _integer_dtype(dtype: str) -> bool:
+    """True for integer/bool payload dtypes, which must never compress
+    lossily (kept string-based: this module is jax-free)."""
+    return "int" in dtype or "bool" in dtype
+
+
+def codec_candidates(collective: str, algo: str,
+                     error_budget: float = 0.0) -> Tuple[str, ...]:
+    """Codec names worth evaluating for one (collective, algo) under an
+    error budget: always ``"none"`` first; lossy codecs only when the
+    algorithm has a compressed execution AND the codec's stated bound fits
+    the budget. ``error_budget=0.0`` therefore yields ``("none",)`` for
+    every pair — the selector can never emit a lossy plan."""
+    if not _mcoll.supports_codec(collective, algo):
+        return (_codecs.NONE,)
+    return _codecs.for_budget(error_budget)
+
+
 def plans(collective: str, topo: Topology, nbytes: int,
-          net: Optional[Union[str, NetParams]] = None
-          ) -> Tuple[Tuple[str, int], ...]:
-    """(algo, chunks) calibration candidates for one message size: every
-    feasible algorithm, with chunk-count variants for the pipelined ones."""
+          net: Optional[Union[str, NetParams]] = None,
+          codecs: Optional[Tuple[str, ...]] = None
+          ) -> Tuple[Tuple[str, int, str], ...]:
+    """(algo, chunks, codec) calibration candidates for one message size:
+    every feasible algorithm with chunk-count variants for the pipelined
+    ones, plus one codec variant per lossy codec (at chunks=1) for the
+    codec-capable algorithms — calibration measures each, and the tuning
+    table stores them under :func:`encode_plan` keys."""
     net_p = (costmodel.net_for(topo) if net is None
              else costmodel.resolve_net(net))
-    return tuple((algo, c)
-                 for algo in candidates(collective, topo)
-                 for c in chunk_candidates(collective, algo, topo, nbytes,
-                                           net_p))
+    out = []
+    for algo in candidates(collective, topo):
+        for c in chunk_candidates(collective, algo, topo, nbytes, net_p):
+            out.append((algo, c, _codecs.NONE))
+        if _mcoll.supports_codec(collective, algo):
+            for cd in (codecs if codecs is not None else _codecs.lossy()):
+                out.append((algo, 1, cd))
+    return tuple(out)
 
 
 # ---------------------------------------------------------------------------
@@ -114,15 +160,17 @@ def plans(collective: str, topo: Topology, nbytes: int,
 
 @dataclasses.dataclass(frozen=True)
 class Selection:
-    """One resolved choice: which algorithm (at what chunk count, for the
-    pipelined algorithms), at what predicted/measured latency, from which
-    evidence source ("prior" | "measured")."""
+    """One resolved choice: which algorithm (at what chunk count for the
+    pipelined algorithms, with what codec for the compressed ones), at what
+    predicted/measured latency, from which evidence source
+    ("prior" | "measured")."""
     collective: str
     algo: str
     seconds: float
     source: str
     net: str
     chunks: int = 1
+    codec: str = "none"
 
 
 @dataclasses.dataclass
@@ -283,15 +331,25 @@ class Selector:
 
     def choose(self, collective: str, topo: Topology, nbytes: int,
                net: Optional[Union[str, NetParams]] = None,
-               dtype: str = "float32") -> Selection:
+               dtype: str = "float32",
+               error_budget: float = 0.0) -> Selection:
         """Return the best Selection for one message (memoized per size
-        bucket; stats still count every resolution)."""
+        bucket; stats still count every resolution).
+
+        ``error_budget`` is the caller's accuracy contract: only codecs
+        whose stated relative-error bound fits the budget are candidates
+        (``0.0`` -> lossless plans only — in both the prior enumeration and
+        the measured-table filter, so a calibrated lossy entry can never
+        leak into an exact caller's plan). Integer/bool payload dtypes
+        force the budget to 0.0: the compressed execution rejects them, so
+        auto must keep producing a runnable (lossless) plan."""
         if self._memo_gen != self.table.generation:
             self._memo.clear()
             self._memo_gen = self.table.generation
+        budget = 0.0 if _integer_dtype(dtype) else float(error_budget)
         # key on the raw net spec (None/name/NetParams are all hashable);
         # NetParams resolution happens only on a miss, off the hot path
-        key = (collective, topo, size_bucket(nbytes), dtype, net)
+        key = (collective, topo, size_bucket(nbytes), dtype, net, budget)
         hit = self._memo.get(key)
         if hit is not None:
             self.stats.note(hit)
@@ -304,39 +362,58 @@ class Selector:
                              f"on {topo_key(topo)}")
         measured = self.table.lookup(topo, collective, dtype, nbytes)
         if measured:
-            # entries are plan keys ("algo" or "algo#c8"): feasibility is a
-            # property of the algorithm part only
-            usable = {k: s for k, s in measured.items()
-                      if decode_plan(k)[0] in cands}
+            # entries are plan keys ("algo", "algo#c8", "algo@codec", ...):
+            # feasibility is a property of the algorithm part; the codec
+            # part must fit the error budget (unknown codec names — e.g. a
+            # table from a build with extra codecs — are skipped)
+            usable = {}
+            for k, s in measured.items():
+                algo, ch, cd = decode_plan(k)
+                if algo not in cands:
+                    continue
+                try:
+                    if _codecs.meta(cd).error_bound > budget:
+                        continue
+                except ValueError:
+                    continue
+                usable[k] = s
             if usable:
                 plan = min(usable, key=usable.get)
-                algo, ch = decode_plan(plan)
+                algo, ch, cd = decode_plan(plan)
                 sel = Selection(collective, algo, usable[plan], "measured",
-                                net_p.name, ch)
+                                net_p.name, ch, cd)
                 self._memo[key] = sel
                 self.stats.note(sel)
                 return sel
-        fn = costmodel.COST_FNS[collective]
-        best_algo, best_c, best_t = None, 1, float("inf")
+        best_algo, best_c, best_cd, best_t = None, 1, _codecs.NONE, \
+            float("inf")
         for algo in cands:
             try:
-                for c in chunk_candidates(collective, algo, topo, nbytes,
-                                          net_p):
-                    t = (fn(algo, topo, nbytes, net_p, chunks=c) if c > 1
-                         else fn(algo, topo, nbytes, net_p)).time
-                    # switch only on a STRICT relative improvement: model
-                    # near-ties (e.g. a pipelined variant at chunks=1 vs
-                    # its unchunked parent, equal up to float association)
-                    # must resolve deterministically to the first, simpler
-                    # candidate, not oscillate across size buckets
-                    if best_algo is None or t < best_t * (1 - 1e-9):
-                        best_algo, best_c, best_t = algo, c, t
+                for cd in codec_candidates(collective, algo, budget):
+                    # chunk candidates under the codec's effective wire
+                    # beta: compression shifts the pipelining optimum too
+                    cnet = costmodel.codec_net(net_p, topo, cd)
+                    for c in chunk_candidates(collective, algo, topo,
+                                              nbytes, cnet):
+                        t = costmodel.plan_cost(collective, algo, topo,
+                                                nbytes, net_p, chunks=c,
+                                                codec=cd).time
+                        # switch only on a STRICT relative improvement:
+                        # model near-ties (e.g. a pipelined variant at
+                        # chunks=1 vs its unchunked parent, or a codec at
+                        # ratio ~1) must resolve deterministically to the
+                        # first, simpler candidate — "none" enumerates
+                        # first, so ties stay lossless
+                        if best_algo is None or t < best_t * (1 - 1e-9):
+                            best_algo, best_c, best_cd, best_t = \
+                                algo, c, cd, t
             except ValueError:  # implemented but not modeled: skip the prior
                 continue
         if best_algo is None:  # nothing modeled — arbitrary but deterministic
-            best_algo, best_c, best_t = cands[0], 1, float("inf")
+            best_algo, best_c, best_cd, best_t = cands[0], 1, _codecs.NONE, \
+                float("inf")
         sel = Selection(collective, best_algo, best_t, "prior", net_p.name,
-                        best_c)
+                        best_c, best_cd)
         self._memo[key] = sel
         self.stats.note(sel)
         return sel
@@ -344,11 +421,13 @@ class Selector:
     def crossover_table(self, collective: str, topo: Topology,
                         net: Optional[Union[str, NetParams]] = None,
                         sizes: Optional[Iterable[int]] = None,
-                        dtype: str = "float32") -> Dict[int, Selection]:
+                        dtype: str = "float32",
+                        error_budget: float = 0.0) -> Dict[int, Selection]:
         """Message size -> Selection over a size sweep (the per-(topo,
-        collective) crossover table)."""
+        collective) crossover table; ``error_budget`` admits codec plans)."""
         sizes = tuple(sizes) if sizes else tuple(2 ** i for i in range(4, 27))
-        return {s: self.choose(collective, topo, s, net=net, dtype=dtype)
+        return {s: self.choose(collective, topo, s, net=net, dtype=dtype,
+                               error_budget=error_budget)
                 for s in sizes}
 
     # -- table persistence passthroughs ------------------------------------

@@ -1,0 +1,400 @@
+"""Error-bounded compression codecs for collective payloads.
+
+The paper's companion work (C-Coll: "An Optimized Error-controlled MPI
+Collective Framework Integrated with Lossy Compression", Huang et al. 2023)
+shows the axis complementary to multi-object scheduling: integrate
+error-bounded lossy compression *inside* the collective algorithms, so what
+crosses the slow (inter-node) links shrinks by the codec's wire ratio while
+the end-to-end error stays under a stated bound.
+
+This module is the codec side of that subsystem:
+
+  * a **registry** of codecs (:func:`codec`, :func:`codecs`,
+    :func:`register`), each exposing ``encode``/``decode`` over slice
+    batches, **error-feedback** helpers, and :class:`CodecMeta` —
+    wire ratio, flop cost, and a *stated relative-error bound* the
+    selection subsystem (``core.autotune``) checks against the caller's
+    ``error_budget`` (``error_budget=0.0`` admits only lossless plans);
+  * the **compressed execution** in ``core.mcoll`` encodes with these
+    codecs before the slow ``node`` axis and decodes after;
+  * the **cost model** (``core.costmodel.plan_cost``) prices a compressed
+    plan as ``(C + B/ratio·β)·rounds + codec_flops``.
+
+Codecs (stated elementwise round-trip bound, relative to ``max|slice|``):
+
+  ===========  =========  ============  =====================================
+  name         ratio      error bound   mechanism
+  ===========  =========  ============  =====================================
+  none         1.0x       0.0           identity (lossless)
+  int8_block   ~3.9x      0.5/127       int8 blocks + per-256-block fp32 scale
+  fp8_sim      ~4.0x      2^-4          e4m3 cast against a per-slice scale
+  topk         ~8.0x      1.0           keep the top 1/16 by magnitude
+  ===========  =========  ============  =====================================
+
+Encode operates on ``(S, L)`` float32 slice batches (``S`` slices headed for
+``S`` wire peers) and returns a dict of arrays with leading dim ``S`` — the
+wire form. Every leaf is a plain array, so ``lax.all_to_all`` /
+``lax.all_gather`` over the wire axis apply leafwise (``jax.tree.map``).
+``decode(comp, L)`` inverts to ``(S, L)`` float32.
+
+The int8 tree-level helpers (:func:`quantize` / :func:`compress_tree` /
+...) are the original ``optim.compress`` API, now owned here;
+``repro.optim.compress`` re-exports them.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+#: quantization block length for the int8 block codec (elements per scale)
+BLOCK = 256
+
+#: density kept by the ``topk`` codec (fraction of elements per slice)
+TOPK_DENSITY = 1.0 / 16.0
+
+NONE = "none"
+
+
+# ---------------------------------------------------------------------------
+# codec metadata + base class
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class CodecMeta:
+    """Selection-facing metadata for one codec.
+
+    wire_ratio:     fp32 payload bytes / wire bytes (>1 = compression); the
+                    cost model divides the wire beta by this.
+    flops_per_elem: modeled encode+decode work per element (elementwise
+                    passes; priced against ``NetParams.flop_rate``).
+    error_bound:    stated elementwise round-trip bound
+                    ``max|decode(encode(x)) - x| <= error_bound * max|x|``
+                    per slice. 0.0 means lossless. The selector admits a
+                    codec only when ``error_bound <= error_budget``.
+    """
+
+    name: str
+    wire_ratio: float
+    flops_per_elem: float
+    error_bound: float
+
+    @property
+    def lossless(self) -> bool:
+        return self.error_bound == 0.0
+
+
+class Codec:
+    """Base codec: subclasses set ``meta`` and implement encode/decode.
+
+    ``encode(x2d)``: ``(S, L)`` float32 -> dict of arrays, leading dim S.
+    ``decode(comp, length)``: inverse, -> ``(S, length)`` float32.
+    """
+
+    meta: CodecMeta
+
+    def encode(self, x2d):
+        raise NotImplementedError
+
+    def decode(self, comp, length: int):
+        raise NotImplementedError
+
+    # -- error feedback -----------------------------------------------------
+
+    def encode_with_feedback(self, x2d, err):
+        """Encode ``x2d + err``; return (wire form, new feedback state).
+
+        Error feedback (Karimireddy et al. 2019): the round-trip residual is
+        carried into the next call, so the *accumulated* signal tracks the
+        true accumulated signal to within one step's residual — lossy
+        gradient compression keeps converging.
+        """
+        corrected = x2d.astype(jnp.float32) + err
+        comp = self.encode(corrected)
+        return comp, corrected - self.decode(comp, x2d.shape[-1])
+
+    # -- observability ------------------------------------------------------
+
+    def wire_bytes(self, comp) -> int:
+        """Actual bytes of the wire form (sanity check vs meta.wire_ratio)."""
+        return sum(int(a.size) * jnp.dtype(a.dtype).itemsize
+                   for a in jax.tree.leaves(comp))
+
+
+# ---------------------------------------------------------------------------
+# int8 block codec (the original optim.compress math, generalized)
+# ---------------------------------------------------------------------------
+
+
+class Int8BlockCodec(Codec):
+    """Per-block int8 quantization: 256-element blocks, one fp32 scale each.
+
+    Round-to-nearest against ``blockmax/127`` bounds the elementwise error
+    by ``0.5 * blockmax/127`` — stated bound 0.5/127 relative to the slice
+    max (block max <= slice max). Wire: 1 byte/elem + 4 bytes per block
+    = 3.94x vs fp32. All-zero blocks get scale 0 (the divisor is clamped,
+    so q is exactly 0 — no NaNs)."""
+
+    meta = CodecMeta("int8_block", wire_ratio=BLOCK * 4 / (BLOCK + 4.0),
+                     flops_per_elem=3.0, error_bound=0.5 / 127.0)
+
+    def encode(self, x2d):
+        S, L = x2d.shape
+        nb = -(-L // BLOCK)
+        padded = jnp.pad(x2d.astype(jnp.float32), ((0, 0), (0, nb * BLOCK - L)))
+        blocks = padded.reshape(S, nb, BLOCK)
+        scale = jnp.max(jnp.abs(blocks), axis=2) / 127.0
+        q = jnp.clip(jnp.round(blocks / jnp.maximum(scale[..., None], 1e-12)),
+                     -127, 127)
+        return {"q": q.astype(jnp.int8), "scale": scale}
+
+    def decode(self, comp, length: int):
+        q, scale = comp["q"], comp["scale"]
+        S = q.shape[0]
+        deq = q.astype(jnp.float32) * scale[..., None]
+        return deq.reshape(S, -1)[:, :length]
+
+
+_INT8 = Int8BlockCodec()
+
+
+def quantize(x):
+    """x: float array -> (int8 blocks, fp32 per-block scales).
+
+    Legacy flat-array face of :class:`Int8BlockCodec` (single
+    implementation of the block math; this just adapts shapes)."""
+    comp = _INT8.encode(jnp.asarray(x).reshape(1, -1))
+    return comp["q"][0], comp["scale"][0]
+
+
+def dequantize(q, scale, shape):
+    n = 1
+    for d in shape:
+        n *= d
+    return _INT8.decode({"q": q[None], "scale": scale[None]},
+                        n)[0].reshape(shape)
+
+
+# ---------------------------------------------------------------------------
+# fp8 (e4m3) cast codec
+# ---------------------------------------------------------------------------
+
+_FP8_MAX = 448.0  # e4m3 finite max
+_HAVE_FP8 = hasattr(jnp, "float8_e4m3fn")
+
+
+def _sim_e4m3(x):
+    """Mantissa-rounding fallback when the float8 dtype is unavailable:
+    3 mantissa bits via frexp/ldexp (matches e4m3 normals' 2^-4 bound)."""
+    m, e = jnp.frexp(x)
+    return jnp.ldexp(jnp.round(m * 16.0) / 16.0, e)
+
+
+class Fp8SimCodec(Codec):
+    """e4m3 cast against a per-slice scale (``amax/448``).
+
+    Round-to-nearest on a 3-bit mantissa bounds the relative error of every
+    normal by 2^-4; scaling to the slice max keeps the whole slice in the
+    normal range, so the stated bound is 2^-4 relative to the slice max.
+    The wire form carries the fp8 payload bitcast to uint8 (collectives
+    move uint8 everywhere) plus one fp32 scale per slice: ~4x vs fp32.
+
+    Without the float8 dtype the frexp/ldexp fallback simulates only the
+    *accuracy* (fp32 stays on the wire), so the declared ratio drops to
+    1.0 — the selector then never prices savings that don't exist.
+    """
+
+    meta = CodecMeta("fp8_sim",
+                     wire_ratio=4.0 * (1.0 - 1e-3) if _HAVE_FP8 else 1.0,
+                     flops_per_elem=2.0, error_bound=2.0 ** -4)
+
+    def encode(self, x2d):
+        x2d = x2d.astype(jnp.float32)
+        amax = jnp.max(jnp.abs(x2d), axis=1)
+        scale = jnp.maximum(amax / _FP8_MAX, 1e-30)
+        q = jnp.clip(x2d / scale[:, None], -_FP8_MAX, _FP8_MAX)
+        if _HAVE_FP8:
+            wire = lax.bitcast_convert_type(q.astype(jnp.float8_e4m3fn),
+                                            jnp.uint8)
+        else:
+            wire = _sim_e4m3(q)
+        return {"q": wire, "scale": scale}
+
+    def decode(self, comp, length: int):
+        q, scale = comp["q"], comp["scale"]
+        if _HAVE_FP8:
+            q = lax.bitcast_convert_type(q, jnp.float8_e4m3fn)
+        return q.astype(jnp.float32)[:, :length] * scale[:, None]
+
+
+# ---------------------------------------------------------------------------
+# top-k sparsification codec
+# ---------------------------------------------------------------------------
+
+
+class TopKCodec(Codec):
+    """Keep the ``TOPK_DENSITY`` largest-magnitude elements per slice.
+
+    Dropped elements carry their full value as error, and the largest
+    dropped magnitude can approach the slice max — the honest stated bound
+    is 1.0 (admitted only under a permissive error budget; error feedback
+    is what makes repeated top-k converge in gradient paths). Wire: (value
+    fp32 + index int32) per kept element = ``1/(2*density)`` vs fp32."""
+
+    meta = CodecMeta("topk", wire_ratio=1.0 / (2.0 * TOPK_DENSITY),
+                     flops_per_elem=6.0, error_bound=1.0)
+
+    def encode(self, x2d):
+        x2d = x2d.astype(jnp.float32)
+        S, L = x2d.shape
+        k = max(1, int(math.ceil(L * TOPK_DENSITY)))
+        _, idx = lax.top_k(jnp.abs(x2d), k)
+        vals = jnp.take_along_axis(x2d, idx, axis=1)
+        return {"v": vals, "i": idx.astype(jnp.int32)}
+
+    def decode(self, comp, length: int):
+        vals, idx = comp["v"], comp["i"]
+        S = vals.shape[0]
+        out = jnp.zeros((S, length), jnp.float32)
+        return out.at[jnp.arange(S)[:, None], idx].set(vals)
+
+
+# ---------------------------------------------------------------------------
+# identity codec (the lossless plan dimension)
+# ---------------------------------------------------------------------------
+
+
+class NoneCodec(Codec):
+    """Identity: the ``codec`` plan dimension's lossless value."""
+
+    meta = CodecMeta(NONE, wire_ratio=1.0, flops_per_elem=0.0,
+                     error_bound=0.0)
+
+    def encode(self, x2d):
+        return {"x": x2d.astype(jnp.float32)}
+
+    def decode(self, comp, length: int):
+        return comp["x"][:, :length]
+
+
+# ---------------------------------------------------------------------------
+# registry
+# ---------------------------------------------------------------------------
+
+_REGISTRY: Dict[str, Codec] = {}
+
+
+def register(c: Codec) -> Codec:
+    _REGISTRY[c.meta.name] = c
+    return c
+
+
+register(NoneCodec())
+register(_INT8)
+register(Fp8SimCodec())
+register(TopKCodec())
+
+
+def codecs() -> Tuple[str, ...]:
+    """All registered codec names, ``"none"`` first, rest sorted."""
+    rest = sorted(n for n in _REGISTRY if n != NONE)
+    return (NONE, *rest)
+
+
+def lossy() -> Tuple[str, ...]:
+    """Registered lossy codec names (sorted)."""
+    return tuple(n for n in codecs() if not _REGISTRY[n].meta.lossless)
+
+
+def codec(name: str) -> Codec:
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise ValueError(f"unknown codec {name!r}; one of {codecs()}") \
+            from None
+
+
+def meta(name: str) -> CodecMeta:
+    return codec(name).meta
+
+
+def for_budget(error_budget: float) -> Tuple[str, ...]:
+    """Codec names admissible under ``error_budget``: every codec whose
+    stated bound is <= the budget. ``error_budget=0.0`` -> lossless only
+    (the selector can provably never emit a lossy plan)."""
+    b = float(error_budget)
+    return tuple(n for n in codecs()
+                 if _REGISTRY[n].meta.error_bound <= b)
+
+
+def collective_tolerance(name: str, collective: str, world: int,
+                         max_abs: float) -> float:
+    """Absolute error tolerance for one compressed collective result.
+
+    Derived from the codec's stated elementwise bound ``eps`` and how the
+    compressed execution (``core.mcoll``) accumulates it:
+
+      * allgather / alltoall: one encode/decode round trip -> ``eps * A``;
+      * reduce_scatter: one encode per sender, errors sum over the
+        ``world`` contributions -> ``eps * world * A``;
+      * allreduce: sender residuals sum over ``world`` contributions
+        (values up to ``n_local * A`` after the intra reduce), plus one
+        requantization of the reduced slice -> ``2 * eps * world * A``.
+
+    ``A`` is the max-abs of the *input* payload. Lossless codecs return 0.
+    """
+    eps = meta(name).error_bound
+    if eps == 0.0:
+        return 0.0
+    factor = {"allgather": 1.0, "alltoall": 1.0,
+              "reduce_scatter": float(world),
+              "allreduce": 2.0 * float(world)}.get(collective)
+    if factor is None:
+        raise ValueError(f"no compressed execution for {collective!r}")
+    return eps * factor * float(max_abs)
+
+
+# ---------------------------------------------------------------------------
+# int8 tree-level helpers (the original optim.compress API)
+# ---------------------------------------------------------------------------
+
+
+def init_error_state(grads):
+    return jax.tree.map(lambda g: jnp.zeros(g.shape, jnp.float32), grads)
+
+
+def compress_tree(grads, error_state):
+    """Quantize every leaf after adding carried error feedback.
+
+    Returns ((qs, scales) list-trees aligned with grads, new_error_state)."""
+    leaves, treedef = jax.tree.flatten(grads)
+    err_leaves = jax.tree.leaves(error_state)
+    qs: List = []
+    scales: List = []
+    new_err: List = []
+    for g, e in zip(leaves, err_leaves):
+        corrected = g.astype(jnp.float32) + e
+        q, s = quantize(corrected)
+        back = dequantize(q, s, g.shape)
+        qs.append(q)
+        scales.append(s)
+        new_err.append(corrected - back)
+    return (qs, scales, treedef), jax.tree.unflatten(treedef, new_err)
+
+
+def decompress_tree(compressed, shapes_like):
+    qs, scales, treedef = compressed
+    shape_leaves = [l.shape for l in jax.tree.leaves(shapes_like)]
+    out = [dequantize(q, s, shp)
+           for q, s, shp in zip(qs, scales, shape_leaves)]
+    return jax.tree.unflatten(treedef, out)
+
+
+def wire_bytes(compressed) -> int:
+    qs, scales, _ = compressed
+    return sum(q.size for q in qs) + sum(s.size * 4 for s in scales)

@@ -26,6 +26,7 @@ import dataclasses
 import math
 from typing import Dict, List
 
+from repro.core import compress as _codecs
 from repro.core.topology import Topology
 from repro.core.mcoll import mo_rounds
 
@@ -43,6 +44,8 @@ class NetParams:
     msg_rate: float             # NIC injection rate, messages/s
     copy_factor: float = 1.0    # intra-node copies per transfer
     sync_overhead: float = 0.0  # fixed per-collective sync cost
+    flop_rate: float = 2.0e11   # codec elements/s per elementwise pass
+    #                             (~HBM-bound: encode/decode are streaming)
 
 
 # -- the paper's cluster (Sec. 3): Intel OPA, 100 Gb/s, 97 M msg/s ----------
@@ -150,7 +153,8 @@ def net_for(topo) -> NetParams:
         alpha_inter=inter.alpha_inter, beta_inter=inter.beta_inter,
         alpha_intra=intra.alpha_intra, beta_intra=intra.beta_intra,
         msg_rate=inter.msg_rate, copy_factor=intra.copy_factor,
-        sync_overhead=max(inter.sync_overhead, intra.sync_overhead))
+        sync_overhead=max(inter.sync_overhead, intra.sync_overhead),
+        flop_rate=intra.flop_rate)
 
 
 # ---------------------------------------------------------------------------
@@ -712,6 +716,72 @@ COST_FNS = {
     "reduce_scatter": reduce_scatter_cost,
     "alltoall": alltoall_cost,
 }
+
+
+# ---------------------------------------------------------------------------
+# compressed plans: (C + B/ratio·beta) · rounds + codec_flops
+# ---------------------------------------------------------------------------
+#
+# A codec shrinks every wire-axis byte term by its wire ratio (the alpha and
+# injection terms are unchanged — compression buys bandwidth, not rounds)
+# and adds the encode/decode streaming passes, priced against the machine's
+# elementwise throughput (NetParams.flop_rate). Crossovers therefore shift
+# per codec: small messages stay lossless (the flop term dominates), large
+# wire-bound messages go compressed.
+
+
+def codec_seconds(codec: str, nbytes: float, net: NetParams) -> float:
+    """Modeled encode+decode time for ``nbytes`` of fp32 payload."""
+    m = _codecs.meta(codec)
+    return m.flops_per_elem * (float(nbytes) / 4.0) / net.flop_rate
+
+
+def codec_net(net: NetParams, topo: Topology, codec: str) -> NetParams:
+    """``net`` with the wire-axis beta divided by the codec's wire ratio
+    (the wire axis is the node level when present, else the local level —
+    matching ``core.mcoll``'s compressed execution)."""
+    if not codec or codec == _codecs.NONE:
+        return net
+    ratio = max(_codecs.meta(codec).wire_ratio, 1e-9)
+    if topo.n_nodes > 1:
+        return dataclasses.replace(net, beta_inter=net.beta_inter / ratio)
+    return dataclasses.replace(net, beta_intra=net.beta_intra / ratio)
+
+
+def plan_cost(collective: str, algo: str, topo: Topology, m: int,
+              net: NetParams, chunks: int = 1,
+              codec: str = "none") -> CostBreakdown:
+    """Cost of one full ``(algo, chunks, codec)`` plan — the selection
+    subsystem's single pricing entry point. ``codec="none"`` falls through
+    to the plain cost function; a lossy codec scales the wire beta by its
+    ratio and adds the encode/decode term."""
+    fn = COST_FNS[collective]
+    kw = {"chunks": int(chunks)} if chunks and int(chunks) > 1 else {}
+    if not codec or codec == _codecs.NONE:
+        return fn(algo, topo, m, net, **kw)
+    ratio = max(_codecs.meta(codec).wire_ratio, 1e-9)
+    bd = fn(algo, topo, m, codec_net(net, topo, codec), **kw)
+    extra = codec_seconds(codec, m, net)
+    return CostBreakdown(bd.algo, bd.inter_rounds,
+                         bd.inter_bytes_per_nic / ratio,
+                         bd.inter_msgs_per_nic, bd.intra_rounds,
+                         bd.intra_bytes, bd.time + extra)
+
+
+def compressed_crossover_bytes(collective: str, algo: str, topo: Topology,
+                               net: NetParams, codec: str, sizes=None):
+    """Smallest swept message size where the codec plan (at its optimal
+    chunk count) strictly beats the lossless plan of the same algorithm —
+    the compression crossover. None when the codec never wins the sweep
+    (latency-bound topology, or flop cost exceeds the wire savings)."""
+    cnet = codec_net(net, topo, codec)
+    for s in (tuple(sizes) if sizes else tuple(2 ** i for i in range(6, 27))):
+        c_lossless = optimal_chunks(collective, algo, topo, s, net)
+        c_codec = optimal_chunks(collective, algo, topo, s, cnet)
+        if (plan_cost(collective, algo, topo, s, net, c_codec, codec).time
+                < plan_cost(collective, algo, topo, s, net, c_lossless).time):
+            return int(s)
+    return None
 
 
 def sweep(collective: str, topo: Topology, sizes: List[int], net_by_algo:

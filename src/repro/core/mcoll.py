@@ -43,14 +43,27 @@ scheduler overlaps segment k's later phase with segment k+1's earlier phase
 (send segment k while receiving segment k+1). ``chunks=1`` is the unchunked
 algorithm; the selection subsystem picks the chunk count per size bucket
 (``core.autotune``) and the analytic optimum lives in ``core.costmodel``.
+
+Error-bounded compression (the C-Coll axis): algorithms listed in
+:data:`COMPRESSED` accept a ``codec`` knob (registry in
+``core.compress``). The compressed execution encodes the payload *before*
+the slow wire axis — the ``node`` axis when present, else the ``local``
+axis — and decodes/reduces after, so only the fast intra staging moves
+uncompressed bytes. ``codec="none"`` is the lossless algorithm; the
+selection subsystem admits lossy codecs only under the caller's
+``error_budget``. The compressed allreduce additionally threads
+**error-feedback state** (``err=``) so gradient consumers keep converging;
+it composes with ``chunks`` (compressed segments pipeline independently).
 """
 from __future__ import annotations
 
 from typing import Optional, Sequence, Tuple
 
+import jax
 import jax.numpy as jnp
 from jax import lax
 
+from repro.core import compress as _codecs
 from repro.core.topology import Topology
 
 # ---------------------------------------------------------------------------
@@ -135,12 +148,203 @@ def _segments(x, chunks: int, mult: int = 1, axis: int = 0):
 
 
 # ---------------------------------------------------------------------------
+# compressed execution (codec= on the COMPRESSED algorithms)
+# ---------------------------------------------------------------------------
+#
+# The wire axis is the slow one: ``node`` when the topology has >1 node,
+# else ``local``. Payloads are encoded into the codec's wire form (a dict of
+# arrays with a leading per-peer axis) and the inter exchange runs leafwise
+# over that form — int8/uint8/int32 leaves cross the wire, fp32 never does.
+# The fast axis (when distinct) stages losslessly, exactly like the
+# uncompressed two-level algorithms.
+
+
+def _check_codec_payload(x, codec: str) -> None:
+    if jnp.issubdtype(jnp.asarray(x).dtype, jnp.integer):
+        raise ValueError(
+            f"lossy codec {codec!r} on integer payload dtype "
+            f"{jnp.asarray(x).dtype}: integer collectives must stay "
+            f"lossless (codec='none')")
+
+
+def _wire_axis(topo: Topology) -> Tuple[Optional[str], int]:
+    """(axis, size) of the slow axis compression targets: the node axis when
+    present, else the local axis; (None, 1) on a 1x1 topology."""
+    if topo.n_nodes > 1:
+        return topo.node_axis, topo.n_nodes
+    if topo.n_local > 1:
+        return topo.local_axis, topo.n_local
+    return None, 1
+
+
+def _wire_all_to_all(comp, axis: str):
+    """Leafwise all-to-all of a wire form over the wire axis (leading dim =
+    per-peer slices): slice i of every peer lands on peer i."""
+    return jax.tree.map(
+        lambda a: lax.all_to_all(a, axis, split_axis=0, concat_axis=0,
+                                 tiled=False), comp)
+
+
+def _wire_all_gather(comp, axis: str):
+    """Leafwise all-gather of a wire form over the wire axis (tiled on the
+    leading per-peer dim)."""
+    return jax.tree.map(
+        lambda a: lax.all_gather(a, axis, axis=0, tiled=True), comp)
+
+
+def _compressed_allreduce(x, topo: Topology, codec: str, err=None):
+    """Two-level compressed allreduce with optional error feedback.
+
+    Phases: (1) lossless intra reduce-scatter over the fast axis (each lane
+    owns 1/P of the vector); (2) the slice splits into W wire sub-slices,
+    **encoded** and exchanged reduce-scatter-style over the wire axis;
+    (3) decode + sum + re-encode; (4) encoded allgather back over the wire
+    axis, decode; (5) lossless intra allgather. Only codec wire forms cross
+    the slow axis.
+
+    ``err`` (optional, shape/size of ``x``): error-feedback state. Each
+    device adds its carried residual before compressing and gets back the
+    fresh residual of what *it* quantized this call (both encode sites),
+    placed at the positions it owns post-scatter — summed exactly once into
+    the next call's reduction. Returns ``(out, new_err)`` when given.
+    """
+    cd = _codecs.codec(codec)
+    _check_codec_payload(x, codec)
+    dtype = x.dtype
+    shape = x.shape
+    wire, W = _wire_axis(topo)
+    if wire is None:
+        out = x
+        return (out, err) if err is not None else out
+    fast = topo.local_axis if (topo.n_nodes > 1 and topo.n_local > 1) \
+        else None
+    Pl = topo.n_local if fast else 1
+    # allreduce is elementwise: flatten trailing dims so the slice/encode
+    # arithmetic is 1-D (the lossless paths keep trailing dims; results
+    # reshape back at the end)
+    g = x.astype(jnp.float32).reshape(-1)
+    orig = g.shape[0]
+    if err is not None:
+        g = g + err.astype(jnp.float32).reshape(-1)
+    gp, _ = _pad_to(g, Pl)
+    if fast:
+        s = lax.psum_scatter(gp, fast, scatter_dimension=0, tiled=True)
+        my_off = lax.axis_index(fast) * s.shape[0]
+    else:
+        s = gp
+        my_off = 0
+    Lp = s.shape[0]
+    Ls = -(-Lp // W)
+    sp, _ = _pad_to(s, W * Ls)
+    xs = sp.reshape(W, Ls)
+    comp = cd.encode(xs)
+    if err is not None:
+        r1 = xs - cd.decode(comp, Ls)
+    # reduce-scatter over the wire: peer w receives sub-slice w of everyone
+    mine = cd.decode(_wire_all_to_all(comp, wire), Ls).sum(axis=0)
+    comp2 = cd.encode(mine[None])
+    if err is not None:
+        r2 = mine - cd.decode(comp2, Ls)[0]
+    red = cd.decode(_wire_all_gather(comp2, wire), Ls).reshape(-1)[:Lp]
+    out = lax.all_gather(red, fast, axis=0, tiled=True) if fast else red
+    out = out[:orig].astype(dtype).reshape(shape)
+    if err is None:
+        return out
+    # place both residuals at the positions this device owns: r1 covers the
+    # whole scattered slice; r2 belongs to the wire sub-slice it reduced
+    res = r1.reshape(-1)
+    w0 = lax.axis_index(wire)
+    seg = lax.dynamic_slice_in_dim(res, w0 * Ls, Ls) + r2
+    res = lax.dynamic_update_slice_in_dim(res, seg, w0 * Ls, axis=0)[:Lp]
+    new_err = jnp.zeros((gp.shape[0],), jnp.float32)
+    new_err = lax.dynamic_update_slice_in_dim(new_err, res, my_off, axis=0)
+    return out, new_err[:orig].reshape(jnp.shape(err))
+
+
+def _compressed_reduce_scatter(x, topo: Topology, codec: str):
+    """Wire-axis compressed reduce-scatter, then lossless intra scatter.
+
+    Mirrors the lossless two-level order (nodes first): each device encodes
+    its W wire sub-slices, the wire all-to-all delivers sub-slice w to wire
+    peer w, decode + sum reduces over the wire axis, and a lossless intra
+    psum_scatter finishes the reduction over the fast axis."""
+    cd = _codecs.codec(codec)
+    _check_codec_payload(x, codec)
+    dtype = x.dtype
+    wire, W = _wire_axis(topo)
+    if wire is None:
+        return x
+    fast = topo.local_axis if (topo.n_nodes > 1 and topo.n_local > 1) \
+        else None
+    rows = x.shape[0]
+    if rows % topo.world:
+        raise ValueError(f"reduce_scatter payload dim0 {rows} must be "
+                         f"divisible by world size {topo.world}")
+    # rank chunks are contiguous dim0 row blocks, so flattening trailing
+    # dims (row-major) keeps chunk boundaries aligned for the 1-D slice
+    # arithmetic; the output reshapes back to (rows/world, ...)
+    flat = x.astype(jnp.float32).reshape(-1)
+    Ls = flat.shape[0] // W
+    xs = flat.reshape(W, Ls)
+    comp = cd.encode(xs)
+    mine = cd.decode(_wire_all_to_all(comp, wire), Ls).sum(axis=0)
+    if fast:
+        mine = lax.psum_scatter(mine, fast, scatter_dimension=0, tiled=True)
+    return mine.astype(dtype).reshape((rows // topo.world,) + x.shape[1:])
+
+
+def _compressed_allgather(x, topo: Topology, codec: str):
+    """Lossless intra gather into the node block, encoded allgather over
+    the wire axis, decode. Node-major order needs no final shift."""
+    cd = _codecs.codec(codec)
+    _check_codec_payload(x, codec)
+    dtype = x.dtype
+    wire, W = _wire_axis(topo)
+    if wire is None:
+        return x
+    fast = topo.local_axis if (topo.n_nodes > 1 and topo.n_local > 1) \
+        else None
+    nodeblk = lax.all_gather(x, fast, axis=0, tiled=True) if fast else x
+    flat = nodeblk.astype(jnp.float32).reshape(1, -1)
+    L = flat.shape[1]
+    out = cd.decode(_wire_all_gather(cd.encode(flat), wire), L)
+    return out.reshape((W * nodeblk.shape[0],)
+                       + nodeblk.shape[1:]).astype(dtype)
+
+
+def _compressed_alltoall(x, topo: Topology, codec: str):
+    """Hierarchical all-to-all with the wire exchange compressed: the intra
+    regroup (when both axes exist) stays lossless, the per-node payloads
+    encode before the node-axis exchange and decode after."""
+    cd = _codecs.codec(codec)
+    _check_codec_payload(x, codec)
+    dtype = x.dtype
+    N, Pl = topo.n_nodes, topo.n_local
+    s = x.shape[1:]
+    if N * Pl == 1:
+        return x
+    if N > 1:
+        v = x.reshape((N, Pl) + s)
+        if Pl > 1:
+            v = lax.all_to_all(v, topo.local_axis, split_axis=1,
+                               concat_axis=1, tiled=False)
+        flat = v.astype(jnp.float32).reshape(N, -1)
+        out = cd.decode(_wire_all_to_all(cd.encode(flat), topo.node_axis),
+                        flat.shape[1])
+        return out.reshape((N * Pl,) + s).astype(dtype)
+    flat = x.astype(jnp.float32).reshape(Pl, -1)
+    out = cd.decode(_wire_all_to_all(cd.encode(flat), topo.local_axis),
+                    flat.shape[1])
+    return out.reshape((Pl,) + s).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
 # ALLGATHER
 # ---------------------------------------------------------------------------
 
 
 def pip_mcoll_allgather(x, topo: Topology, radix: Optional[int] = None,
-                        shift_fn=None):
+                        shift_fn=None, codec: str = "none"):
     """The paper's multi-object allgather (Section 2), TPU-native.
 
     Per-device input: ``(m, ...)`` shard. Output: ``(N*P*m, ...)`` full
@@ -152,7 +356,13 @@ def pip_mcoll_allgather(x, topo: Topology, radix: Optional[int] = None,
     (node, local) tuple axis moving S node-blocks per lane + one intra
     all_gather (the PiP shared-buffer write); (3) final shift (paper step 6)
     — ``jnp.roll`` by the node index, or a Pallas shift kernel.
+
+    ``codec != "none"`` switches to the compressed execution: the node
+    block is encoded once and only the codec's wire form crosses the slow
+    axis (see :func:`_compressed_allgather`).
     """
+    if codec != "none":
+        return _compressed_allgather(x, topo, codec)
     N, Pl = topo.n_nodes, topo.n_local
     B = int(radix) if radix else Pl + 1
     if not 2 <= B <= Pl + 1:
@@ -550,13 +760,21 @@ BROADCAST = {
 # ---------------------------------------------------------------------------
 
 
-def pip_mcoll_allreduce(x, topo: Topology, inter: str = "psum"):
+def pip_mcoll_allreduce(x, topo: Topology, inter: str = "psum",
+                        codec: str = "none", err=None):
     """Two-level multi-object allreduce: intra reduce-scatter (each lane owns
     1/P of the vector) -> per-lane inter allreduce over nodes (all P lanes
     drive inter links concurrently on disjoint slices) -> intra allgather.
 
     This is the multi-object Rabenseifner split: same round count as a flat
-    algorithm but P-fold smaller inter-node messages and all lanes busy."""
+    algorithm but P-fold smaller inter-node messages and all lanes busy.
+
+    ``codec != "none"`` switches to the compressed execution (wire-axis
+    traffic in codec form, optional ``err`` error-feedback state — then the
+    return value is ``(out, new_err)``); see :func:`_compressed_allreduce`.
+    """
+    if codec != "none" or err is not None:
+        return _compressed_allreduce(x, topo, codec, err)
     N, Pl = topo.n_nodes, topo.n_local
     orig = x.shape[0]
     xp, _ = _pad_to(x, Pl)
@@ -585,7 +803,8 @@ def _rd_allreduce_axis(x, topo: Topology, axis: str, size: int):
     return x
 
 
-def pip_pipeline_allreduce(x, topo: Topology, chunks: int = 1):
+def pip_pipeline_allreduce(x, topo: Topology, chunks: int = 1,
+                           codec: str = "none", err=None):
     """Pipelined two-phase allreduce: the vector is split into ``chunks``
     segments; each segment runs an independent two-level reduce-scatter
     (nodes, then lanes) followed by the mirrored two-level allgather.
@@ -596,13 +815,30 @@ def pip_pipeline_allreduce(x, topo: Topology, chunks: int = 1):
     inter-node stages. ``chunks=1`` is the plain two-phase (Rabenseifner)
     split; the chunk count is a tuning knob the selection subsystem picks
     per size bucket (analytic optimum in ``core.costmodel``).
-    """
+
+    ``codec != "none"`` composes compression with pipelining: each segment
+    is independently encoded and runs its own compressed two-level chain
+    (segment k's wire allgather overlaps segment k+1's encode + wire
+    reduce-scatter). ``err`` (optional, shaped like ``x``) threads
+    error-feedback state through the per-segment encoders — the return
+    value is then ``(out, new_err)``."""
     orig = x.shape[0]
     M = topo.world
     # a segment must span all M ranks after the reduce-scatter split:
     # clamping to orig // M keeps the mult-of-M rounding from amplifying
     # the communicated volume when chunks is over-asked for a small vector
     c = _norm_chunks(chunks, orig // M)
+    if codec != "none" or err is not None:
+        segs, per = _segments(x, c, mult=M)
+        if err is not None:
+            err_segs, _ = _segments(err.astype(jnp.float32), c, mult=M)
+            pairs = [_compressed_allreduce(sg, topo, codec, eg)
+                     for sg, eg in zip(segs, err_segs)]
+            out = jnp.concatenate([p[0] for p in pairs], axis=0)[:orig]
+            new_err = jnp.concatenate([p[1] for p in pairs], axis=0)[:orig]
+            return out, new_err
+        outs = [_compressed_allreduce(sg, topo, codec) for sg in segs]
+        return jnp.concatenate(outs, axis=0)[:orig]
     segs, _ = _segments(x, c, mult=M)
     outs = []
     for seg in segs:
@@ -649,11 +885,16 @@ ALLREDUCE = {
 }
 
 
-def pip_mcoll_reduce_scatter(x, topo: Topology):
+def pip_mcoll_reduce_scatter(x, topo: Topology, codec: str = "none"):
     """Two-level reduce-scatter: over nodes first (big contiguous chunks on
     the inter links, all lanes active), then over lanes. Input per device
     ``(M*s, ...)``, output ``(s, ...)`` = this rank's reduced chunk.
-    Degenerate levels are skipped (the axis may be absent from the mesh)."""
+    Degenerate levels are skipped (the axis may be absent from the mesh).
+
+    ``codec != "none"`` encodes the per-node slices before the node-axis
+    exchange (see :func:`_compressed_reduce_scatter`)."""
+    if codec != "none":
+        return _compressed_reduce_scatter(x, topo, codec)
     y = x
     if topo.n_nodes > 1:
         y = lax.psum_scatter(y, topo.node_axis, scatter_dimension=0,
@@ -679,14 +920,19 @@ REDUCE_SCATTER = {
 # ---------------------------------------------------------------------------
 
 
-def pip_mcoll_alltoall(x, topo: Topology):
+def pip_mcoll_alltoall(x, topo: Topology, codec: str = "none"):
     """Hierarchical multi-object all-to-all: intra regroup so each lane
     carries 1/P of every node-pair payload, inter all-to-all per lane (all P
     lanes drive inter links concurrently), local reorder.
 
     Input per device: ``(M, s, ...)`` — row g is the payload for global rank
     g. Output: ``(M, s, ...)`` — row g is the payload received from rank g.
+
+    ``codec != "none"`` encodes the per-node payloads before the node-axis
+    exchange (see :func:`_compressed_alltoall`).
     """
+    if codec != "none":
+        return _compressed_alltoall(x, topo, codec)
     N, Pl = topo.n_nodes, topo.n_local
     s = x.shape[1:]
     v = x.reshape((N, Pl) + s)  # (dst_node, dst_lane, s...)
@@ -706,21 +952,25 @@ def pip_mcoll_alltoall(x, topo: Topology):
     return v.reshape((N * Pl,) + s)
 
 
-def pip_pipeline_alltoall(x, topo: Topology, chunks: int = 1):
+def pip_pipeline_alltoall(x, topo: Topology, chunks: int = 1,
+                          codec: str = "none"):
     """Segmented hierarchical all-to-all: the per-peer payload (axis 1) is
     split into ``chunks`` segments, each running an independent
     :func:`pip_mcoll_alltoall` chain — a lane ships segment k inter-node
     while segment k+1 is still in its intra regroup (the MoE large-dispatch
     variant). Rank-0-only payloads (``ndim < 2``) have no payload axis to
-    segment and degrade to the unsegmented algorithm."""
+    segment and degrade to the unsegmented algorithm.
+
+    ``codec != "none"`` compresses each segment's node-axis exchange
+    independently (compressed segments pipeline independently)."""
     if x.ndim < 2:
-        return pip_mcoll_alltoall(x, topo)
+        return pip_mcoll_alltoall(x, topo, codec=codec)
     s0 = x.shape[1]
     c = _norm_chunks(chunks, s0)
     if c == 1:
-        return pip_mcoll_alltoall(x, topo)
+        return pip_mcoll_alltoall(x, topo, codec=codec)
     segs, _ = _segments(x, c, axis=1)
-    outs = [pip_mcoll_alltoall(s, topo) for s in segs]
+    outs = [pip_mcoll_alltoall(s, topo, codec=codec) for s in segs]
     return jnp.concatenate(outs, axis=1)[:, :s0]
 
 
@@ -767,6 +1017,26 @@ CHUNKED = {
 def supports_chunks(collective: str, algo: str) -> bool:
     """True when ``algo`` accepts the ``chunks`` pipelining knob."""
     return algo in CHUNKED.get(collective, ())
+
+
+# collective -> algorithms accepting the ``codec`` compression knob (the
+# collectives where compressed execution is semantically sound: reductions
+# decode before summing; gathers/exchanges decode at the receiver). The
+# selection subsystem plans codecs only for these under the caller's
+# error budget; the runtime normalizes codec="none" into cache keys.
+COMPRESSED = {
+    "allgather": frozenset({"pip_mcoll"}),
+    "scatter": frozenset(),
+    "broadcast": frozenset(),
+    "allreduce": frozenset({"pip_mcoll", "pip_pipeline"}),
+    "reduce_scatter": frozenset({"pip_mcoll"}),
+    "alltoall": frozenset({"pip_mcoll", "pip_pipeline"}),
+}
+
+
+def supports_codec(collective: str, algo: str) -> bool:
+    """True when ``algo`` accepts the ``codec`` compression knob."""
+    return algo in COMPRESSED.get(collective, ())
 
 
 def algorithms(collective: str):

@@ -20,11 +20,13 @@ This layer owns, for the whole codebase:
   4. **algorithm selection** — ``algo="auto"`` resolves through the
      selection subsystem (``repro.core.autotune``: cost-model priors +
      measured calibration) at exec-cache time, keyed on the *resolved*
-     algorithm so auto and explicit callers share cache entries. For the
-     pipelined algorithms the resolution is a full ``(algo, chunks)`` plan:
-     the chunk count is normalized into the kwargs (and therefore the
-     exec-cache key), and ``chunk_bytes=<b>`` is accepted as a
-     size-relative way to pin it.
+     algorithm so auto and explicit callers share cache entries. The
+     resolution is a full ``(algo, chunks, codec)`` plan (tuning-table key
+     ``algo#cN@codec``): the chunk count and codec are normalized into the
+     kwargs (and therefore the exec-cache key), ``chunk_bytes=<b>`` is
+     accepted as a size-relative way to pin the chunking, and
+     ``error_budget=<eps>`` gates which error-bounded codecs
+     (``repro.core.compress``) auto may pick (0.0 = lossless only).
 
 Public API:
 
@@ -53,6 +55,7 @@ import numpy as np
 from jax.sharding import PartitionSpec as P
 
 from repro.core import autotune, compat
+from repro.core import compress as _codecs
 from repro.core import mcoll as _mcoll
 from repro.core.topology import Topology
 
@@ -234,24 +237,32 @@ def _filter_kwargs(fn: Callable, kw: Dict[str, Any]) -> Dict[str, Any]:
 
 
 def resolve_algo(topo: Topology, collective: str, algo: str, x,
-                 kw: Optional[Dict[str, Any]] = None
+                 kw: Optional[Dict[str, Any]] = None,
+                 error_budget: float = 0.0
                  ) -> Tuple[str, Dict[str, Any]]:
-    """Resolve ``algo`` ("auto" -> selector (algo, chunks) plan) for
-    operand ``x``.
+    """Resolve ``algo`` ("auto" -> selector (algo, chunks, codec) plan)
+    for operand ``x``.
 
     Returns (resolved_algo, normalized_kwargs). Explicit algorithm names
-    pass through untouched; chunk knobs are normalized either way so
-    exec-cache keys are shared between auto and explicit callers of the
-    same plan:
+    pass through untouched; chunk and codec knobs are normalized either
+    way so exec-cache keys are shared between auto and explicit callers of
+    the same plan:
 
       * ``chunk_bytes=<b>`` converts to ``chunks=ceil(payload/b)`` against
         the per-process payload of ``x`` (so one knob serves every size);
       * a chunk-capable algorithm always carries an explicit ``chunks``
-        entry (default 1), so ``chunks=1`` and "no kwarg" are one cache key;
-      * ``algo="auto"`` fills ``chunks`` from the selector's plan unless
-        the caller pinned the knob.
+        entry (default 1), and a codec-capable one an explicit ``codec``
+        entry (default "none"), so the default knobs and "no kwarg" are
+        one cache key;
+      * ``algo="auto"`` fills ``chunks``/``codec`` from the selector's
+        plan unless the caller pinned them; ``error_budget`` (also
+        accepted inside ``kw``) gates which codecs the selector may pick
+        (0.0 = lossless only).
     """
     kw = dict(kw or {})
+    budget = kw.pop("error_budget", None)
+    if budget is None:
+        budget = error_budget
     nbytes = _message_bytes(collective, topo, x)
     cb = kw.pop("chunk_bytes", None)
     if cb:
@@ -266,13 +277,67 @@ def resolve_algo(topo: Topology, collective: str, algo: str, x,
                 f"{collective}/{algo} does not support chunking; "
                 f"chunk-capable algorithms: "
                 f"{sorted(_mcoll.CHUNKED[collective]) or 'none'}")
+        if _mcoll.supports_codec(collective, algo):
+            cdd = str(kw.get("codec", _codecs.NONE))
+            _codecs.codec(cdd)  # validate the name at resolution time
+            kw["codec"] = cdd
+        elif kw.get("codec", _codecs.NONE) != _codecs.NONE:
+            raise ValueError(
+                f"{collective}/{algo} does not support compression; "
+                f"codec-capable algorithms: "
+                f"{sorted(_mcoll.COMPRESSED[collective]) or 'none'}")
+        else:
+            kw.pop("codec", None)
         return algo, kw
+    pinned_codec = kw.get("codec")
+    if pinned_codec is not None:
+        pinned_codec = str(pinned_codec)
+        _codecs.codec(pinned_codec)  # validate the name before selection
+        if pinned_codec != _codecs.NONE:
+            if not any(_mcoll.supports_codec(collective, a)
+                       for a in autotune.candidates(collective, topo)):
+                raise ValueError(
+                    f"{collective} has no codec-capable algorithm; "
+                    f"codec={pinned_codec!r} cannot be honored")
+            # pinning a lossy codec IS an accuracy contract: selection
+            # must admit it even when no explicit budget was given
+            budget = max(float(budget),
+                         _codecs.meta(pinned_codec).error_bound)
     sel = autotune.default_selector().choose(
-        collective, topo, nbytes, dtype=str(x.dtype))
-    kw = _filter_kwargs(_mcoll.algorithm(collective, sel.algo), kw)
-    if _mcoll.supports_chunks(collective, sel.algo):
-        kw["chunks"] = int(kw.get("chunks", sel.chunks or 1))
-    return sel.algo, kw
+        collective, topo, nbytes, dtype=str(x.dtype),
+        error_budget=float(budget))
+    algo, chunks = sel.algo, sel.chunks
+    if pinned_codec not in (None, _codecs.NONE) and \
+            not _mcoll.supports_codec(collective, algo):
+        # the selector's winner cannot carry the pinned codec (e.g. a
+        # latency-regime algorithm): honor the pin by taking the cheapest
+        # codec-capable plan instead of silently dropping the knob
+        from repro.core import costmodel
+        net = costmodel.net_for(topo)
+        cnet = costmodel.codec_net(net, topo, pinned_codec)
+        best = None
+        for a in autotune.candidates(collective, topo):
+            if not _mcoll.supports_codec(collective, a):
+                continue
+            try:
+                c = (costmodel.optimal_chunks(collective, a, topo, nbytes,
+                                              cnet)
+                     if _mcoll.supports_chunks(collective, a) else 1)
+                t = costmodel.plan_cost(collective, a, topo, nbytes, net,
+                                        chunks=c, codec=pinned_codec).time
+            except ValueError:  # implemented but not modeled (cf. choose)
+                t, c = float("inf"), 1
+            if best is None or t < best[0]:
+                best = (t, a, c)
+        # the capability pre-check above guarantees >=1 codec-capable
+        # candidate, so best is always set (unmodeled ones rank last)
+        _, algo, chunks = best
+    kw = _filter_kwargs(_mcoll.algorithm(collective, algo), kw)
+    if _mcoll.supports_chunks(collective, algo):
+        kw["chunks"] = int(kw.get("chunks", chunks or 1))
+    if _mcoll.supports_codec(collective, algo):
+        kw["codec"] = str(kw.get("codec", sel.codec or _codecs.NONE))
+    return algo, kw
 
 
 # ---------------------------------------------------------------------------
@@ -331,7 +396,7 @@ def build(mesh, topo: Topology, collective: str, algo: str, *,
 
 
 def collective(mesh, topo: Topology, name: str, algo: str, x, *,
-               stacked: bool = True, **kw):
+               stacked: bool = True, error_budget: float = 0.0, **kw):
     """Run collective ``name`` with ``algo`` on ``x`` over ``mesh``.
 
     The supported entry point for hot loops: the AOT-compiled executable is
@@ -341,14 +406,19 @@ def collective(mesh, topo: Topology, name: str, algo: str, x, *,
 
     ``algo="auto"`` resolves through the selection subsystem (measured
     tuning table when calibrated, cost-model prior otherwise) before the
-    cache lookup — the key carries the *resolved* algorithm, so auto and
-    explicit callers share compiled executables.
+    cache lookup — the key carries the *resolved* plan (algorithm + chunk
+    count + codec), so auto and explicit callers share compiled
+    executables. ``error_budget`` lets auto pick an error-bounded codec
+    plan (``core.compress``); the default 0.0 keeps resolution lossless.
+    An explicit ``codec=`` kwarg pins the codec on the codec-capable
+    algorithms instead.
     """
     if name not in _WIRING:  # before selector resolution, for the friendly
         raise ValueError(f"unknown collective {name!r}; "  # error either way
                          f"one of {collectives()}")
     x = jnp.asarray(x)
-    algo, kw = resolve_algo(topo, name, algo, x, kw)
+    algo, kw = resolve_algo(topo, name, algo, x, kw,
+                            error_budget=error_budget)
     key = (mesh, topo, name, algo, stacked, _kw_key(kw),
            (tuple(x.shape), str(x.dtype)))
     compiled = _EXEC_CACHE.get(key)
@@ -401,6 +471,7 @@ class CalibrationRow:
     dtype: str
     seconds: float
     chunks: int = 1
+    codec: str = "none"
 
 
 def calibrate(mesh, topo: Topology,
@@ -408,13 +479,18 @@ def calibrate(mesh, topo: Topology,
               sizes: Iterable[int] = (256, 4096, 65536),
               dtype=jnp.float32, iters: int = 10,
               selector: Optional[autotune.Selector] = None,
+              codecs: Optional[Tuple[str, ...]] = None,
               path=None) -> List[CalibrationRow]:
-    """Timed sweeps of every candidate algorithm x size, through the same
+    """Timed sweeps of every candidate plan x size, through the same
     compiled-callable path hot loops use, recorded into the selector's
     tuning table (and saved to ``path`` as JSON when given).
 
-    After calibration, ``algo="auto"`` on this (topology, collective, dtype,
-    size bucket) resolves from measurement instead of the cost-model prior.
+    Plans cover every feasible algorithm, chunk-count variants for the
+    pipelined ones, and codec variants for the codec-capable ones
+    (``codecs=()`` restricts to lossless plans). After calibration,
+    ``algo="auto"`` on this (topology, collective, dtype, size bucket)
+    resolves from measurement instead of the cost-model prior — codec
+    entries still gated by the caller's ``error_budget`` at choose time.
     Calibrate with the same topology link metadata consumers use (e.g. both
     via ``Topology.from_mesh``) — the tuning-table key includes the links.
     """
@@ -423,12 +499,14 @@ def calibrate(mesh, topo: Topology,
     for name in (tuple(names) if names else collectives()):
         for nbytes in sizes:
             x = example_input(name, topo, int(nbytes), dtype)
-            # plans = every feasible algorithm, plus chunk-count variants
-            # for the pipelined ones (measured per plan, so the table can
-            # pick the chunk count per size bucket)
-            for algo, chunks in autotune.plans(name, topo, int(nbytes)):
-                kw = {"chunks": chunks} if \
-                    _mcoll.supports_chunks(name, algo) else {}
+            for algo, chunks, codec in autotune.plans(name, topo,
+                                                      int(nbytes),
+                                                      codecs=codecs):
+                kw = {}
+                if _mcoll.supports_chunks(name, algo):
+                    kw["chunks"] = chunks
+                if codec != _codecs.NONE:
+                    kw["codec"] = codec
                 jax.block_until_ready(
                     collective(mesh, topo, name, algo, x, **kw))  # compile
                 samples = []
@@ -440,10 +518,11 @@ def calibrate(mesh, topo: Topology,
                 sec = float(np.median(samples))
                 sel.table.record(topo, name, str(jnp.dtype(dtype)),
                                  int(nbytes),
-                                 autotune.encode_plan(algo, chunks), sec)
+                                 autotune.encode_plan(algo, chunks, codec),
+                                 sec)
                 rows.append(CalibrationRow(name, algo, int(nbytes),
                                            str(jnp.dtype(dtype)), sec,
-                                           chunks))
+                                           chunks, codec))
     if path is not None:
         sel.table.save(path)
     return rows

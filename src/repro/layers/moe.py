@@ -19,7 +19,10 @@ selection subsystem (``core.autotune``, the same selector
 link metadata is derived from the mesh. Large dispatch payloads resolve to
 the segmented ``pip_pipeline`` all-to-all, which pipelines the exchange in
 ``chunks`` independent segments. The resolved ``core.mcoll`` algorithm runs
-inside the shard_map body.
+inside the shard_map body. Under a caller ``error_budget`` the combine leg
+(expert outputs returning to their tokens) may additionally resolve to an
+error-bounded codec plan (``core.compress``) — the optional compressed
+combine path.
 """
 from __future__ import annotations
 
@@ -109,7 +112,7 @@ def _ep_capacity(n_tokens: int, tp_size: int, moe) -> int:
 
 
 def _moe_ep_shard(p_router, wg, wu, wd, x, cfg, tp_axis, tp_size, a2a_algo,
-                  a2a_chunks, tp_topo):
+                  a2a_chunks, comb_algo, comb_chunks, comb_codec, tp_topo):
     """Runs inside shard_map. x: (B_l, S, D) replicated over tp."""
     moe = cfg.moe
     B, S, D = x.shape
@@ -149,12 +152,21 @@ def _moe_ep_shard(p_router, wg, wu, wd, x, cfg, tp_axis, tp_size, a2a_algo,
     # which overlaps one segment's send with the next segment's regroup.
     # The chunk plan is sized for the token payload — the tiny eid/ok
     # metadata exchanges stay unsegmented (chunking them would only add
-    # per-collective latency in their latency-bound regime).
+    # per-collective latency in their latency-bound regime). The combine
+    # leg carries its own plan: under a caller error budget it may run
+    # compressed (expert outputs tolerate bounded error; dispatched tokens
+    # and routing metadata always move lossless).
     fn = mcoll.algorithm("alltoall", a2a_algo)
     a2a_kw = ({"chunks": a2a_chunks}
               if mcoll.supports_chunks("alltoall", a2a_algo) else {})
     a2a = partial(fn, topo=tp_topo, **a2a_kw)
     a2a_meta = partial(fn, topo=tp_topo)
+    cfn = mcoll.algorithm("alltoall", comb_algo)
+    comb_kw = ({"chunks": comb_chunks}
+               if mcoll.supports_chunks("alltoall", comb_algo) else {})
+    if comb_codec != "none" and mcoll.supports_codec("alltoall", comb_algo):
+        comb_kw["codec"] = comb_codec
+    a2a_combine = partial(cfn, topo=tp_topo, **comb_kw)
     rx = a2a(send_x).reshape(tp_size * cap, D)
     re = a2a_meta(send_eid).reshape(tp_size * cap)
     rok = a2a_meta(send_ok).reshape(tp_size * cap)
@@ -166,7 +178,7 @@ def _moe_ep_shard(p_router, wg, wu, wd, x, cfg, tp_axis, tp_size, a2a_algo,
     out = _expert_compute(rx[order], group_sizes, wg, wu, wd)[inv]
     out = jnp.where(rok[:, None], out, 0)
 
-    back = a2a(out.reshape(tp_size, cap, D))        # (tp, cap, D) my results
+    back = a2a_combine(out.reshape(tp_size, cap, D))  # (tp, cap, D) my results
     gathered = back[dest, pos_c]                    # (t*k, D); garbage if !valid
     contrib = gathered * (flat_w * valid)[:, None].astype(gathered.dtype)
     y_mine = contrib.reshape(t, k, D).sum(1)
@@ -177,8 +189,15 @@ def _moe_ep_shard(p_router, wg, wu, wd, x, cfg, tp_axis, tp_size, a2a_algo,
     return y_all.reshape(B, S, D), aux_vec
 
 
-def apply(p, x, cfg, rules=None, mesh=None):
-    """x: (B, S, D). Returns (y, aux_loss_per_token (B,S))."""
+def apply(p, x, cfg, rules=None, mesh=None, error_budget: float = 0.0):
+    """x: (B, S, D). Returns (y, aux_loss_per_token (B,S)).
+
+    ``error_budget`` opts the **combine** all-to-all (expert outputs coming
+    back) into error-bounded compression: the selector may pick any codec
+    whose stated bound fits the budget (``core.compress``), shrinking the
+    return leg's wire bytes. Dispatch and routing metadata always move
+    lossless — token values feed expert matmuls and indices must be exact.
+    """
     B, S, D = x.shape
     tp = rules.tp if rules else None
     tp_size = mesh.shape[tp] if (mesh is not None and tp in
@@ -200,12 +219,16 @@ def apply(p, x, cfg, rules=None, mesh=None):
     nbytes = tp_size * cap * D * x.dtype.itemsize
     a2a_sel = autotune.default_selector().choose(
         "alltoall", tp_topo, nbytes, dtype=str(x.dtype))
+    comb_sel = (autotune.default_selector().choose(
+        "alltoall", tp_topo, nbytes, dtype=str(x.dtype),
+        error_budget=error_budget) if error_budget > 0.0 else a2a_sel)
 
     xspec = P(batch_axes if batch_axes else None, None, None)
     fn = runtime.sharded(
         partial(_moe_ep_shard, cfg=cfg, tp_axis=tp, tp_size=tp_size,
                 a2a_algo=a2a_sel.algo, a2a_chunks=a2a_sel.chunks,
-                tp_topo=tp_topo),
+                comb_algo=comb_sel.algo, comb_chunks=comb_sel.chunks,
+                comb_codec=comb_sel.codec, tp_topo=tp_topo),
         mesh,
         in_specs=(P(None, None), P(tp, None, None), P(tp, None, None),
                   P(tp, None, None), xspec),

@@ -1,8 +1,10 @@
 """AdamW + gradient clipping + LR schedules, from scratch (pytree-native).
 
 Optimizer state is fp32 (m, v); params may be bf16 (master copies in fp32
-optional via `master_fp32`). Supports an optional int8 compressed gradient
-exchange with error feedback (see compress.py) for the DP sync path.
+optional via `master_fp32`). The DP gradient sync pairs with the
+error-bounded compressed-collective subsystem (``repro.core.compress``
+codecs + ``train.manual_step``'s per-bucket ``error_budget``) for
+wire-compressed exchange with error feedback.
 """
 from __future__ import annotations
 

@@ -1,117 +1,27 @@
-"""Int8 block-quantized gradient compression with error feedback.
+"""Int8 block-quantized gradient compression — compatibility re-export.
 
-Distributed-optimization trick for the DP gradient sync path: gradients are
-quantized to int8 with per-block fp32 scales before crossing the slow
-(DCN/pod) axis, and the quantization error is fed back into the next step's
-gradient (error feedback preserves convergence, Karimireddy et al. 2019).
+The codec math lives in :mod:`repro.core.compress` (the codec registry of
+the error-bounded compressed-collective subsystem); this module re-exports
+the original tree-level API so optimizer-side callers keep importing from
+``repro.optim.compress``. No quantize/dequantize implementation lives here.
 
-Wire ratio ~3.7x vs bf16 (int8 payload + one fp32 scale per 256 elements).
-Used by train.manual_step's mcoll allreduce variant; unit-tested for
-round-trip error bounds and error-feedback convergence in
-tests/test_optim.py.
+The bespoke ``compressed_allreduce`` that used to live in this module is
+superseded by the subsystem's compressed execution: call
+``runtime.collective(mesh, topo, "allreduce", "pip_mcoll", x,
+codec="int8_block")`` (or ``algo="auto"`` with an ``error_budget``), which
+shares the compiled-callable cache and the selection subsystem with every
+other consumer. Error feedback is threaded through ``err=`` on the
+``core.mcoll`` compressed allreduce.
 """
-from __future__ import annotations
+from repro.core.compress import (  # noqa: F401
+    BLOCK,
+    compress_tree,
+    decompress_tree,
+    dequantize,
+    init_error_state,
+    quantize,
+    wire_bytes,
+)
 
-from typing import List, Optional, Tuple
-
-import jax
-import jax.numpy as jnp
-
-BLOCK = 256
-
-
-def quantize(x):
-    """x: float array -> (int8 blocks, fp32 per-block scales)."""
-    flat = x.astype(jnp.float32).reshape(-1)
-    n = flat.shape[0]
-    pad = -n % BLOCK
-    padded = jnp.pad(flat, (0, pad))
-    blocks = padded.reshape(-1, BLOCK)
-    scale = jnp.max(jnp.abs(blocks), axis=1) / 127.0
-    q = jnp.clip(jnp.round(blocks / jnp.maximum(scale[:, None], 1e-12)),
-                 -127, 127)
-    return q.astype(jnp.int8), scale
-
-
-def dequantize(q, scale, shape):
-    blocks = q.astype(jnp.float32) * scale[:, None]
-    n = 1
-    for d in shape:
-        n *= d
-    return blocks.reshape(-1)[:n].reshape(shape)
-
-
-def init_error_state(grads):
-    return jax.tree.map(lambda g: jnp.zeros(g.shape, jnp.float32), grads)
-
-
-def compress_tree(grads, error_state):
-    """Quantize every leaf after adding carried error feedback.
-
-    Returns ((qs, scales) list-trees aligned with grads, new_error_state)."""
-    leaves, treedef = jax.tree.flatten(grads)
-    err_leaves = jax.tree.leaves(error_state)
-    qs: List = []
-    scales: List = []
-    new_err: List = []
-    for g, e in zip(leaves, err_leaves):
-        corrected = g.astype(jnp.float32) + e
-        q, s = quantize(corrected)
-        back = dequantize(q, s, g.shape)
-        qs.append(q)
-        scales.append(s)
-        new_err.append(corrected - back)
-    return (qs, scales, treedef), jax.tree.unflatten(treedef, new_err)
-
-
-def decompress_tree(compressed, shapes_like):
-    qs, scales, treedef = compressed
-    shape_leaves = [l.shape for l in jax.tree.leaves(shapes_like)]
-    out = [dequantize(q, s, shp)
-           for q, s, shp in zip(qs, scales, shape_leaves)]
-    return jax.tree.unflatten(treedef, out)
-
-
-def wire_bytes(compressed) -> int:
-    qs, scales, _ = compressed
-    return sum(q.size for q in qs) + sum(s.size * 4 for s in scales)
-
-
-# ---------------------------------------------------------------------------
-# int8-on-the-wire allreduce (runs inside shard_map)
-# ---------------------------------------------------------------------------
-
-
-def compressed_allreduce(x, topo):
-    """Allreduce keeping int8 payloads on the wire in BOTH phases:
-    (1) all-to-all the quantized slices (reduce-scatter pattern),
-    (2) local dequant + sum + requant,
-    (3) all-gather the reduced int8 slices.
-
-    ~3.7x wire reduction vs bf16 at <0.8% per-block quantization error.
-    Must run inside shard_map over topo.axes; x: (n,) fp32 per device."""
-    import jax
-    from jax import lax
-
-    W = topo.world
-    n = x.shape[0]
-    padded = -(-n // (W * BLOCK)) * (W * BLOCK)
-    xp = jnp.pad(x.astype(jnp.float32), (0, padded - n))
-    slices = xp.reshape(W, padded // W)
-    q, s = quantize(slices.reshape(-1))           # blocks of all slices
-    qs = q.reshape(W, -1, BLOCK)                  # (W, blocks/slice, BLOCK)
-    ss = s.reshape(W, -1)
-    # phase 1: slice i of every peer -> device i   (int8 + fp32 scales)
-    rq = lax.all_to_all(qs, topo.axes, split_axis=0, concat_axis=0,
-                        tiled=False)              # (W, blocks/slice, BLOCK)
-    rs = lax.all_to_all(ss, topo.axes, split_axis=0, concat_axis=0,
-                        tiled=False)
-    # phase 2: dequant + sum over sources, requant
-    deq = rq.astype(jnp.float32) * rs[..., None]  # (W, blk, BLOCK)
-    mine = deq.sum(axis=0).reshape(-1)            # my reduced slice
-    q2, s2 = quantize(mine)
-    # phase 3: all-gather reduced slices (int8 + scales)
-    gq = lax.all_gather(q2, topo.axes, axis=0, tiled=False)
-    gs = lax.all_gather(s2, topo.axes, axis=0, tiled=False)
-    full = (gq.astype(jnp.float32) * gs[..., None]).reshape(-1)
-    return full[:n]
+__all__ = ["BLOCK", "quantize", "dequantize", "init_error_state",
+           "compress_tree", "decompress_tree", "wire_bytes"]

@@ -13,7 +13,10 @@ Token-level sync across DP replicas (multi-host) is a small-message
 collective — the paper's regime. When the engine is given a mesh/topology
 it syncs each tick's sampled tokens through ``runtime.collective`` with the
 algorithm resolved by the selection subsystem (``algo="auto"``: cost-model
-prior until a calibration table is loaded, measured table after)."""
+prior until a calibration table is loaded, measured table after). The
+engine exposes ``sync_error_budget`` — the subsystem-wide accuracy knob —
+on that plan resolution (integer token payloads always resolve lossless;
+see ``Engine.__init__``)."""
 from __future__ import annotations
 
 import dataclasses
@@ -41,7 +44,7 @@ class Engine:
     def __init__(self, params, cfg, max_batch: int = 8, max_len: int = 256,
                  flags: RunFlags = RunFlags(), greedy: bool = True,
                  mesh=None, topo: Optional[Topology] = None,
-                 sync_algo: str = "auto"):
+                 sync_algo: str = "auto", sync_error_budget: float = 0.0):
         self.params = params
         self.cfg = cfg
         self.max_batch = max_batch
@@ -49,10 +52,17 @@ class Engine:
         self.flags = flags
         # DP replica token sync: algorithm resolved per tick payload by the
         # selection subsystem (sync_algo="auto"), or pinned explicitly.
+        # sync_error_budget is the engine's accuracy knob on that plan: it
+        # flows into the selector's codec gating (core.compress). Today's
+        # token sync is an integer broadcast, which has no codec-capable
+        # algorithm, so resolution stays lossless for any budget — but the
+        # knob is part of the engine API so float-payload syncs (logit /
+        # hidden-state replication) inherit the budget semantics.
         self.mesh = mesh
         self.topo = (topo if topo is not None else
                      (Topology.from_mesh(mesh) if mesh is not None else None))
         self.sync_algo = sync_algo
+        self.sync_error_budget = float(sync_error_budget)
         self.caches = decoder.init_cache(cfg, max_batch, max_len)
         self.lengths = np.zeros(max_batch, np.int32)
         self.active: List[Optional[Request]] = [None] * max_batch
@@ -80,7 +90,8 @@ class Engine:
             return nxt  # nothing to reconcile; skip the per-token dispatch
         out = runtime.collective(self.mesh, self.topo, "broadcast",
                                  self.sync_algo,
-                                 jnp.asarray(nxt, jnp.int32))
+                                 jnp.asarray(nxt, jnp.int32),
+                                 error_budget=self.sync_error_budget)
         return np.asarray(out[0])
 
     # NOTE: slot-at-a-time prefill keeps the demo simple; the fused decode

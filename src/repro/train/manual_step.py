@@ -13,18 +13,22 @@ builds a shard_map'd step in which
     per-tensor latency-bound syncs into few large transfers sized where the
     chunked pipeline (``pip_pipeline`` + per-bucket chunk count from the
     selection subsystem) overlaps intra- and inter-node stages,
-  - the algorithm per payload is resolved through the selection subsystem
+  - the plan per payload is resolved through the selection subsystem
     (``algo="auto"``, the default) — or pinned explicitly via ``algo=`` /
-    ``chunks=``,
-  - optional int8 block-quantized compression with error feedback halves
-    the wire bytes across the `node` (slow) axis,
-  - scalar metrics run through the same selection (small-message regime —
-    the paper's headline case).
+    ``chunks=`` / ``codec=``,
+  - ``error_budget`` opts the gradient sync into error-bounded compression
+    (``core.compress``): the selector may pick any codec whose stated
+    relative-error bound fits the budget (``0.0`` = lossless plans only),
+    and the compressed allreduce threads **error-feedback state** per
+    bucket so the accumulated update tracks the true gradient sum,
+  - scalar metrics and the loss always sync lossless (small-message regime
+    — the paper's headline case — and reported numbers must be exact).
 
 The pjit path (train.step) remains the default for the dry-run; this path
 is validated against it on multi-device CPU meshes in
-tests/checks/manual_step_check.py (same loss/grads to fp32 tolerance, and
-the bucketed path bit-exact against the unbucketed one).
+tests/checks/manual_step_check.py (same loss/grads to fp32 tolerance, the
+bucketed path bit-exact against the unbucketed one, and the compressed
+variant still descending).
 """
 from __future__ import annotations
 
@@ -36,8 +40,9 @@ from jax import lax
 from jax.sharding import PartitionSpec as P
 
 from repro.core import autotune, costmodel, mcoll, runtime
+from repro.core import compress as codecs
 from repro.core.topology import Topology
-from repro.optim import adamw, compress
+from repro.optim import adamw
 from repro.train.step import TrainConfig, loss_fn
 
 #: default gradient bucket size — large enough that the pipelined allreduce
@@ -45,30 +50,75 @@ from repro.train.step import TrainConfig, loss_fn
 DEFAULT_BUCKET_BYTES = 4 << 20
 
 
-def _make_sync(topo: Topology, algo: str, chunks: Optional[int] = None):
-    """Mean-allreduce for one payload: ``algo="auto"`` resolves a full
-    (algorithm, chunk count) plan through the default selector at trace
-    time (shapes are static, so selection is a Python-level decision baked
-    into the jitted step). An explicit ``chunks`` pins the pipelining knob
-    for chunk-capable algorithms."""
+def _resolve_plan(topo: Topology, nbytes: int, dtype, algo: str,
+                  chunks: Optional[int], codec: Optional[str],
+                  error_budget: float) -> Tuple[str, dict]:
+    """(algorithm, kwargs) plan for one allreduce payload, resolved at
+    trace time (shapes are static, so selection is a Python-level decision
+    baked into the jitted step).
+
+    ``algo="auto"`` takes the selector's full (algo, chunks, codec) plan
+    under the error budget. A pinned ``algo`` with ``codec=None`` and a
+    positive budget still picks the cheapest admissible codec for that
+    algorithm via the cost model (so ``algo="pip_mcoll"`` + budget works
+    like auto's codec dimension, just with the algorithm fixed)."""
     net = costmodel.net_for(topo)
+    name, c, cd = algo, chunks, codec
+    if name == "auto":
+        sel = autotune.default_selector().choose(
+            "allreduce", topo, nbytes, net=net, dtype=str(dtype),
+            error_budget=error_budget)
+        name = sel.algo
+        if c is None:
+            c = sel.chunks
+        if cd is None:
+            cd = sel.codec
+    elif cd is None and error_budget > 0.0 and \
+            mcoll.supports_codec("allreduce", name):
+        cd = min(codecs.for_budget(error_budget),
+                 key=lambda k: costmodel.plan_cost(
+                     "allreduce", name, topo, nbytes, net,
+                     chunks=c or 1, codec=k).time)
+    kw = {}
+    if c and mcoll.supports_chunks("allreduce", name):
+        kw["chunks"] = int(c)
+    if cd and cd != codecs.NONE and mcoll.supports_codec("allreduce", name):
+        kw["codec"] = cd
+    return name, kw
+
+
+def _make_sync(topo: Topology, algo: str, chunks: Optional[int] = None):
+    """Lossless mean-allreduce for one payload (metrics, loss, and the
+    unbucketed gradient path)."""
 
     def sync_mean(v):
         g = jnp.asarray(v, jnp.float32).reshape(-1)
-        name, c = algo, chunks
-        if name == "auto":
-            sel = autotune.default_selector().choose(
-                "allreduce", topo, g.size * g.dtype.itemsize, net=net,
-                dtype=str(g.dtype))
-            name = sel.algo
-            if c is None:
-                c = sel.chunks
-        kw = ({"chunks": int(c)}
-              if c and mcoll.supports_chunks("allreduce", name) else {})
+        name, kw = _resolve_plan(topo, g.size * g.dtype.itemsize, g.dtype,
+                                 algo, chunks, None, 0.0)
         out = mcoll.algorithm("allreduce", name)(g, topo, **kw) / topo.world
         return out.reshape(jnp.shape(v))
 
     return sync_mean
+
+
+def _make_grad_sync(topo: Topology, algo: str, chunks: Optional[int],
+                    codec: Optional[str], error_budget: float):
+    """Mean-allreduce with error-feedback threading for gradient buckets:
+    ``sync(x, err) -> (mean, new_err)``. When the resolved plan is
+    lossless (or carries no feedback state), ``err`` passes through."""
+
+    def sync(v, err):
+        g = jnp.asarray(v, jnp.float32).reshape(-1)
+        name, kw = _resolve_plan(topo, g.size * g.dtype.itemsize, g.dtype,
+                                 algo, chunks, codec, error_budget)
+        fn = mcoll.algorithm("allreduce", name)
+        if kw.get("codec") and err is not None:
+            out, err = fn(g, topo, err=err, **kw)
+        else:
+            out = fn(g, topo, **kw)
+        return (out / topo.world).reshape(jnp.shape(v)), err
+
+    return sync
 
 
 def bucket_slices(total: int, bucket_elems: int) -> List[Tuple[int, int]]:
@@ -80,64 +130,88 @@ def bucket_slices(total: int, bucket_elems: int) -> List[Tuple[int, int]]:
     return [(s, min(b, total - s)) for s in range(0, total, b)]
 
 
-def sync_tree_bucketed(grads, sync_fn, bucket_bytes: int):
+def sync_tree_bucketed(grads, sync_fn, bucket_bytes: int, err_state=None):
     """Flatten a gradient tree into fp32 buckets of ``bucket_bytes``, run
-    ``sync_fn`` once per bucket, and restore the tree structure.
+    ``sync_fn(bucket, err) -> (synced, new_err)`` once per bucket, and
+    restore the tree structure. Returns ``(synced_tree, new_err_state)``.
 
     One allreduce per bucket instead of one per tensor: small tensors stop
     paying per-collective latency, and every bucket is large enough for the
     pipelined algorithms to win. Elementwise reductions make the result
     bit-identical to syncing each leaf with the same algorithm.
+    ``err_state`` is a tuple of per-bucket error-feedback buffers (from
+    :func:`init_error_state`) or empty for lossless sync.
     """
     leaves, treedef = jax.tree_util.tree_flatten(grads)
     if not leaves:
-        return grads
+        return grads, err_state
     flat = (jnp.concatenate(
         [jnp.asarray(l, jnp.float32).reshape(-1) for l in leaves])
         if len(leaves) > 1
         else jnp.asarray(leaves[0], jnp.float32).reshape(-1))
     bucket_elems = max(1, int(bucket_bytes) // 4)  # fp32 wire dtype
-    synced = [sync_fn(lax.dynamic_slice_in_dim(flat, start, n, axis=0))
-              for start, n in bucket_slices(flat.size, bucket_elems)]
+    slices = bucket_slices(flat.size, bucket_elems)
+    errs = list(err_state) if err_state else [None] * len(slices)
+    assert len(errs) == len(slices), \
+        f"error state has {len(errs)} buckets, payload needs {len(slices)}"
+    synced, new_errs = [], []
+    for (start, n), e in zip(slices, errs):
+        y, e2 = sync_fn(lax.dynamic_slice_in_dim(flat, start, n, axis=0), e)
+        synced.append(y)
+        new_errs.append(e2)
     flat = jnp.concatenate(synced) if len(synced) > 1 else synced[0]
     out, off = [], 0
     for l in leaves:
         out.append(flat[off:off + l.size].reshape(jnp.shape(l)))
         off += l.size
-    return jax.tree_util.tree_unflatten(treedef, out)
+    new_state = tuple(e for e in new_errs if e is not None)
+    return jax.tree_util.tree_unflatten(treedef, out), new_state
 
 
 def make_manual_train_step(cfg, tcfg: TrainConfig, mesh, topo: Topology,
                            algo: str = "auto",
-                           compress_grads: bool = False,
+                           error_budget: float = 0.0,
                            bucketed: bool = True,
                            bucket_bytes: int = DEFAULT_BUCKET_BYTES,
-                           chunks: Optional[int] = None):
+                           chunks: Optional[int] = None,
+                           codec: Optional[str] = None):
     """Data-parallel over topo.axes (node=slow/pod axis, local=fast axis).
     Params replicated; batch sharded over both axes.
 
     ``algo`` names an allreduce algorithm from core.mcoll, or "auto"
-    (default) to let the selection subsystem pick an (algorithm, chunks)
-    plan per payload size. ``bucketed`` (default) flattens the grad tree
-    into ``bucket_bytes`` buckets with one pipelined allreduce each —
-    bit-exact with the per-tensor path for the same algorithm;
-    ``chunks`` pins the pipelining knob instead of the selector's plan."""
+    (default) to let the selection subsystem pick an (algorithm, chunks,
+    codec) plan per payload size. ``error_budget`` admits error-bounded
+    codecs into the gradient-sync plan (``0.0`` = lossless; loss/metric
+    syncs stay lossless regardless), with error feedback threaded per
+    bucket. ``bucketed`` (default) flattens the grad tree into
+    ``bucket_bytes`` buckets with one pipelined allreduce each — bit-exact
+    with the per-tensor path for the same lossless plan; ``chunks`` /
+    ``codec`` pin those knobs instead of the selector's plan. Error
+    feedback requires the bucketed path (its state is per bucket); the
+    unbucketed path compresses statelessly."""
     sync_mean = _make_sync(topo, algo, chunks)
+    grad_sync = _make_grad_sync(topo, algo, chunks, codec, error_budget)
+
+    def bucket_sync(v, e):
+        # error buffers are DEVICE state: globally (world, n) sharded over
+        # the mesh axes, (1, n) per device inside the shard_map (residuals
+        # live at device-dependent offsets, so a replicated spec would lie
+        # about the invariant and lose every shard but device 0's on
+        # materialization)
+        if e is None:
+            return grad_sync(v, None)
+        y, e2 = grad_sync(v, e[0])
+        return y, e2[None]
 
     def step(params, opt_state, err_state, batch):
         (loss, metrics), grads = jax.value_and_grad(
             loss_fn, has_aux=True)(params, batch, cfg, tcfg, None, None)
 
-        if compress_grads:
-            comp, err_state = compress.compress_tree(grads, err_state)
-            # int8 payloads sum correctly only after dequant: allreduce the
-            # dequantized fp32 (scales ride along) — wire bytes modeled by
-            # the cost layer; semantics validated in tests.
-            grads = compress.decompress_tree(comp, grads)
         if bucketed:
-            grads = sync_tree_bucketed(grads, sync_mean, bucket_bytes)
+            grads, err_state = sync_tree_bucketed(grads, bucket_sync,
+                                                  bucket_bytes, err_state)
         else:
-            grads = jax.tree.map(sync_mean, grads)
+            grads = jax.tree.map(lambda g: grad_sync(g, None)[0], grads)
         loss = sync_mean(loss.reshape(1))[0]
 
         new_params, new_opt, om = adamw.update(params, grads, opt_state,
@@ -148,15 +222,31 @@ def make_manual_train_step(cfg, tcfg: TrainConfig, mesh, topo: Topology,
                    for k, v in metrics.items()}
         return new_params, new_opt, err_state, metrics
 
+    err_spec = P(topo.axes) if error_budget > 0.0 else P()
     mapped = runtime.sharded(
         step, mesh,
-        in_specs=(P(), P(), P(), P(topo.axes)),
-        out_specs=(P(), P(), P(), P()),
+        in_specs=(P(), P(), err_spec, P(topo.axes)),
+        out_specs=(P(), P(), err_spec, P()),
         check=False)
     return jax.jit(mapped, donate_argnums=(0, 1, 2))
 
 
-def init_error_state(params, enabled: bool):
-    if not enabled:
-        return jax.tree.map(lambda p: jnp.zeros((1,), jnp.float32), params)
-    return compress.init_error_state(params)
+def init_error_state(params, error_budget: float = 0.0,
+                     bucket_bytes: int = DEFAULT_BUCKET_BYTES,
+                     topo: Optional[Topology] = None):
+    """Per-bucket error-feedback buffers for the compressed gradient sync:
+    a tuple of zero fp32 ``(world, bucket_len)`` arrays (row d = device
+    d's residuals; sharded over the mesh axes by the step) matching
+    :func:`bucket_slices` over the flattened parameter count. Empty (no
+    state) when the budget is 0 — lossless sync carries nothing between
+    steps."""
+    if error_budget <= 0.0:
+        return ()
+    if topo is None:
+        raise ValueError("init_error_state needs the topology when "
+                         "error_budget > 0 (error feedback is per-device "
+                         "state, shaped (world, bucket_len))")
+    total = sum(int(jnp.size(l)) for l in jax.tree.leaves(params))
+    bucket_elems = max(1, int(bucket_bytes) // 4)
+    return tuple(jnp.zeros((topo.world, n), jnp.float32)
+                 for _, n in bucket_slices(total, bucket_elems))

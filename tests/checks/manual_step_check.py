@@ -38,7 +38,7 @@ ref_p, ref_o, ref_m = jax.jit(
 # manual mcoll step (pip_mcoll allreduce, per-tensor sync)
 step = manual_step.make_manual_train_step(cfg, tcfg, mesh, topo,
                                           algo="pip_mcoll", bucketed=False)
-err = manual_step.init_error_state(params, False)
+err = manual_step.init_error_state(params)
 man_p, man_o, _, man_m = step(params, opt, err, batch)
 
 np.testing.assert_allclose(float(man_m["loss"]), float(ref_m["loss"]),
@@ -54,7 +54,7 @@ assert worst < 5e-2, worst  # bf16 params; identical update within rounding
 params_a = decoder.init(key, cfg)
 opt_a = adamw.init(params_a, ocfg)
 step_auto = manual_step.make_manual_train_step(cfg, tcfg, mesh, topo)
-err_a = manual_step.init_error_state(params_a, False)
+err_a = manual_step.init_error_state(params_a)
 _, _, _, auto_m = step_auto(params_a, opt_a, err_a, batch)
 np.testing.assert_allclose(float(auto_m["loss"]), float(ref_m["loss"]),
                            rtol=1e-5)
@@ -77,14 +77,12 @@ ob = adamw.init(pb, ocfg)
 step_b = manual_step.make_manual_train_step(
     cfg, tcfg, mesh, topo, algo="pip_pipeline", bucketed=True,
     bucket_bytes=256 << 10)  # several buckets for this model
-bp, bo, _, bm = step_b(pb, ob, manual_step.init_error_state(pb, False),
-                       batch)
+bp, bo, _, bm = step_b(pb, ob, manual_step.init_error_state(pb), batch)
 pu = decoder.init(key, cfg)
 ou = adamw.init(pu, ocfg)
 step_u = manual_step.make_manual_train_step(
     cfg, tcfg, mesh, topo, algo="pip_pipeline", bucketed=False)
-up, uo, _, um = step_u(pu, ou, manual_step.init_error_state(pu, False),
-                       batch)
+up, uo, _, um = step_u(pu, ou, manual_step.init_error_state(pu), batch)
 bucket_diffs = jax.tree.map(
     lambda a, b: float(jnp.abs(a.astype(jnp.float32)
                                - b.astype(jnp.float32)).max()), bp, up)
@@ -92,20 +90,30 @@ worst_bucket = max(jax.tree.leaves(bucket_diffs))
 assert worst_bucket == 0.0, f"bucketed sync not bit-exact: {worst_bucket}"
 assert float(bm["loss"]) == float(um["loss"]), (bm["loss"], um["loss"])
 
-# compressed variant: loss must still go DOWN over a few steps
+# compressed variant (error_budget admits int8_block; error feedback state
+# threads per bucket): loss must still go DOWN over a few steps
 # (params/opt were donated above -- rebuild fresh copies)
+BUDGET = 0.004  # admits int8_block (bound 0.5/127), excludes fp8/topk
 params = decoder.init(key, cfg)
 opt = adamw.init(params, ocfg)
-step_c = manual_step.make_manual_train_step(cfg, tcfg, mesh, topo,
-                                            algo="pip_mcoll",
-                                            compress_grads=True)
+step_c = manual_step.make_manual_train_step(
+    cfg, tcfg, mesh, topo, algo="pip_mcoll", error_budget=BUDGET,
+    codec="int8_block", bucket_bytes=256 << 10)
 p2, o2 = params, opt
-err = manual_step.init_error_state(params, True)
+err = manual_step.init_error_state(params, BUDGET, bucket_bytes=256 << 10,
+                                   topo=topo)
+assert len(err) > 1, "expected multiple per-bucket feedback buffers"
+assert err[0].shape[0] == topo.world, "per-device feedback rows"
 losses = []
 for i in range(6):
     p2, o2, err, m = step_c(p2, o2, err, batch)
     losses.append(float(m["loss"]))
 assert losses[-1] < losses[0], losses
+# feedback buffers must carry non-zero residuals after a compressed step,
+# on EVERY device (the state is per-device, sharded — not replicated)
+e0 = np.asarray(err[0])
+assert all(np.abs(e0[d]).max() > 0 for d in range(topo.world)), \
+    "error feedback never engaged on some device"
 print(f"manual_step_check N={N} P={P}: OK worst_param_diff={worst:.2e} "
       f"bucketed_bitexact_diff={worst_bucket:.1e} "
       f"compressed_losses={losses[0]:.4f}->{losses[-1]:.4f}")

@@ -1,11 +1,12 @@
 """Selection subsystem: candidate coverage, crossover behavior, measured
 calibration beating priors, tuning-table persistence, topology link
-metadata, and the 8-device algo="auto" equivalence check."""
+metadata, error-budget codec gating, and the 8-device algo="auto"
+equivalence check."""
 import jax
 import numpy as np
 import pytest
 
-from repro.core import autotune, costmodel, mcoll
+from repro.core import autotune, compress, costmodel, mcoll
 from repro.core.autotune import Selector, TuningTable
 from repro.core.topology import Topology, derive_link
 
@@ -109,6 +110,155 @@ def test_measured_chunked_plan_decodes():
                      autotune.encode_plan("pip_pipeline", 8), 1e-6)
     s = sel.choose("allreduce", topo, 1 << 20)
     assert (s.algo, s.chunks, s.source) == ("pip_pipeline", 8, "measured")
+
+
+# ---------------------------------------------------------------------------
+# error budget: codec plan gating (the accuracy contract)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("coll", SIX)
+def test_zero_budget_provably_never_lossy(coll):
+    """With error_budget=0.0 (the default) the selector can never emit a
+    lossy plan: (a) candidate enumeration admits only "none", (b) a full
+    size sweep on every topology class resolves codec="none", (c) even a
+    poisoned tuning table with fast lossy measurements cannot leak one."""
+    for algo in autotune.candidates(coll):
+        assert autotune.codec_candidates(coll, algo, 0.0) == ("none",)
+    for topo in (Topology(16, 16, node_link="tpu_v5e_dcn",
+                          local_link="tpu_v5e_ici"),
+                 Topology(128, 18, node_link="pip", local_link="pip"),
+                 Topology(1, 8), Topology(4, 2)):
+        sel = Selector()
+        for i in range(4, 27):
+            s = sel.choose(coll, topo, 1 << i)  # default budget: 0.0
+            assert s.codec == "none", (coll, topo, 1 << i, s)
+    # poisoned table: lossy plan measured fastest in the bucket
+    topo = Topology(4, 2)
+    sel = Selector()
+    for algo in autotune.candidates(coll, topo):
+        if mcoll.supports_codec(coll, algo):
+            sel.table.record(topo, coll, "float32", 1 << 20,
+                             autotune.encode_plan(algo, 1, "topk"), 1e-12)
+    sel.table.record(topo, coll, "float32", 1 << 20, "xla", 1e-3)
+    s = sel.choose(coll, topo, 1 << 20)
+    assert s.codec == "none", s
+    # ... while a permissive budget may use the measured lossy entry
+    if any(mcoll.supports_codec(coll, a)
+           for a in autotune.candidates(coll, topo)):
+        s2 = sel.choose(coll, topo, 1 << 20, error_budget=1.0)
+        assert s2.codec == "topk" and s2.source == "measured", s2
+
+
+def test_budget_admits_codecs_and_compressed_wins_bandwidth_regime():
+    """Under a budget, the large-message prior resolves to a codec plan
+    that strictly beats the lossless plan; the admitted codec respects the
+    bound ordering (tighter budget -> tighter codec)."""
+    topo = Topology(16, 16, node_link="tpu_v5e_dcn", local_link="tpu_v5e_ici")
+    sel = Selector()
+    lossless = sel.choose("allreduce", topo, 1 << 24)
+    b_int8 = compress.meta("int8_block").error_bound
+    s = sel.choose("allreduce", topo, 1 << 24, error_budget=b_int8)
+    assert s.codec == "int8_block", s
+    assert s.seconds < lossless.seconds
+    s2 = sel.choose("allreduce", topo, 1 << 24, error_budget=1.0)
+    assert s2.codec != "none"
+    assert s2.seconds <= s.seconds
+    # small messages stay lossless even under an unlimited budget: the
+    # codec flop cost cannot buy anything in the latency-bound regime
+    small = sel.choose("allreduce", topo, 64, error_budget=1.0)
+    assert small.codec == "none", small
+
+
+def test_budget_is_part_of_the_memo_key():
+    """The same (collective, size) resolved under different budgets must
+    not share memoized Selections."""
+    topo = Topology(16, 16, node_link="tpu_v5e_dcn", local_link="tpu_v5e_ici")
+    sel = Selector()
+    a = sel.choose("allreduce", topo, 1 << 24, error_budget=0.0)
+    b = sel.choose("allreduce", topo, 1 << 24, error_budget=1.0)
+    assert a.codec == "none" and b.codec != "none"
+    assert sel.choose("allreduce", topo, 1 << 24).codec == "none"
+
+
+def test_measured_codec_plan_decodes_and_respects_budget():
+    """A measured "algo#cN@codec" plan resolves to its full triple under an
+    admitting budget, and is filtered under a tighter one."""
+    topo = Topology(4, 2)
+    sel = Selector()
+    sel.table.record(topo, "allreduce", "float32", 1 << 20, "xla", 1e-3)
+    sel.table.record(
+        topo, "allreduce", "float32", 1 << 20,
+        autotune.encode_plan("pip_pipeline", 8, "int8_block"), 1e-6)
+    s = sel.choose("allreduce", topo, 1 << 20,
+                   error_budget=compress.meta("int8_block").error_bound)
+    assert (s.algo, s.chunks, s.codec, s.source) == \
+        ("pip_pipeline", 8, "int8_block", "measured")
+    tight = sel.choose("allreduce", topo, 1 << 20, error_budget=1e-6)
+    assert tight.codec == "none" and tight.algo == "xla"
+
+
+def test_unknown_codec_in_table_skipped():
+    """A table recorded by a build with extra codecs must not crash or be
+    selected — unknown codec names are skipped."""
+    topo = Topology(4, 2)
+    sel = Selector()
+    sel.table.record(topo, "allreduce", "float32", 256,
+                     "pip_mcoll@future_codec", 1e-12)
+    sel.table.record(topo, "allreduce", "float32", 256, "xla", 1e-3)
+    s = sel.choose("allreduce", topo, 256, error_budget=1.0)
+    assert s.algo == "xla" and s.source == "measured"
+
+
+def test_integer_dtypes_force_lossless_resolution():
+    """auto with a positive budget on integer/bool payloads must resolve
+    lossless (the compressed execution rejects integer payloads, so the
+    selector must never plan one) — including from a poisoned table."""
+    topo = Topology(16, 16, node_link="tpu_v5e_dcn", local_link="tpu_v5e_ici")
+    sel = Selector()
+    for dt in ("int32", "int8", "uint8", "bool"):
+        s = sel.choose("allreduce", topo, 1 << 24, dtype=dt,
+                       error_budget=1.0)
+        assert s.codec == "none", (dt, s)
+    # float dtypes are unaffected
+    assert sel.choose("allreduce", topo, 1 << 24, dtype="bfloat16",
+                      error_budget=1.0).codec != "none"
+    t2 = Topology(4, 2)
+    sel2 = Selector()
+    sel2.table.record(t2, "allreduce", "int32", 1 << 20,
+                      autotune.encode_plan("pip_mcoll", 1, "topk"), 1e-12)
+    sel2.table.record(t2, "allreduce", "int32", 1 << 20, "xla", 1e-3)
+    s = sel2.choose("allreduce", t2, 1 << 20, dtype="int32",
+                    error_budget=1.0)
+    assert s.codec == "none" and s.algo == "xla"
+
+
+def test_codec_candidates_only_for_capable_algorithms():
+    assert autotune.codec_candidates("allreduce", "xla", 1.0) == ("none",)
+    assert autotune.codec_candidates("broadcast", "pip_mcoll", 1.0) == \
+        ("none",)
+    cands = autotune.codec_candidates("allreduce", "pip_mcoll", 1.0)
+    assert cands[0] == "none" and set(compress.lossy()) <= set(cands)
+
+
+def test_plan_cost_prices_codec_wire_and_flops():
+    """plan_cost scales the wire beta by the codec ratio and adds the flop
+    term: compressed is cheaper at bandwidth-bound sizes, costlier at
+    latency-bound ones."""
+    topo = Topology(16, 16, node_link="tpu_v5e_dcn", local_link="tpu_v5e_ici")
+    net = costmodel.net_for(topo)
+    big_l = costmodel.plan_cost("allreduce", "pip_mcoll", topo, 1 << 24, net)
+    big_c = costmodel.plan_cost("allreduce", "pip_mcoll", topo, 1 << 24,
+                                net, codec="int8_block")
+    assert big_c.time < big_l.time
+    assert big_c.inter_bytes_per_nic < big_l.inter_bytes_per_nic
+    tiny_l = costmodel.plan_cost("allreduce", "pip_mcoll", topo, 16, net)
+    tiny_c = costmodel.plan_cost("allreduce", "pip_mcoll", topo, 16, net,
+                                 codec="int8_block")
+    assert tiny_c.time >= tiny_l.time * 0.999  # flops >= wire savings
+    xo = costmodel.compressed_crossover_bytes("allreduce", "pip_pipeline",
+                                              topo, net, "int8_block")
+    assert xo is not None and xo >= 64
 
 
 # ---------------------------------------------------------------------------

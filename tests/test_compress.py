@@ -1,0 +1,212 @@
+"""Codec registry units: round-trip bounds, edge cases (non-block-divisible
+sizes, bf16 inputs, all-zero blocks), error-feedback properties over many
+iterations, budget gating, and the optim re-export."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from _hypothesis_compat import given, settings, strategies as st
+
+from repro.core import compress
+
+LOSSY = compress.lossy()
+
+
+# ---------------------------------------------------------------------------
+# registry + metadata
+# ---------------------------------------------------------------------------
+
+
+def test_registry_names_and_order():
+    names = compress.codecs()
+    assert names[0] == "none"
+    assert {"int8_block", "fp8_sim", "topk"} <= set(names)
+    assert set(LOSSY) == set(names) - {"none"}
+
+
+def test_meta_sanity():
+    assert compress.meta("none").lossless
+    assert compress.meta("none").error_bound == 0.0
+    for name in LOSSY:
+        m = compress.meta(name)
+        assert m.wire_ratio > 1.0, name
+        assert 0 < m.error_bound <= 1.0, name
+        assert not m.lossless
+    # documented bound ordering: int8 tighter than fp8 tighter than topk
+    assert (compress.meta("int8_block").error_bound
+            < compress.meta("fp8_sim").error_bound
+            < compress.meta("topk").error_bound)
+
+
+def test_unknown_codec_rejected():
+    with pytest.raises(ValueError, match="unknown codec"):
+        compress.codec("zstd")
+
+
+def test_for_budget_gating():
+    assert compress.for_budget(0.0) == ("none",)
+    b_int8 = compress.meta("int8_block").error_bound
+    assert set(compress.for_budget(b_int8)) == {"none", "int8_block"}
+    assert set(compress.for_budget(0.07)) == {"none", "int8_block",
+                                              "fp8_sim"}
+    assert set(compress.for_budget(1.0)) == set(compress.codecs())
+
+
+# ---------------------------------------------------------------------------
+# round-trip bounds (the stated contract the selector relies on)
+# ---------------------------------------------------------------------------
+
+
+def _roundtrip_err(name, x2d):
+    cd = compress.codec(name)
+    back = np.asarray(cd.decode(cd.encode(jnp.asarray(x2d)), x2d.shape[1]))
+    assert back.shape == x2d.shape
+    return np.abs(back - np.asarray(x2d, np.float32))
+
+
+@pytest.mark.parametrize("name", ("int8_block", "fp8_sim"))
+@given(scale=st.floats(1e-4, 1e3), length=st.integers(1, 2000),
+       seed=st.integers(0, 50))
+@settings(max_examples=30, deadline=None)
+def test_roundtrip_error_bound(name, scale, length, seed):
+    """Elementwise round-trip error <= stated bound * slice max, including
+    non-BLOCK-divisible lengths."""
+    x = np.asarray(jax.random.normal(jax.random.PRNGKey(seed),
+                                     (3, length))) * scale
+    err = _roundtrip_err(name, x)
+    bound = compress.meta(name).error_bound
+    tol = bound * np.abs(x).max(axis=1, keepdims=True) + 1e-12
+    assert (err <= tol + 1e-7 * scale).all(), (name, err.max())
+
+
+def test_topk_roundtrip_keeps_largest_and_bounds_rest():
+    # distinct magnitudes (no |x| ties), alternating signs; L=160 -> k=10
+    x = (np.linspace(0.1, 4.0, 160)
+         * np.where(np.arange(160) % 2 == 0, 1.0, -1.0)
+         )[None, :].astype(np.float32)
+    cd = compress.codec("topk")
+    comp = cd.encode(jnp.asarray(x))
+    back = np.asarray(cd.decode(comp, x.shape[1]))
+    # the largest-magnitude k elements survive exactly
+    order = np.argsort(-np.abs(x[0]))
+    np.testing.assert_array_equal(back[0, order[:10]], x[0, order[:10]])
+    # dropped elements error by their own value, bounded by the slice max
+    err = np.abs(back - x)
+    assert err.max() <= compress.meta("topk").error_bound * np.abs(x).max()
+
+
+def test_none_codec_identity():
+    x = jnp.arange(12.0).reshape(2, 6)
+    cd = compress.codec("none")
+    np.testing.assert_array_equal(
+        np.asarray(cd.decode(cd.encode(x), 6)), np.asarray(x))
+
+
+@pytest.mark.parametrize("name", LOSSY)
+def test_all_zero_blocks_no_nan(name):
+    """All-zero payloads (and zero blocks inside non-zero payloads) must
+    round-trip to exact zeros — no divide-by-zero in the scales."""
+    cd = compress.codec(name)
+    z = jnp.zeros((2, compress.BLOCK * 2 + 7))
+    back = np.asarray(cd.decode(cd.encode(z), z.shape[1]))
+    assert np.isfinite(back).all()
+    np.testing.assert_array_equal(back, np.zeros_like(back))
+    # one zero block among non-zero blocks
+    x = jnp.zeros((1, compress.BLOCK * 2)).at[0, :compress.BLOCK].set(1.0)
+    back = np.asarray(cd.decode(cd.encode(x), x.shape[1]))
+    assert np.isfinite(back).all()
+    np.testing.assert_array_equal(back[0, compress.BLOCK:], 0.0)
+
+
+@pytest.mark.parametrize("name", LOSSY)
+def test_bf16_inputs(name):
+    """Codecs accept bf16 slices (cast to f32 internally) and stay within
+    the stated bound of the bf16 values."""
+    x = (jax.random.normal(jax.random.PRNGKey(3), (2, 333))
+         .astype(jnp.bfloat16))
+    cd = compress.codec(name)
+    back = np.asarray(cd.decode(cd.encode(x), 333))
+    xf = np.asarray(x, np.float32)
+    bound = compress.meta(name).error_bound
+    assert np.abs(back - xf).max() <= bound * np.abs(xf).max() + 1e-6
+
+
+@pytest.mark.parametrize("name", LOSSY)
+def test_wire_bytes_match_declared_ratio(name):
+    """Actual wire bytes of the encoded form track meta.wire_ratio (within
+    padding slack on a block-aligned payload)."""
+    n = compress.BLOCK * 16
+    x = jax.random.normal(jax.random.PRNGKey(0), (1, n))
+    cd = compress.codec(name)
+    actual = 4.0 * n / cd.wire_bytes(cd.encode(x))
+    assert actual >= cd.meta.wire_ratio * 0.9, (name, actual)
+
+
+# ---------------------------------------------------------------------------
+# error feedback: the round-trip bound holds over 100 iterations
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("name", ("int8_block", "fp8_sim"))
+def test_error_feedback_bound_over_100_iterations(name):
+    """With feedback, the accumulated decoded stream lags the true
+    accumulated signal by at most ~one step's residual — for every step of
+    100 (EF: sum_decoded(T) = T*g + e_0 - e_T, |e_T| bounded)."""
+    cd = compress.codec(name)
+    g = jax.random.normal(jax.random.PRNGKey(7), (2, 500)) * 1e-3
+    gmax = float(jnp.abs(g).max())
+    bound = cd.meta.error_bound
+    lag_cap = bound / (1.0 - bound) * gmax * 1.05 + 1e-12
+    err = jnp.zeros_like(g)
+    acc = np.zeros(g.shape, np.float32)
+    step = jax.jit(cd.encode_with_feedback)
+    for t in range(1, 101):
+        comp, err = step(g, err)
+        acc += np.asarray(cd.decode(comp, g.shape[1]))
+        lag = np.abs(acc - np.asarray(g) * t).max()
+        assert lag <= lag_cap, (name, t, lag, lag_cap)
+        assert float(jnp.abs(err).max()) <= lag_cap, (name, t)
+
+
+def test_error_feedback_beats_no_feedback_topk():
+    """Top-k has no useful per-step bound, but feedback must still keep the
+    accumulated stream closer than feedback-free top-k (dropped coordinates
+    accumulate residual until they win a round)."""
+    cd = compress.codec("topk")
+    g = jax.random.normal(jax.random.PRNGKey(11), (1, 320)) * 1e-2
+    err = jnp.zeros_like(g)
+    acc_fb = np.zeros(g.shape, np.float32)
+    acc_nofb = np.zeros(g.shape, np.float32)
+    for _ in range(100):
+        comp, err = cd.encode_with_feedback(g, err)
+        acc_fb += np.asarray(cd.decode(comp, g.shape[1]))
+        acc_nofb += np.asarray(cd.decode(cd.encode(g), g.shape[1]))
+    true = np.asarray(g) * 100
+    assert np.abs(acc_fb - true).max() < np.abs(acc_nofb - true).max()
+
+
+# ---------------------------------------------------------------------------
+# collective tolerance helper + optim re-export
+# ---------------------------------------------------------------------------
+
+
+def test_collective_tolerance_shapes_and_monotonicity():
+    assert compress.collective_tolerance("none", "allreduce", 8, 1.0) == 0.0
+    t1 = compress.collective_tolerance("int8_block", "allgather", 8, 1.0)
+    t2 = compress.collective_tolerance("int8_block", "reduce_scatter", 8, 1.0)
+    t3 = compress.collective_tolerance("int8_block", "allreduce", 8, 1.0)
+    assert 0 < t1 < t2 < t3
+    with pytest.raises(ValueError, match="no compressed execution"):
+        compress.collective_tolerance("int8_block", "broadcast", 8, 1.0)
+
+
+def test_optim_reexports_core_codec_math():
+    """No duplicate quantize/dequantize implementations: optim.compress is
+    a re-export of the core codec math."""
+    from repro.optim import compress as optim_compress
+    assert optim_compress.quantize is compress.quantize
+    assert optim_compress.dequantize is compress.dequantize
+    assert optim_compress.compress_tree is compress.compress_tree
+    assert optim_compress.BLOCK == compress.BLOCK
+    assert not hasattr(optim_compress, "compressed_allreduce"), \
+        "bespoke compressed_allreduce must be gone (use the subsystem)"

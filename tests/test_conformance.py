@@ -22,7 +22,7 @@ import numpy as np
 import pytest
 from _hypothesis_compat import given, settings, strategies as st
 
-from repro.core import autotune, costmodel, mcoll, runtime
+from repro.core import autotune, compress, costmodel, mcoll, runtime
 from repro.core.topology import Topology
 
 # ---------------------------------------------------------------------------
@@ -40,6 +40,11 @@ PAIRS = [(coll, algo) for coll in runtime.collectives()
          for algo in mcoll.algorithms(coll)]
 CHUNKED_PAIRS = [(coll, algo) for coll, algo in PAIRS
                  if mcoll.supports_chunks(coll, algo)]
+CODEC_PAIRS = [(coll, algo) for coll, algo in PAIRS
+               if mcoll.supports_codec(coll, algo)]
+# every (collective x codec) pair, through each codec-capable algorithm
+CODEC_TRIPLES = [(coll, algo, cd) for coll, algo in CODEC_PAIRS
+                 for cd in compress.lossy()]
 DTYPES = ("float32", "bfloat16", "int32")
 
 # reference algorithm per collective: the vendor lowering ("linear" is
@@ -124,6 +129,103 @@ def test_conformance_chunked_pairs_basic(coll, algo):
     # a chunk count that does not divide the payload (remainder segment)
     _assert_conforms(coll, algo, 5, "float32", chunks=2)
     _assert_conforms(coll, algo, 5, "float32", chunks=3)
+
+
+# ---------------------------------------------------------------------------
+# compressed leg: every (collective x codec) pair vs the xla reference,
+# asserting the codec's stated relative-error bound instead of equality
+# (CI runs this as its own matrix step via ``-k compressed``)
+# ---------------------------------------------------------------------------
+
+
+def _assert_conforms_compressed(coll: str, algo: str, cd: str, m: int,
+                                **kw):
+    if not _feasible(coll, algo):
+        pytest.skip(f"{algo} infeasible on {N}x{P}")
+    x = _operand(coll, m, "float32")
+    got = _run(coll, algo, x, codec=cd, **kw)
+    ref = _run(coll, REF[coll], x)
+    tol = compress.collective_tolerance(cd, coll, M,
+                                        float(jnp.abs(x).max())) + 1e-6
+    err = np.abs(got - ref).max()
+    assert err <= tol, f"{coll}/{algo}@{cd} m={m} {kw}: {err} > {tol}"
+
+
+@pytest.mark.parametrize("coll,algo,cd", CODEC_TRIPLES)
+def test_conformance_compressed_pairs(coll, algo, cd):
+    _assert_conforms_compressed(coll, algo, cd, 80)
+
+
+@pytest.mark.parametrize("coll,algo", CODEC_PAIRS)
+def test_conformance_compressed_none_is_bitwise(coll, algo):
+    """codec="none" on a codec-capable algorithm is the lossless algorithm
+    exactly — one plan, bitwise equal to the bare call."""
+    x = _operand(coll, 5, "float32")
+    np.testing.assert_array_equal(_run(coll, algo, x, codec="none"),
+                                  _run(coll, algo, x))
+
+
+@pytest.mark.parametrize(
+    "coll,algo", [(c, a) for c, a in CODEC_PAIRS
+                  if mcoll.supports_chunks(c, a)])
+def test_conformance_compressed_chunked_compose(coll, algo):
+    """codec composes with chunks: compressed segments pipeline
+    independently and still land inside the codec bound."""
+    _assert_conforms_compressed(coll, algo, "int8_block", 80, chunks=3)
+
+
+@pytest.mark.parametrize("coll", sorted({c for c, _ in CODEC_PAIRS}))
+def test_conformance_compressed_auto_budget(coll):
+    """algo="auto" under an error budget resolves to a plan (lossless or
+    admissible codec) that conforms within the loosest admissible bound."""
+    budget = float(compress.meta("int8_block").error_bound)
+    x = _operand(coll, 64, "float32")
+    got = _run(coll, "auto", x, error_budget=budget)
+    ref = _run(coll, REF[coll], x)
+    tol = compress.collective_tolerance("int8_block", coll, M,
+                                        float(jnp.abs(x).max())) + 1e-6
+    assert np.abs(got - ref).max() <= tol
+
+
+def test_compressed_rejects_integer_payloads():
+    """Lossy codecs on integer payloads must fail clearly at trace time,
+    not silently round token ids (checked before the degenerate-topology
+    shortcut, so the error does not depend on the device count)."""
+    x = _operand("allreduce", 5, "int32")
+    with pytest.raises(ValueError, match="integer payload"):
+        _run("allreduce", "pip_mcoll", x, codec="int8_block")
+    # ... while auto under a budget resolves integer payloads lossless
+    # instead of crashing, and stays exact
+    got = _run("allreduce", "auto", x, error_budget=1.0)
+    np.testing.assert_array_equal(got, _run("allreduce", REF["allreduce"],
+                                            x))
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("coll,algo,cd", CODEC_TRIPLES)
+@given(m=st.sampled_from([1, 7, 64, 300]))
+@settings(max_examples=4, deadline=None)
+def test_conformance_compressed_shape_sweep(coll, algo, cd, m):
+    """Odd / non-block-divisible payloads through every codec pair."""
+    _assert_conforms_compressed(coll, algo, cd, m)
+
+
+@pytest.mark.parametrize("coll", ("allreduce", "reduce_scatter"))
+def test_conformance_compressed_multidim_payload(coll):
+    """Compressed reductions accept trailing payload dims like their
+    lossless forms ('(M*s, ...)' input), flattening row-major internally."""
+    if coll == "allreduce":
+        x = (jnp.arange(M * 10 * 3) % 5).astype(jnp.float32).reshape(
+            M, 10, 3)
+    else:
+        x = (jnp.arange(M * M * 4 * 3) % 5).astype(jnp.float32).reshape(
+            M, M * 4, 3)
+    got = _run(coll, "pip_mcoll", x, codec="int8_block")
+    ref = _run(coll, REF[coll], x)
+    assert got.shape == ref.shape
+    tol = compress.collective_tolerance("int8_block", coll, M,
+                                        float(jnp.abs(x).max())) + 1e-6
+    assert np.abs(got - ref).max() <= tol
 
 
 # ---------------------------------------------------------------------------
@@ -217,22 +319,37 @@ def test_scatter_rejects_non_divisible_payload():
 def test_plan_encode_decode_round_trip():
     assert autotune.encode_plan("pip_pipeline", 1) == "pip_pipeline"
     assert autotune.encode_plan("pip_pipeline", 8) == "pip_pipeline#c8"
-    assert autotune.decode_plan("pip_pipeline#c8") == ("pip_pipeline", 8)
-    assert autotune.decode_plan("ring") == ("ring", 1)
+    assert autotune.encode_plan("pip_pipeline", 8, "int8_block") == \
+        "pip_pipeline#c8@int8_block"
+    assert autotune.encode_plan("pip_mcoll", 1, "topk") == "pip_mcoll@topk"
+    assert autotune.decode_plan("pip_pipeline#c8") == \
+        ("pip_pipeline", 8, "none")
+    assert autotune.decode_plan("pip_pipeline#c8@int8_block") == \
+        ("pip_pipeline", 8, "int8_block")
+    assert autotune.decode_plan("pip_mcoll@fp8_sim") == \
+        ("pip_mcoll", 1, "fp8_sim")
+    assert autotune.decode_plan("ring") == ("ring", 1, "none")
 
 
-def test_plans_cover_registry_with_chunk_variants():
+def test_plans_cover_registry_with_chunk_and_codec_variants():
     t = Topology(4, 4, node_link="tpu_v5e_dcn", local_link="tpu_v5e_ici")
     for coll in runtime.collectives():
         ps = autotune.plans(coll, t, 1 << 20)
-        algos = {a for a, _ in ps}
+        algos = {a for a, _, _ in ps}
         assert algos == set(autotune.candidates(coll, t))
-        for a, c in ps:
+        for a, c, cd in ps:
             assert c >= 1
             if c > 1:
                 assert mcoll.supports_chunks(coll, a)
+            if cd != "none":
+                assert mcoll.supports_codec(coll, a)
         # every chunk-capable algorithm gets at least one chunked variant
         # at a bandwidth-regime size
         for a in algos:
             if mcoll.supports_chunks(coll, a):
-                assert any(c > 1 for aa, c in ps if aa == a), (coll, a)
+                assert any(c > 1 for aa, c, _ in ps if aa == a), (coll, a)
+        # every codec-capable algorithm gets every lossy codec variant
+        for a in algos:
+            if mcoll.supports_codec(coll, a):
+                planned = {cd for aa, _, cd in ps if aa == a}
+                assert set(compress.lossy()) <= planned, (coll, a)

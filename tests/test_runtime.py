@@ -191,7 +191,7 @@ def test_chunk_bytes_converts_to_chunks_plan():
     z = jnp.ones((1, 1024), jnp.float32)  # payload 4096 B
     algo, kw = runtime.resolve_algo(topo, "allreduce", "pip_pipeline", z,
                                     {"chunk_bytes": 1024})
-    assert algo == "pip_pipeline" and kw == {"chunks": 4}, kw
+    assert algo == "pip_pipeline" and kw == {"chunks": 4, "codec": "none"}, kw
     runtime.collective(mesh, topo, "allreduce", "pip_pipeline", z,
                        chunk_bytes=1024)
     runtime.collective(mesh, topo, "allreduce", "pip_pipeline", z, chunks=4)
@@ -224,6 +224,116 @@ def test_calibrate_records_chunked_plans(tmp_path):
     assert any(at.decode_plan(k)[1] > 1 for k in measured), measured
     s = sel.choose("allreduce", topo, 1 << 20)
     assert s.source == "measured" and s.chunks >= 1
+
+
+# ---------------------------------------------------------------------------
+# codec plans in the exec cache
+# ---------------------------------------------------------------------------
+
+
+def test_exec_cache_codec_plans_do_not_collide():
+    """The same algorithm with different codecs compiles different
+    programs — the exec-cache key must separate them."""
+    mesh, topo = _mesh_topo()
+    runtime.clear_cache()
+    z = jnp.ones((1, 64), jnp.float32)
+    runtime.collective(mesh, topo, "allreduce", "pip_mcoll", z)
+    runtime.collective(mesh, topo, "allreduce", "pip_mcoll", z,
+                       codec="int8_block")
+    assert runtime.cache_stats().exec_misses == 2, "codec change re-compiles"
+    runtime.collective(mesh, topo, "allreduce", "pip_mcoll", z,
+                       codec="int8_block")
+    s = runtime.cache_stats()
+    assert s.exec_hits == 1 and s.exec_misses == 2, s
+
+
+def test_exec_cache_default_codec_normalized():
+    """Omitting ``codec`` on a codec-capable algorithm is the same plan as
+    ``codec="none"`` — one cache entry, not two; and a zero-budget auto
+    resolution shares it too."""
+    mesh, topo = _mesh_topo()
+    runtime.clear_cache()
+    z = jnp.ones((1, 64), jnp.float32)
+    runtime.collective(mesh, topo, "allreduce", "pip_mcoll", z)
+    runtime.collective(mesh, topo, "allreduce", "pip_mcoll", z, codec="none")
+    s = runtime.cache_stats()
+    assert s.exec_hits == 1 and s.exec_misses == 1, s
+
+
+def test_codec_on_non_capable_algo_rejected_clearly():
+    mesh, topo = _mesh_topo()
+    z = jnp.ones((1, 64), jnp.float32)
+    with pytest.raises(ValueError, match="does not support compression"):
+        runtime.collective(mesh, topo, "allreduce", "xla", z,
+                           codec="int8_block")
+    with pytest.raises(ValueError, match="unknown codec"):
+        runtime.collective(mesh, topo, "allreduce", "pip_mcoll", z,
+                           codec="zstd")
+
+
+def test_auto_honors_pinned_codec_at_every_size():
+    """algo="auto" with a pinned lossy codec must carry the pin into the
+    resolved plan even when the selector's lossless winner is not
+    codec-capable (small sizes) — never silently drop it."""
+    topo = Topology(4, 2, node_link="tpu_v5e_dcn", local_link="tpu_v5e_ici")
+    for elems in (16, 1 << 20):
+        x = jnp.ones((8, elems), jnp.float32)
+        algo, kw = runtime.resolve_algo(topo, "allreduce", "auto", x,
+                                        {"codec": "int8_block"})
+        assert kw.get("codec") == "int8_block", (elems, algo, kw)
+        from repro.core import mcoll
+        assert mcoll.supports_codec("allreduce", algo), (elems, algo)
+
+
+def test_auto_rejects_bad_codec_pins():
+    """Invalid codec names and codec pins on collectives with no
+    codec-capable algorithm fail at resolution, auto or explicit."""
+    topo = Topology(4, 2)
+    x = jnp.ones((8, 64), jnp.float32)
+    with pytest.raises(ValueError, match="unknown codec"):
+        runtime.resolve_algo(topo, "allreduce", "auto", x, {"codec": "zstd"})
+    xb = jnp.ones((64,), jnp.float32)
+    with pytest.raises(ValueError, match="no codec-capable"):
+        runtime.resolve_algo(topo, "broadcast", "auto", xb,
+                             {"codec": "int8_block"})
+
+
+def test_resolve_auto_zero_budget_is_lossless():
+    """auto with the default error_budget resolves every collective to a
+    lossless plan (codec absent or "none" in the normalized kwargs)."""
+    topo = Topology(1, 1)
+    for coll in runtime.collectives():
+        x = runtime.example_input(coll, topo, 1 << 22)
+        algo, kw = runtime.resolve_algo(topo, coll, "auto", x)
+        assert kw.get("codec", "none") == "none", (coll, algo, kw)
+
+
+def test_calibrate_records_codec_plans(tmp_path):
+    """Calibration measures codec variants and records them under plan
+    keys; a zero-budget selector ignores them, a budgeted one may use
+    them."""
+    from repro.core import autotune as at
+    mesh, topo = _mesh_topo()
+    sel = at.Selector()
+    rows = runtime.calibrate(mesh, topo, names=("allreduce",),
+                             sizes=(1 << 16,), iters=1, selector=sel)
+    assert any(r.codec != "none" for r in rows), "no codec plan measured"
+    measured = sel.table.lookup(topo, "allreduce", "float32", 1 << 16)
+    assert any(at.decode_plan(k)[2] != "none" for k in measured), measured
+    assert sel.choose("allreduce", topo, 1 << 16).codec == "none"
+    s = sel.choose("allreduce", topo, 1 << 16, error_budget=1.0)
+    assert s.source == "measured"
+
+
+def test_calibrate_codecs_restrictable():
+    """codecs=() keeps a calibration sweep lossless-only."""
+    from repro.core import autotune as at
+    mesh, topo = _mesh_topo()
+    sel = at.Selector()
+    rows = runtime.calibrate(mesh, topo, names=("allreduce",),
+                             sizes=(256,), iters=1, selector=sel,
+                             codecs=())
+    assert rows and all(r.codec == "none" for r in rows)
 
 
 # ---------------------------------------------------------------------------
