@@ -4,10 +4,11 @@ timing does not model ICI, but the ROUND-COUNT ordering (pip_mcoll fewer
 rounds than flat algorithms) shows up in dispatch overhead, and correctness
 of every algorithm is asserted on the way.
 
-All invocations go through repro.core.runtime's compiled-callable cache:
-the first call per (collective, algo, shape) key compiles, every timed call
-is a cache hit, so re-trace/re-jit overhead is excluded from the measured
-numbers. Hit/miss totals are emitted as a measured/ row for run.py.
+All invocations go through the Communicator API (repro.core.comm) backed
+by the runtime's compiled-callable cache: the first call per (collective,
+algo, shape) key compiles, every timed call is a cache hit, so
+re-trace/re-jit overhead is excluded from the measured numbers. Hit/miss
+totals are emitted as a measured/ row for run.py.
 
 Modes:
   (default)             measured rows for allgather/allreduce, every
@@ -16,13 +17,25 @@ Modes:
                         sweep of the pipelined allreduce, and compressed
                         rows per codec (wall-clock + achieved error vs the
                         codec's stated bound).
-  --calibrate OUT.json  run runtime.calibrate over all six collectives
+  --calibrate OUT.json  run comm.calibrate over all six collectives
                         (chunked and codec plans included), persist the
                         tuning table + latency rows + a model-vs-measured
                         crossover comparison + the pipeline-crossover
                         table + a compression section (achieved ratio /
                         error, crossover vs lossless) as JSON
                         (the BENCH_collectives artifact).
+  --overlap [OUT.json]  persistent-op overlap leg: barrier-style vs
+                        overlapped bucketed allreduce (one persistent op,
+                        depth=1 start/wait pairs vs depth=K windowed
+                        starts), the init-vs-start amortization curve, and
+                        the barrier vs overlapped **train-step** time
+                        (make_overlapped_train_step overlap=False/True).
+                        With OUT.json, merges an "overlap" section into
+                        the artifact (results/BENCH_collectives.json).
+
+The mesh factors the ambient device count into (node, local) — run.py
+forces 8 host devices (4x2); the CI conformance matrix runs the overlap
+leg at {1, 2, 8}.
 """
 import argparse
 import json
@@ -34,11 +47,15 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import autotune, compress, costmodel, mcoll, runtime
+from repro.core.comm import Communicator
 from repro.core.topology import Topology
 
-N, P = 4, 2
+DC = jax.device_count()
+P = 2 if DC % 2 == 0 else 1
+N = DC // P
 mesh = jax.make_mesh((N, P), ("node", "local"))
 topo = Topology.from_mesh(mesh)  # link metadata derived: host_cpu/host_cpu
+comm = Communicator(mesh, topo)
 
 CAL_SIZES = (256, 4096, 65536)
 
@@ -57,8 +74,10 @@ def measure_mode():
         x = jnp.arange(N * P * max(m, 1), dtype=jnp.float32)
         ag_out = None
         for algo in mcoll.algorithms("allgather"):
-            fn = lambda a, _algo=algo: runtime.collective(
-                mesh, topo, "allgather", _algo, a, stacked=True)
+            if algo not in autotune.candidates("allgather", topo):
+                continue
+            fn = lambda a, _algo=algo: comm.allgather(a, algo=_algo,
+                                                      stacked=True)
             us, out = bench(fn, x)
             ok = bool((np.asarray(out)[0] == np.asarray(x)).all())
             assert ok, algo
@@ -66,22 +85,21 @@ def measure_mode():
             print(f"measured/allgather/{algo}/{nbytes}B,{us:.1f},8cpu-dev ok")
         # algo="auto": resolved through the selector, result must match
         resolved, _ = runtime.resolve_algo(topo, "allgather", "auto", x)
-        fn = lambda a: runtime.collective(mesh, topo, "allgather", "auto", a,
-                                          stacked=True)
+        fn = lambda a: comm.allgather(a, stacked=True)
         us, out = bench(fn, x)
         np.testing.assert_array_equal(np.asarray(out), ag_out)
         print(f"measured/allgather/auto/{nbytes}B,{us:.1f},"
               f"resolved={resolved}")
         for algo in mcoll.algorithms("allreduce"):
+            if algo not in autotune.candidates("allreduce", topo):
+                continue
             z = jnp.ones((N * P, max(m, 1)), jnp.float32)
-            fn = lambda a, _algo=algo: runtime.collective(
-                mesh, topo, "allreduce", _algo, a)
+            fn = lambda a, _algo=algo: comm.allreduce(a, algo=_algo)
             us, out = bench(fn, z)
             print(f"measured/allreduce/{algo}/{nbytes}B,{us:.1f},8cpu-dev ok")
         z = jnp.ones((N * P, max(m, 1)), jnp.float32)
         resolved, _ = runtime.resolve_algo(topo, "allreduce", "auto", z)
-        us, out = bench(lambda a: runtime.collective(
-            mesh, topo, "allreduce", "auto", a), z)
+        us, out = bench(lambda a: comm.allreduce(a), z)
         np.testing.assert_allclose(np.asarray(out)[0],
                                    np.full(max(m, 1), N * P, np.float32))
         print(f"measured/allreduce/auto/{nbytes}B,{us:.1f},"
@@ -93,8 +111,8 @@ def measure_mode():
     z = jnp.ones((N * P, m), jnp.float32)
     base = None
     for c in (1, 2, 4, 8):
-        us, out = bench(lambda a, _c=c: runtime.collective(
-            mesh, topo, "allreduce", "pip_pipeline", a, chunks=_c), z)
+        us, out = bench(lambda a, _c=c: comm.allreduce(
+            a, algo="pip_pipeline", chunks=_c), z)
         if base is None:
             base = np.asarray(out)
         else:
@@ -110,8 +128,8 @@ def measure_mode():
     A = float(np.abs(np.asarray(zr)).max())
     denom = np.abs(exact).max() + 1e-12
     for cd in compress.lossy():
-        us, out = bench(lambda a, _cd=cd: runtime.collective(
-            mesh, topo, "allreduce", "pip_mcoll", a, codec=_cd), zr)
+        us, out = bench(lambda a, _cd=cd: comm.allreduce(
+            a, algo="pip_mcoll", codec=_cd), zr)
         err = float(np.abs(np.asarray(out)[0] - exact).max())
         tol = compress.collective_tolerance(cd, "allreduce", N * P, A)
         assert err <= tol + 1e-7, (cd, err, tol)
@@ -130,8 +148,8 @@ def measure_mode():
 
 
 def calibrate_mode(out_path: str):
-    sel = autotune.default_selector()
-    rows = runtime.calibrate(mesh, topo, sizes=CAL_SIZES, iters=10)
+    sel = comm.selector
+    rows = comm.calibrate(sizes=CAL_SIZES, iters=10)
     for r in rows:
         plan = autotune.encode_plan(r.algo, r.chunks, r.codec)
         print(f"calibrate/{r.collective}/{plan}/{r.nbytes}B,"
@@ -210,8 +228,7 @@ def calibrate_mode(out_path: str):
         c = compress.codec(cd)
         sample = jax.random.normal(jax.random.PRNGKey(1), (1, m))
         achieved_ratio = 4.0 * m / c.wire_bytes(c.encode(sample))
-        out = runtime.collective(mesh, topo, "allreduce", "pip_mcoll", zr,
-                                 codec=cd)
+        out = comm.allreduce(zr, algo="pip_mcoll", codec=cd)
         err = float(np.abs(np.asarray(out)[0] - exact).max())
         bound_abs = compress.collective_tolerance(cd, "allreduce", N * P, A)
         xover_model = costmodel.compressed_crossover_bytes(
@@ -252,13 +269,171 @@ def calibrate_mode(out_path: str):
     print(f"calibrate/artifact,0.0,{path}")
 
 
+def overlap_mode(out_path=None):
+    """Persistent-op overlap leg (the Communicator API's headline claim).
+
+    Three measurements, all deterministic-plan:
+      1. bucketed allreduce microbench — one persistent op over a stream of
+         K equal buckets: barrier-style (depth=1, wait each start before
+         the next) vs overlapped (depth=K, start the whole window then
+         wait), i.e. MPI_Start/Wait pairing vs software pipelining;
+      2. init-vs-start amortization — one-time plan+compile cost vs the
+         per-start cost it buys, amortized over n starts;
+      3. train-step delta — make_overlapped_train_step(overlap=False) vs
+         (overlap=True) on the reduced config: the barrier vs overlapped
+         bucketed gradient sync, bit-identical results by construction.
+    """
+    M = N * P
+    n = (256 << 10) // 4  # 256 KiB per bucket
+    K = 8
+    algo = "pip_pipeline"
+    reps = 5
+    buckets = [(jnp.arange(M * n, dtype=jnp.float32) % 7 + b).reshape(M, n)
+               for b in range(K)]
+
+    op_b = comm.allreduce_init(shape=(M, n), dtype=jnp.float32, algo=algo,
+                               depth=1)
+    op_o = comm.allreduce_init(shape=(M, n), dtype=jnp.float32, algo=algo,
+                               depth=K)
+    # warm both paths (shared compiled executable; asserted identical)
+    ref = np.asarray(op_b.start(buckets[0]).wait())
+    np.testing.assert_array_equal(
+        np.asarray(op_o.start(buckets[0]).wait()), ref)
+
+    def barrier_pass():
+        outs = []
+        for b in buckets:
+            outs.append(op_b.start(b).wait(block=True))
+        return outs
+
+    def overlapped_pass():
+        handles = [op_o.start(b) for b in buckets]
+        outs = [h.wait(block=False) for h in handles]
+        jax.block_until_ready(outs)
+        return outs
+
+    barrier_pass(), overlapped_pass()  # warm
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        ob = barrier_pass()
+    barrier_us = (time.perf_counter() - t0) / reps * 1e6
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        oo = overlapped_pass()
+    overlapped_us = (time.perf_counter() - t0) / reps * 1e6
+    for a, b in zip(ob, oo):  # bit-identical across scheduling styles
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    speedup = barrier_us / max(overlapped_us, 1e-9)
+    print(f"overlap/microbench/barrier/{K}x{n * 4}B,{barrier_us:.1f},"
+          f"plan={op_b.plan}")
+    print(f"overlap/microbench/overlapped/{K}x{n * 4}B,{overlapped_us:.1f},"
+          f"speedup={speedup:.2f}x")
+
+    # init-vs-start amortization: persistent init pays plan resolution +
+    # compile once; a start is a bare dispatch. A fresh shape forces a true
+    # cold init (exec-cache miss).
+    n2 = n + 16
+    xc = jnp.ones((M, n2), jnp.float32)
+    t0 = time.perf_counter()
+    op_c = comm.allreduce_init(shape=(M, n2), dtype=jnp.float32, algo=algo)
+    init_us = (time.perf_counter() - t0) * 1e6
+    op_c.start(xc).wait()  # first dispatch warms the executable
+    samples = []
+    for _ in range(20):
+        t0 = time.perf_counter()
+        op_c.start(xc).wait(block=True)
+        samples.append(time.perf_counter() - t0)
+    start_us = float(np.median(samples)) * 1e6
+    amortization = [
+        {"starts": k, "amortized_us_per_start": (init_us + k * start_us) / k}
+        for k in (1, 2, 4, 8, 16, 32, 64)]
+    print(f"overlap/amortization,0.0,init_us={init_us:.1f} "
+          f"start_us={start_us:.1f} "
+          f"breakeven_starts={max(1, int(init_us / max(start_us, 1e-9)))}")
+
+    # train-step leg: barrier vs overlapped bucketed gradient sync on the
+    # reduced config (identical compiled programs, scheduling differs)
+    from repro.configs import reduced_config
+    from repro.models import decoder
+    from repro.models.decoder import RunFlags
+    from repro.optim import adamw
+    from repro.train import manual_step
+    from repro.train.step import TrainConfig
+
+    cfg = reduced_config("smollm-360m")
+    ocfg = adamw.AdamWConfig(lr=1e-3, warmup_steps=0, total_steps=10,
+                             schedule="constant", grad_clip=1e9)
+    tcfg = TrainConfig(optimizer=ocfg, flags=RunFlags(remat="none"))
+    key = jax.random.PRNGKey(0)
+    batch = {"tokens": jax.random.randint(key, (max(M, 2), 32), 0,
+                                          cfg.vocab),
+             "labels": jax.random.randint(jax.random.PRNGKey(1),
+                                          (max(M, 2), 32), 0, cfg.vocab)}
+    step_times = {}
+    n_buckets = 0
+    for mode, label in ((False, "barrier"), (True, "overlapped")):
+        params = decoder.init(key, cfg)
+        opt = adamw.init(params, ocfg)
+        step = manual_step.make_overlapped_train_step(
+            cfg, tcfg, mesh, topo, algo=algo, bucket_bytes=256 << 10,
+            overlap=mode)
+        params, opt, m = step(params, opt, batch)  # compile + warm
+        jax.block_until_ready(m["loss"])
+        samples = []
+        for _ in range(3):
+            t0 = time.perf_counter()
+            params, opt, m = step(params, opt, batch)
+            jax.block_until_ready((params, m["loss"]))
+            samples.append(time.perf_counter() - t0)
+        step_times[label] = float(np.median(samples)) * 1e3
+        n_buckets = len(step.grad_sync.slices)
+        print(f"overlap/train_step/{label},{step_times[label] * 1e3:.1f},"
+              f"buckets={n_buckets} loss={float(m['loss']):.4f}")
+    delta = step_times["barrier"] - step_times["overlapped"]
+    print(f"overlap/train_step/delta,0.0,{delta:+.2f}ms "
+          f"({step_times['barrier']:.1f}ms -> "
+          f"{step_times['overlapped']:.1f}ms)")
+
+    section = {
+        "devices": M, "topology": autotune.topo_key(topo),
+        "microbench": {
+            "buckets": K, "bucket_bytes": n * 4, "plan": op_b.plan,
+            "barrier_us": barrier_us, "overlapped_us": overlapped_us,
+            "speedup": speedup,
+        },
+        "amortization": {"init_us": init_us, "start_us": start_us,
+                         "curve": amortization},
+        "train_step": {
+            "buckets": n_buckets,
+            "barrier_ms": step_times["barrier"],
+            "overlapped_ms": step_times["overlapped"],
+            "delta_ms": delta,
+        },
+    }
+    if out_path:
+        path = pathlib.Path(out_path)
+        data = json.loads(path.read_text()) if path.exists() else {}
+        data["overlap"] = section
+        path.parent.mkdir(parents=True, exist_ok=True)
+        path.write_text(json.dumps(data, indent=1, sort_keys=True))
+        print(f"overlap/artifact,0.0,{path}")
+
+
 if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--calibrate", metavar="OUT_JSON", default=None,
                     help="run the calibration sweep and write the tuning "
                          "table artifact instead of the measure rows")
+    ap.add_argument("--overlap", metavar="OUT_JSON", nargs="?", const="",
+                    default=None,
+                    help="run the persistent-op overlap leg (barrier vs "
+                         "overlapped bucketed sync + amortization curve); "
+                         "with OUT_JSON, merge an 'overlap' section into "
+                         "the artifact")
     args = ap.parse_args()
     if args.calibrate:
         calibrate_mode(args.calibrate)
+    elif args.overlap is not None:
+        overlap_mode(args.overlap or None)
     else:
         measure_mode()

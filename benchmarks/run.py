@@ -13,9 +13,12 @@ benches. Prints ``name,us_per_call,derived`` CSV rows.
   kernel_bench    Pallas kernel interpret-mode vs jnp-ref wall time
   roofline_summary aggregates results/dryrun.jsonl (if present)
 
-``python benchmarks/run.py calibrate`` runs only the measured calibration
-sweep on the 8-CPU-device mesh, persisting the selection subsystem's tuning
-table to ``results/BENCH_collectives.json`` (the CI perf artifact).
+``python benchmarks/run.py calibrate`` runs the measured calibration sweep
+plus the persistent-op overlap leg on the 8-CPU-device mesh, persisting
+the selection subsystem's tuning table and an ``overlap`` section
+(barrier vs overlapped bucketed sync, init/start amortization curve,
+train-step delta) to ``results/BENCH_collectives.json`` (the CI perf
+artifact).
 
 The paper's absolute numbers come from an OPA cluster; figures here are the
 alpha-beta model (core/costmodel.py) instantiated with the paper's cluster
@@ -212,6 +215,17 @@ def calibrate_collectives():
                       timeout=1800, fatal=True)
 
 
+def overlap_collectives():
+    """Run the persistent-op overlap leg (barrier vs overlapped bucketed
+    sync, init/start amortization, train-step delta) on the 8-CPU-device
+    mesh and merge its ``overlap`` section into the calibration artifact
+    (run AFTER calibrate_collectives — the calibrate mode rewrites the
+    file)."""
+    out_json = REPO / "results" / "BENCH_collectives.json"
+    _bench_subprocess(["--overlap", str(out_json)], "overlap/",
+                      timeout=1800, fatal=True)
+
+
 def kernel_bench():
     import jax
     import jax.numpy as jnp
@@ -259,8 +273,10 @@ def roofline_summary():
 def main() -> None:
     print("name,us_per_call,derived")
     if "calibrate" in sys.argv[1:]:
-        # CI smoke: measured calibration sweep -> BENCH_collectives.json
+        # CI smoke: measured calibration sweep + persistent-op overlap leg
+        # -> BENCH_collectives.json (table, crossovers, overlap section)
         calibrate_collectives()
+        overlap_collectives()
         autotune_table()
         return
     fig1_scatter()

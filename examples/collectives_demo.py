@@ -15,25 +15,40 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import autotune, compress, costmodel, mcoll, runtime
+from repro.core import autotune, compress, costmodel, mcoll
+from repro.core.comm import Communicator
 from repro.core.topology import Topology
 
 N, P = 4, 2
 mesh = jax.make_mesh((N, P), ("node", "local"))
 topo = Topology(N, P)
+comm = Communicator(mesh, topo)
 x = jnp.arange(N * P * 4, dtype=jnp.float32)
 
-print(f"== allgather on {N}x{P} devices (runtime API, cached) ==")
+print(f"== allgather on {N}x{P} devices (Communicator API, cached) ==")
 for algo in mcoll.algorithms("allgather"):
-    out = np.asarray(runtime.collective(mesh, topo, "allgather", algo, x,
-                                        stacked=True))
+    out = np.asarray(comm.allgather(x, algo=algo, stacked=True))
     ok = all((out[d] == np.asarray(x)).all() for d in range(N * P))
     print(f"  {algo:20s} correct={ok}")
     assert ok
-    runtime.collective(mesh, topo, "allgather", algo, x, stacked=True)
-stats = runtime.cache_stats()
+    comm.allgather(x, algo=algo, stacked=True)
+stats = comm.cache_stats()
 print(f"  runtime cache: {stats.exec_hits} hits / "
       f"{stats.exec_misses} compiles")
+
+print(f"\n== persistent nonblocking allreduce (init once, start/wait) ==")
+zp = (jnp.arange(N * P * 16, dtype=jnp.float32) % 9).reshape(N * P, 16)
+blocking = np.asarray(comm.allreduce(zp, algo="pip_mcoll"))
+op = comm.allreduce_init(zp, algo="pip_mcoll", depth=2)
+misses0 = comm.cache_stats().exec_misses
+h1 = op.start(zp)            # returns immediately (async dispatch)
+h2 = op.start(zp)            # double-buffered: 2nd start before 1st wait
+outs = [np.asarray(h1.wait()), np.asarray(h2.wait())]
+for o in outs:
+    np.testing.assert_array_equal(o, blocking)
+assert comm.cache_stats().exec_misses == misses0, "start must not compile"
+print(f"  plan={op.plan} starts={op.starts} "
+      f"compiles_after_init=0 bitwise==blocking=True")
 
 print("\n== modeled small-message latency, paper cluster (128x18) ==")
 big = Topology(128, 18)
@@ -60,8 +75,7 @@ print("\n== chunked pipelining: pip_pipeline allreduce (runtime, chunks=) ==")
 z = (jnp.arange(N * P * 12, dtype=jnp.float32) % 13).reshape(N * P, 12)
 expect = np.asarray(z).sum(0)
 for c in (1, 2, 4):
-    out = np.asarray(runtime.collective(mesh, topo, "allreduce",
-                                        "pip_pipeline", z, chunks=c))
+    out = np.asarray(comm.allreduce(z, algo="pip_pipeline", chunks=c))
     assert all((out[d] == expect).all() for d in range(N * P))
     print(f"  chunks={c} correct=True")
 net = costmodel.tpu_v5e_pod()
@@ -79,8 +93,7 @@ zr = (jax.random.normal(jax.random.PRNGKey(0), (N * P, 2048)) * 0.01)
 exact = np.asarray(zr).sum(0)
 A = float(np.abs(np.asarray(zr)).max())
 for cd in compress.lossy():
-    out = np.asarray(runtime.collective(mesh, topo, "allreduce",
-                                        "pip_mcoll", zr, codec=cd))
+    out = np.asarray(comm.allreduce(zr, algo="pip_mcoll", codec=cd))
     err = np.abs(out[0] - exact).max()
     tol = compress.collective_tolerance(cd, "allreduce", N * P, A)
     assert err <= tol + 1e-7, (cd, err, tol)

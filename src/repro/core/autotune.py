@@ -10,8 +10,8 @@ variants over defaults:
      (``costmodel.net_for(topo)``), covering every algorithm registered in
      ``core.mcoll`` for all six collectives;
   2. **measured calibration** — timed sweeps run through
-     ``runtime.calibrate`` (which drives ``runtime.collective`` so timings
-     include the real dispatch path), persisted as a JSON
+     ``runtime.calibrate`` (which drives ``runtime.run``, the Communicator
+     backend, so timings include the real dispatch path), persisted as JSON
      :class:`TuningTable` keyed on (topology, collective, dtype, size
      bucket). When a measurement exists for the exact key it wins over the
      prior.

@@ -1,0 +1,419 @@
+"""Communicator: the object API for collectives — blocking methods plus
+persistent, nonblocking ops.
+
+PiP-MColl's multi-object design wins by letting several communication
+objects make progress concurrently instead of serializing on one blocking
+call; MPI evolved the same way with persistent collectives
+(``MPI_Allreduce_init`` / ``MPI_Start`` / ``MPI_Wait`` in MPI Advance) and
+with binding collectives to a long-lived communicator object instead of
+re-deriving topology per call. This module is that shape on JAX:
+
+  * :class:`Communicator` owns ``(mesh, topo, selector)`` and fronts the
+    runtime's build/exec caches (``repro.core.runtime`` is the cache
+    backend). One method per collective — ``comm.allreduce(x, algo="auto",
+    chunks=..., codec=..., error_budget=...)`` — replaces the stringly-typed
+    free function (now a deprecation shim in ``runtime``); kwargs are
+    validated when the plan is constructed, not mid-trace.
+  * :class:`PlanSpec` normalizes the plan knobs exactly once (``chunks=None``
+    == ``chunks=1`` == omitted; ``codec=None`` == ``codec="none"`` ==
+    omitted; ``chunk_bytes`` folds into ``chunks``), so every call path of
+    one plan shares a single exec-cache entry.
+  * ``op = comm.allreduce_init(...)`` returns a :class:`PersistentOp`:
+    the ``(algo, chunks, codec)`` plan is resolved and the executable
+    AOT-compiled exactly once at init; every ``op.start(x)`` reuses it and
+    returns a :class:`CollHandle` immediately (JAX async dispatch), so
+    ``handle.wait()`` composes into software pipelining — start bucket i's
+    allreduce, do other work, then wait. ``depth`` bounds outstanding
+    starts (``depth>=2`` = double buffering); ``donate=True`` donates the
+    operand buffer on backends that support aliasing.
+
+The free function ``runtime.collective`` survives as a deprecation shim
+delegating to :func:`communicator` (the per-(mesh, topo) memo below).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import autotune, runtime
+from repro.core.topology import Topology
+
+
+# ---------------------------------------------------------------------------
+# plan spec: one normalization point for every call path
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class PlanSpec:
+    """The caller's plan request for one collective invocation, validated
+    and normalized at construction.
+
+    Normalization rules (the single place they live):
+      * ``chunks=None`` means "unpinned" and is dropped — the resolver
+        fills the default (1) or the selector's chunk count, so ``None``,
+        ``1`` and "omitted" share one exec-cache entry;
+      * ``codec=None`` likewise drops (resolver default ``"none"``);
+      * ``chunk_bytes`` is size-relative sugar the resolver converts to a
+        concrete ``chunks`` against the operand;
+      * ``error_budget`` must be a non-negative float here — schedule
+        callables live one level up (the persistent gradient-sync op).
+    """
+
+    collective: str
+    algo: str = "auto"
+    chunks: Optional[int] = None
+    chunk_bytes: Optional[int] = None
+    codec: Optional[str] = None
+    error_budget: float = 0.0
+    stacked: bool = True
+
+    def __post_init__(self):
+        if self.collective not in runtime.collectives():
+            raise ValueError(f"unknown collective {self.collective!r}; "
+                             f"one of {runtime.collectives()}")
+        if self.chunks is not None and int(self.chunks) < 1:
+            raise ValueError(f"chunks must be >= 1, got {self.chunks}")
+        if self.chunk_bytes is not None and int(self.chunk_bytes) < 1:
+            raise ValueError(
+                f"chunk_bytes must be >= 1, got {self.chunk_bytes}")
+        if callable(self.error_budget):
+            raise TypeError(
+                "error_budget schedules (callables) are only accepted by "
+                "the persistent gradient-sync op "
+                "(train.manual_step.make_overlapped_train_step); "
+                "per-call plans need a float")
+        if float(self.error_budget) < 0.0:
+            raise ValueError(
+                f"error_budget must be >= 0, got {self.error_budget}")
+
+    def kwargs(self) -> Dict[str, Any]:
+        """The normalized knob dict handed to the resolver (``None`` knobs
+        dropped so unpinned and default-pinned calls share cache keys)."""
+        kw: Dict[str, Any] = {}
+        if self.chunks is not None:
+            kw["chunks"] = int(self.chunks)
+        if self.chunk_bytes is not None:
+            kw["chunk_bytes"] = int(self.chunk_bytes)
+        if self.codec is not None:
+            kw["codec"] = str(self.codec)
+        return kw
+
+
+class _Proto:
+    """Shape/dtype stand-in for plan resolution without a live array."""
+
+    __slots__ = ("shape", "dtype")
+
+    def __init__(self, shape, dtype):
+        self.shape = tuple(int(s) for s in shape)
+        self.dtype = jnp.dtype(dtype)
+
+    @property
+    def nbytes(self) -> int:
+        return int(math.prod(self.shape)) * self.dtype.itemsize
+
+
+# ---------------------------------------------------------------------------
+# persistent nonblocking ops
+# ---------------------------------------------------------------------------
+
+
+class CollHandle:
+    """One in-flight persistent-op invocation. ``wait()`` yields the result
+    exactly once; a second ``wait`` is a misuse error (like MPI requests,
+    which are invalidated by completion)."""
+
+    __slots__ = ("_op", "_value", "_done")
+
+    def __init__(self, op: "PersistentOp", value):
+        self._op = op
+        self._value = value
+        self._done = False
+
+    @property
+    def done(self) -> bool:
+        """True once this handle has been waited on."""
+        return self._done
+
+    def wait(self, block: bool = True):
+        """Complete the operation and return its result.
+
+        ``block=True`` (default, MPI_Wait semantics) blocks until the
+        result is materialized; ``block=False`` returns the async-dispatch
+        future immediately — downstream JAX ops compose with it either
+        way, so software pipelining just interleaves ``start``/``wait``.
+        """
+        if self._done:
+            raise RuntimeError(
+                f"double wait on a {self._op.collective} handle: each "
+                f"start(x) yields one result")
+        self._done = True
+        self._op._inflight -= 1
+        if block:
+            jax.block_until_ready(self._value)
+        return self._value
+
+
+class PersistentOp:
+    """A persistent collective: plan resolved and executable compiled once
+    at init (``comm.<collective>_init``), reused by every ``start``.
+
+    ``start(x) -> CollHandle`` dispatches asynchronously and returns
+    immediately; ``handle.wait() -> result`` completes it. At most
+    ``depth`` starts may be outstanding (un-waited) at once — ``depth=1``
+    is strict request/complete pairing, ``depth>=2`` enables double
+    buffering (start bucket i+1 before waiting bucket i).
+    """
+
+    def __init__(self, comm: "Communicator", collective: str,
+                 shape: Tuple[int, ...], dtype, algo: str,
+                 kw: Dict[str, Any], *, stacked: bool = True,
+                 depth: int = 1, donate: bool = False):
+        if int(depth) < 1:
+            raise ValueError(f"depth must be >= 1, got {depth}")
+        self.comm = comm
+        self.collective = collective
+        self.shape = tuple(int(s) for s in shape)
+        self.dtype = jnp.dtype(dtype)
+        self.algo = algo
+        self.kw = dict(kw)
+        self.stacked = bool(stacked)
+        self.depth = int(depth)
+        self.donate = bool(donate)
+        self.starts = 0
+        self._inflight = 0
+        self._compiled, self._in_sharding = runtime.compile_persistent(
+            comm.mesh, comm.topo, collective, algo, self.shape, self.dtype,
+            stacked=stacked, donate=donate, **self.kw)
+
+    @property
+    def chunks(self) -> int:
+        return int(self.kw.get("chunks", 1))
+
+    @property
+    def codec(self) -> str:
+        return str(self.kw.get("codec", "none"))
+
+    @property
+    def plan(self) -> str:
+        """The resolved plan key (``algo#cN@codec``, defaults omitted)."""
+        return autotune.encode_plan(self.algo, self.chunks, self.codec)
+
+    @property
+    def inflight(self) -> int:
+        return self._inflight
+
+    def start(self, x) -> CollHandle:
+        """Dispatch one invocation of the compiled plan on ``x`` and return
+        its handle immediately (no recompile, no cache lookup)."""
+        if self._inflight >= self.depth:
+            raise RuntimeError(
+                f"{self.collective} persistent op already has "
+                f"{self._inflight} outstanding start(s) at depth="
+                f"{self.depth}; wait() the previous handle first, or init "
+                f"with depth>=2 for double buffering")
+        x = jnp.asarray(x)
+        if tuple(x.shape) != self.shape or x.dtype != self.dtype:
+            raise ValueError(
+                f"persistent {self.collective} op compiled for "
+                f"{self.shape}/{self.dtype}, got {tuple(x.shape)}/"
+                f"{x.dtype}; init a new op for a new operand spec")
+        if getattr(x, "sharding", None) != self._in_sharding:
+            x = jax.device_put(x, self._in_sharding)
+        self._inflight += 1
+        self.starts += 1
+        return CollHandle(self, self._compiled(x))
+
+    def __call__(self, x):
+        """Blocking convenience: ``start(x).wait()``."""
+        return self.start(x).wait()
+
+
+# ---------------------------------------------------------------------------
+# the communicator
+# ---------------------------------------------------------------------------
+
+
+class Communicator:
+    """A long-lived collective context bound to ``(mesh, topo)``.
+
+    Owns the selector handle and fronts the runtime's build/exec caches;
+    exposes one blocking method per collective plus ``*_init`` constructors
+    for persistent nonblocking ops. Construct once per (mesh, topology) and
+    reuse — or use :func:`communicator` for the process-wide memo.
+    """
+
+    def __init__(self, mesh, topo: Optional[Topology] = None, *,
+                 selector: Optional[autotune.Selector] = None):
+        self.mesh = mesh
+        self.topo = topo if topo is not None else Topology.from_mesh(mesh)
+        self.selector = (selector if selector is not None
+                         else autotune.default_selector())
+
+    def __repr__(self) -> str:
+        return (f"Communicator({self.topo.n_nodes}x{self.topo.n_local}, "
+                f"axes={self.topo.axes})")
+
+    # -- plan resolution ----------------------------------------------------
+
+    def plan(self, collective: str, nbytes: int, dtype: str = "float32",
+             error_budget: float = 0.0) -> autotune.Selection:
+        """The selector's ``(algo, chunks, codec)`` plan for one payload
+        size on this communicator's topology (consumers that execute inside
+        their own shard_map bodies — MoE dispatch/combine, the fused train
+        step — resolve here and run the mcoll algorithm themselves)."""
+        return self.selector.choose(collective, self.topo, int(nbytes),
+                                    dtype=dtype,
+                                    error_budget=float(error_budget))
+
+    def _resolve(self, spec: PlanSpec, proto, extra: Dict[str, Any]
+                 ) -> Tuple[str, Dict[str, Any]]:
+        kw = spec.kwargs()
+        overlap = set(kw) & set(extra)
+        if overlap:
+            raise ValueError(f"duplicate plan knobs {sorted(overlap)}")
+        kw.update(extra)
+        return runtime.resolve_algo(self.topo, spec.collective, spec.algo,
+                                    proto, kw,
+                                    error_budget=spec.error_budget,
+                                    selector=self.selector)
+
+    # -- blocking methods ---------------------------------------------------
+
+    def _call(self, name: str, x, *, algo: str = "auto",
+              chunks: Optional[int] = None,
+              chunk_bytes: Optional[int] = None,
+              codec: Optional[str] = None, error_budget: float = 0.0,
+              stacked: bool = True, **kw):
+        spec = PlanSpec(name, algo, chunks, chunk_bytes, codec,
+                        error_budget, stacked)
+        x = jnp.asarray(x)
+        algo_r, kw_r = self._resolve(spec, x, kw)
+        return runtime.run_resolved(self.mesh, self.topo, name, algo_r, x,
+                                    stacked=stacked, **kw_r)
+
+    def allreduce(self, x, **knobs):
+        """Sum-allreduce: in ``(world, m, ...)`` sharded dim0, out the
+        reduced payload stacked per device. Knobs: ``algo`` (default
+        "auto"), ``chunks``/``chunk_bytes``, ``codec``, ``error_budget``,
+        plus algorithm-specific kwargs (``radix``, ``inter``, ...)."""
+        return self._call("allreduce", x, **knobs)
+
+    def reduce_scatter(self, x, **knobs):
+        """Reduce-scatter: in ``(world, world*s, ...)`` sharded dim0, out
+        each device's reduced shard (global ``(world*s, ...)``)."""
+        return self._call("reduce_scatter", x, **knobs)
+
+    def allgather(self, x, *, stacked: bool = True, **knobs):
+        """Allgather: in ``(world*m, ...)`` sharded dim0; out stacked
+        ``(world, world*m, ...)`` (row d = device d's full copy) or the
+        replicated gather with ``stacked=False``."""
+        return self._call("allgather", x, stacked=stacked, **knobs)
+
+    def alltoall(self, x, **knobs):
+        """All-to-all: in ``(world, world, s...)`` sharded dim0, out the
+        transposed exchange."""
+        return self._call("alltoall", x, **knobs)
+
+    def broadcast(self, x, **knobs):
+        """Broadcast from ``root`` (default 0): in ``(m, ...)`` replicated,
+        out stacked ``(world, m, ...)``."""
+        return self._call("broadcast", x, **knobs)
+
+    def scatter(self, x, **knobs):
+        """Scatter from ``root`` (default 0): in ``(world*m, ...)``
+        replicated, out each device's shard."""
+        return self._call("scatter", x, **knobs)
+
+    def invoke(self, name: str, x, **knobs):
+        """Name-indexed dispatch to the blocking methods (parametrized
+        sweeps, the deprecation shim); new call sites should prefer the
+        per-collective methods."""
+        method = getattr(self, name, None)
+        if name not in runtime.collectives() or method is None:
+            raise ValueError(f"unknown collective {name!r}; "
+                             f"one of {runtime.collectives()}")
+        return method(x, **knobs)
+
+    # -- persistent nonblocking ops -----------------------------------------
+
+    def persistent(self, name: str, x=None, *, shape=None, dtype=None,
+                   algo: str = "auto", chunks: Optional[int] = None,
+                   chunk_bytes: Optional[int] = None,
+                   codec: Optional[str] = None, error_budget: float = 0.0,
+                   stacked: bool = True, depth: int = 1,
+                   donate: bool = False, **kw) -> PersistentOp:
+        """Init a :class:`PersistentOp` for ``name`` on a fixed operand
+        spec — pass an example operand ``x`` (array or ShapeDtypeStruct) or
+        explicit ``shape=``/``dtype=``. The ``(algo, chunks, codec)`` plan
+        is resolved and the executable compiled here, once."""
+        if x is not None:
+            shape = tuple(x.shape)
+            dtype = x.dtype
+        if shape is None or dtype is None:
+            raise ValueError("persistent op needs an example operand x or "
+                             "explicit shape= and dtype=")
+        spec = PlanSpec(name, algo, chunks, chunk_bytes, codec,
+                        error_budget, stacked)
+        proto = _Proto(shape, dtype)
+        algo_r, kw_r = self._resolve(spec, proto, kw)
+        return PersistentOp(self, name, proto.shape, proto.dtype, algo_r,
+                            kw_r, stacked=stacked, depth=depth,
+                            donate=donate)
+
+    def allreduce_init(self, x=None, **knobs) -> PersistentOp:
+        return self.persistent("allreduce", x, **knobs)
+
+    def reduce_scatter_init(self, x=None, **knobs) -> PersistentOp:
+        return self.persistent("reduce_scatter", x, **knobs)
+
+    def allgather_init(self, x=None, **knobs) -> PersistentOp:
+        return self.persistent("allgather", x, **knobs)
+
+    def alltoall_init(self, x=None, **knobs) -> PersistentOp:
+        return self.persistent("alltoall", x, **knobs)
+
+    def broadcast_init(self, x=None, **knobs) -> PersistentOp:
+        return self.persistent("broadcast", x, **knobs)
+
+    def scatter_init(self, x=None, **knobs) -> PersistentOp:
+        return self.persistent("scatter", x, **knobs)
+
+    # -- calibration / observability passthroughs ---------------------------
+
+    def calibrate(self, **kw):
+        """Timed plan sweeps into this communicator's selector table
+        (see ``runtime.calibrate``)."""
+        kw.setdefault("selector", self.selector)
+        return runtime.calibrate(self.mesh, self.topo, **kw)
+
+    def cache_stats(self) -> "runtime.CacheStats":
+        return runtime.cache_stats()
+
+    def selection_stats(self) -> autotune.SelectionStats:
+        return self.selector.stats
+
+
+# ---------------------------------------------------------------------------
+# process-wide memo (the deprecation shim's backend)
+# ---------------------------------------------------------------------------
+
+
+_COMMS: Dict[tuple, Communicator] = {}
+
+
+def communicator(mesh, topo: Optional[Topology] = None) -> Communicator:
+    """The memoized per-(mesh, topo) Communicator: repeated lookups from
+    hot loops (and the ``runtime.collective`` deprecation shim) share one
+    object per context instead of re-deriving it per call."""
+    t = topo if topo is not None else Topology.from_mesh(mesh)
+    key = (mesh, t)
+    hit = _COMMS.get(key)
+    if hit is None:
+        hit = _COMMS[key] = Communicator(mesh, t)
+    return hit

@@ -21,10 +21,10 @@ plus fused Pallas pack/shift kernels for the local data-reorder steps.
 
 All algorithm functions in this module run INSIDE a shard_map over a mesh
 that contains ``topo.node_axis`` and ``topo.local_axis``. Construction of
-the shard_map'd callables lives in ``repro.core.runtime`` — use
-``runtime.collective(...)`` (cached, version-portable) as the supported
-entry point; ``collective_fn`` below is a thin delegate kept for
-compatibility.
+the shard_map'd callables lives in ``repro.core.runtime`` — use the
+Communicator API (``repro.core.comm``: ``comm.allreduce(x, ...)``, cached
+and version-portable) as the supported entry point; ``collective_fn``
+below is a thin delegate kept for compatibility.
 
 Algorithms (selectable, ``algo=`` everywhere):
   allgather : pip_mcoll | bruck | recursive_doubling | ring | ring_pipeline
@@ -1053,7 +1053,7 @@ def collective_fn(mesh, topo: Topology, collective: str, algo: str,
     """Build a callable computing `collective` with `algo` over `mesh`.
 
     Compatibility delegate for ``repro.core.runtime.build`` — new code
-    should call ``runtime.collective`` (cached end-to-end) or
+    should use ``repro.core.comm.Communicator`` (cached end-to-end) or
     ``runtime.build`` directly.
 
     Input/output conventions (global arrays):

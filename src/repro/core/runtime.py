@@ -28,12 +28,24 @@ This layer owns, for the whole codebase:
      ``error_budget=<eps>`` gates which error-bounded codecs
      (``repro.core.compress``) auto may pick (0.0 = lossless only).
 
+Since the Communicator API landed (``repro.core.comm``), this module is the
+**cache backend**: construction, compilation and plan resolution live here;
+the supported user-facing surface is ``comm.Communicator`` (one method per
+collective, persistent nonblocking ops). The free function
+:func:`collective` survives only as a deprecation shim delegating to a
+memoized per-(mesh, topo) Communicator.
+
 Public API:
 
-  * :func:`collective` — run a collective through the compiled-callable
-    cache (the supported entry point for hot loops); ``algo="auto"`` picks
-    the algorithm per (topology, collective, dtype, size).
+  * :func:`run` — execute a collective through the compiled-callable cache
+    (the backend entry point ``Communicator`` methods call); ``algo="auto"``
+    picks the algorithm per (topology, collective, dtype, size).
+  * :func:`collective` — DEPRECATED free-function shim (one
+    ``DeprecationWarning`` per process, bit-identical results).
   * :func:`build` — get the cached jitted callable for a collective key.
+  * :func:`compile_persistent` — AOT-compile one plan for a fixed
+    shape/dtype with a pinned input sharding (the ``PersistentOp`` backend;
+    entries share the exec cache, so re-initialising an op is a hit).
   * :func:`sharded` — version-portable shard_map for custom bodies (MoE
     expert-parallel dispatch, the manual train step, ad-hoc checks).
   * :func:`calibrate` — timed sweeps feeding the selector's tuning table.
@@ -45,6 +57,7 @@ from __future__ import annotations
 import dataclasses
 import inspect
 import time as _time
+import warnings
 from collections import OrderedDict
 from functools import lru_cache, partial
 from typing import Any, Callable, Dict, Iterable, List, Optional, Tuple
@@ -52,6 +65,7 @@ from typing import Any, Callable, Dict, Iterable, List, Optional, Tuple
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import NamedSharding
 from jax.sharding import PartitionSpec as P
 
 from repro.core import autotune, compat
@@ -238,7 +252,8 @@ def _filter_kwargs(fn: Callable, kw: Dict[str, Any]) -> Dict[str, Any]:
 
 def resolve_algo(topo: Topology, collective: str, algo: str, x,
                  kw: Optional[Dict[str, Any]] = None,
-                 error_budget: float = 0.0
+                 error_budget: float = 0.0,
+                 selector: Optional[autotune.Selector] = None
                  ) -> Tuple[str, Dict[str, Any]]:
     """Resolve ``algo`` ("auto" -> selector (algo, chunks, codec) plan)
     for operand ``x``.
@@ -257,7 +272,8 @@ def resolve_algo(topo: Topology, collective: str, algo: str, x,
       * ``algo="auto"`` fills ``chunks``/``codec`` from the selector's
         plan unless the caller pinned them; ``error_budget`` (also
         accepted inside ``kw``) gates which codecs the selector may pick
-        (0.0 = lossless only).
+        (0.0 = lossless only); ``selector`` overrides the process-wide
+        default (a Communicator passes its own).
     """
     kw = dict(kw or {})
     budget = kw.pop("error_budget", None)
@@ -268,6 +284,12 @@ def resolve_algo(topo: Topology, collective: str, algo: str, x,
     if cb:
         kw.setdefault("chunks", max(1, -(-nbytes // int(cb))))
     if algo != AUTO:
+        try:
+            fn = _mcoll.algorithm(collective, algo)
+        except KeyError:
+            raise ValueError(
+                f"unknown algorithm {algo!r} for {collective}; one of "
+                f"{_mcoll.algorithms(collective)}") from None
         if _mcoll.supports_chunks(collective, algo):
             kw["chunks"] = int(kw.get("chunks", 1))
         elif "chunks" in kw:
@@ -288,6 +310,14 @@ def resolve_algo(topo: Topology, collective: str, algo: str, x,
                 f"{sorted(_mcoll.COMPRESSED[collective]) or 'none'}")
         else:
             kw.pop("codec", None)
+        # plan-time kwarg validation: an unsupported knob must be a clear
+        # resolution error, not a TypeError deep inside trace
+        bad = set(kw) - _accepted_params(fn)
+        if bad:
+            raise ValueError(
+                f"{collective}/{algo} got unsupported kwargs "
+                f"{sorted(bad)}; accepted: "
+                f"{sorted(_accepted_params(fn) - {'x', 'y', 'z', 'topo'})}")
         return algo, kw
     pinned_codec = kw.get("codec")
     if pinned_codec is not None:
@@ -303,7 +333,8 @@ def resolve_algo(topo: Topology, collective: str, algo: str, x,
             # must admit it even when no explicit budget was given
             budget = max(float(budget),
                          _codecs.meta(pinned_codec).error_bound)
-    sel = autotune.default_selector().choose(
+    sel = (selector if selector is not None
+           else autotune.default_selector()).choose(
         collective, topo, nbytes, dtype=str(x.dtype),
         error_budget=float(budget))
     algo, chunks = sel.algo, sel.chunks
@@ -346,7 +377,7 @@ def resolve_algo(topo: Topology, collective: str, algo: str, x,
 
 
 def _construct(mesh, topo: Topology, collective: str, algo: str,
-               stacked: bool, jit: bool, **kw) -> Callable:
+               stacked: bool, jit: bool, donate: bool, **kw) -> Callable:
     wiring = _WIRING[collective]
     fn = partial(_mcoll.algorithm(collective, algo), topo=topo, **kw)
     ax = topo.axes
@@ -361,48 +392,54 @@ def _construct(mesh, topo: Topology, collective: str, algo: str,
 
     mapped = sharded(body, mesh, in_specs=(_in_spec(wiring.in_mode, ax),),
                      out_specs=_out_spec(out_mode, ax), check=False)
-    return jax.jit(mapped) if jit else mapped
+    if not jit:
+        return mapped
+    return jax.jit(mapped, donate_argnums=(0,) if donate else ())
 
 
 def build(mesh, topo: Topology, collective: str, algo: str, *,
-          stacked: bool = True, jit: bool = True, **kw) -> Callable:
+          stacked: bool = True, jit: bool = True, donate: bool = False,
+          **kw) -> Callable:
     """Build (or fetch from cache) the jitted shard_map'd callable for one
     collective key. Identical keys return the identical callable object, so
     jit's trace cache is shared across call sites.
 
-    Key: (mesh axes/shape/devices, collective, algo, stacked, jit, kwargs).
-    Input shape/dtype enter at :func:`collective` time via jit's own trace
-    cache (and explicitly in the exec cache).
+    Key: (mesh axes/shape/devices, collective, algo, stacked, jit, donate,
+    kwargs). Input shape/dtype enter at :func:`run` time via jit's own
+    trace cache (and explicitly in the exec cache). ``donate=True`` donates
+    the operand buffer to the computation (persistent double-buffered ops
+    on backends that support aliasing).
     """
     if collective not in _WIRING:
         raise ValueError(f"unknown collective {collective!r}; "
                          f"one of {collectives()}")
     if algo == AUTO:
         raise ValueError("algo='auto' resolves per input size/dtype; call "
-                         "runtime.collective(...) (or resolve_algo first)")
+                         "Communicator methods (or resolve_algo first)")
     # Mesh hashes/compares by axis names + device assignment, so it keys
     # the cache directly (no per-call O(n_devices) key construction)
-    key = (mesh, topo, collective, algo, stacked, jit, _kw_key(kw))
+    key = (mesh, topo, collective, algo, stacked, jit, donate, _kw_key(kw))
     hit = _BUILD_CACHE.get(key)
     if hit is not None:
         _STATS.build_hits += 1
         _BUILD_CACHE.move_to_end(key)
         return hit
     _STATS.build_misses += 1
-    built = _construct(mesh, topo, collective, algo, stacked, jit, **kw)
+    built = _construct(mesh, topo, collective, algo, stacked, jit, donate,
+                       **kw)
     _BUILD_CACHE[key] = built
     _evict(_BUILD_CACHE, "build")
     return built
 
 
-def collective(mesh, topo: Topology, name: str, algo: str, x, *,
-               stacked: bool = True, error_budget: float = 0.0, **kw):
-    """Run collective ``name`` with ``algo`` on ``x`` over ``mesh``.
+def run(mesh, topo: Topology, name: str, algo: str, x, *,
+        stacked: bool = True, error_budget: float = 0.0, **kw):
+    """Execute collective ``name`` with ``algo`` on ``x`` over ``mesh``
+    through the compiled-callable cache (the ``Communicator`` backend).
 
-    The supported entry point for hot loops: the AOT-compiled executable is
-    cached on (mesh, collective, algo, input shape/dtype, kwargs), so every
-    invocation after the first with an identical key skips trace, lowering
-    and compilation entirely.
+    The AOT-compiled executable is cached on (mesh, collective, algo, input
+    shape/dtype, kwargs), so every invocation after the first with an
+    identical key skips trace, lowering and compilation entirely.
 
     ``algo="auto"`` resolves through the selection subsystem (measured
     tuning table when calibrated, cost-model prior otherwise) before the
@@ -419,6 +456,14 @@ def collective(mesh, topo: Topology, name: str, algo: str, x, *,
     x = jnp.asarray(x)
     algo, kw = resolve_algo(topo, name, algo, x, kw,
                             error_budget=error_budget)
+    return run_resolved(mesh, topo, name, algo, x, stacked=stacked, **kw)
+
+
+def run_resolved(mesh, topo: Topology, name: str, algo: str, x, *,
+                 stacked: bool = True, **kw):
+    """Execute an already-resolved plan through the exec cache — the fast
+    path for callers that ran :func:`resolve_algo` themselves (Communicator
+    methods resolve once with their own selector, then come here)."""
     key = (mesh, topo, name, algo, stacked, _kw_key(kw),
            (tuple(x.shape), str(x.dtype)))
     compiled = _EXEC_CACHE.get(key)
@@ -432,6 +477,78 @@ def collective(mesh, topo: Topology, name: str, algo: str, x, *,
         _EXEC_CACHE[key] = compiled
         _evict(_EXEC_CACHE, "exec")
     return compiled(x)
+
+
+def input_sharding(mesh, topo: Topology, collective: str) -> NamedSharding:
+    """The canonical operand sharding for one collective's wiring — what
+    persistent ops compile against (and reshard stray operands to)."""
+    if collective not in _WIRING:
+        raise ValueError(f"unknown collective {collective!r}; "
+                         f"one of {collectives()}")
+    return NamedSharding(mesh,
+                         _in_spec(_WIRING[collective].in_mode, topo.axes))
+
+
+def compile_persistent(mesh, topo: Topology, name: str, algo: str,
+                       shape: Tuple[int, ...], dtype, *,
+                       stacked: bool = True, donate: bool = False,
+                       **kw) -> Tuple[Callable, NamedSharding]:
+    """AOT-compile one resolved plan for a fixed operand shape/dtype with
+    the collective's canonical input sharding pinned (``PersistentOp``
+    backend). Returns ``(compiled, in_sharding)``.
+
+    Entries live in the same LRU exec cache as :func:`run`, keyed with the
+    pinned sharding (a blocking call compiled against a host-local operand
+    layout is a different executable) — re-initialising a persistent op
+    with an identical spec is an exec-cache hit, never a recompile.
+    """
+    if algo == AUTO:
+        raise ValueError("compile_persistent needs a resolved plan; call "
+                         "resolve_algo first (Communicator.persistent "
+                         "does this)")
+    sharding = input_sharding(mesh, topo, name)
+    key = (mesh, topo, name, algo, stacked, _kw_key(kw),
+           (tuple(shape), str(jnp.dtype(dtype))), ("persistent", donate))
+    compiled = _EXEC_CACHE.get(key)
+    if compiled is not None:
+        _STATS.exec_hits += 1
+        _EXEC_CACHE.move_to_end(key)
+        return compiled, sharding
+    _STATS.exec_misses += 1
+    jitted = build(mesh, topo, name, algo, stacked=stacked, jit=True,
+                   donate=donate, **kw)
+    proto = jax.ShapeDtypeStruct(tuple(shape), jnp.dtype(dtype),
+                                 sharding=sharding)
+    compiled = jitted.lower(proto).compile()
+    _EXEC_CACHE[key] = compiled
+    _evict(_EXEC_CACHE, "exec")
+    return compiled, sharding
+
+
+_SHIM_WARNED = False
+
+
+def collective(mesh, topo: Topology, name: str, algo: str, x, *,
+               stacked: bool = True, error_budget: float = 0.0, **kw):
+    """DEPRECATED free-function entry point.
+
+    Use :class:`repro.core.comm.Communicator` — one method per collective
+    (``comm.allreduce(x, ...)``) plus persistent nonblocking ops
+    (``comm.allreduce_init(...)``). This shim delegates to a memoized
+    per-(mesh, topo) Communicator, so out-of-tree callers keep bit-identical
+    results and shared caches/tuning tables; it warns once per process.
+    """
+    global _SHIM_WARNED
+    if not _SHIM_WARNED:
+        _SHIM_WARNED = True
+        warnings.warn(
+            "runtime.collective(...) is deprecated; use "
+            "repro.core.comm.Communicator (comm.allreduce(x, ...) / "
+            "comm.allreduce_init(...) etc.)",
+            DeprecationWarning, stacklevel=2)
+    from repro.core import comm as _comm
+    return _comm.communicator(mesh, topo).invoke(
+        name, x, algo=algo, stacked=stacked, error_budget=error_budget, **kw)
 
 
 # ---------------------------------------------------------------------------
@@ -508,12 +625,12 @@ def calibrate(mesh, topo: Topology,
                 if codec != _codecs.NONE:
                     kw["codec"] = codec
                 jax.block_until_ready(
-                    collective(mesh, topo, name, algo, x, **kw))  # compile
+                    run(mesh, topo, name, algo, x, **kw))  # compile
                 samples = []
                 for _ in range(max(1, iters)):
                     t0 = _time.perf_counter()
                     jax.block_until_ready(
-                        collective(mesh, topo, name, algo, x, **kw))
+                        run(mesh, topo, name, algo, x, **kw))
                     samples.append(_time.perf_counter() - t0)
                 sec = float(np.median(samples))
                 sel.table.record(topo, name, str(jnp.dtype(dtype)),

@@ -13,13 +13,14 @@ combine-weight, standard token-dropping semantics), computes with ragged_dot,
 and ships results back.
 
 The dispatch/combine all-to-alls are not hardcoded to one primitive: a full
-(algorithm, chunk count) plan is resolved per message size through the
-selection subsystem (``core.autotune``, the same selector
-``runtime.collective(algo="auto")`` uses), over a (1 x TP) topology whose
-link metadata is derived from the mesh. Large dispatch payloads resolve to
-the segmented ``pip_pipeline`` all-to-all, which pipelines the exchange in
-``chunks`` independent segments. The resolved ``core.mcoll`` algorithm runs
-inside the shard_map body. Under a caller ``error_budget`` the combine leg
+(algorithm, chunk count) plan is resolved per message size through a
+``Communicator`` bound to a (1 x TP) topology whose link metadata is
+derived from the mesh (``comm.plan`` — the same selector
+``Communicator(algo="auto")`` methods use, so MoE shares the process-wide
+tuning table). Large dispatch payloads resolve to the segmented
+``pip_pipeline`` all-to-all, which pipelines the exchange in ``chunks``
+independent segments. The resolved ``core.mcoll`` algorithm runs inside
+the shard_map body. Under a caller ``error_budget`` the combine leg
 (expert outputs returning to their tokens) may additionally resolve to an
 error-bounded codec plan (``core.compress``) — the optional compressed
 combine path.
@@ -32,7 +33,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
-from repro.core import autotune, mcoll, runtime
+from repro.core import mcoll, runtime
+from repro.core.comm import communicator
 from repro.core.topology import Topology, derive_link
 from repro.layers import common
 from repro.layers.common import Accum
@@ -208,20 +210,23 @@ def apply(p, x, cfg, rules=None, mesh=None, error_budget: float = 0.0):
 
     batch_axes = tuple(a for a in (rules.batch or ()) if a in mesh.axis_names)
 
-    # resolve the dispatch/combine algorithm through the selection subsystem
-    # for the actual per-device exchange size (tp_size x capacity x D)
+    # resolve the dispatch/combine algorithm through the (1 x TP)
+    # communicator for the actual per-device exchange size
+    # (tp_size x capacity x D); the memoized communicator shares the
+    # process-wide selector, so MoE rides the same tuning table as every
+    # other consumer
     bshard = 1
     for a in batch_axes:
         bshard *= mesh.shape[a]
     cap = _ep_capacity(-(-B // bshard) * S, tp_size, cfg.moe)
     tp_topo = Topology(1, tp_size, local_axis=tp,
                        local_link=derive_link(mesh, tp, "intra"))
+    comm = communicator(mesh, tp_topo)
     nbytes = tp_size * cap * D * x.dtype.itemsize
-    a2a_sel = autotune.default_selector().choose(
-        "alltoall", tp_topo, nbytes, dtype=str(x.dtype))
-    comb_sel = (autotune.default_selector().choose(
-        "alltoall", tp_topo, nbytes, dtype=str(x.dtype),
-        error_budget=error_budget) if error_budget > 0.0 else a2a_sel)
+    a2a_sel = comm.plan("alltoall", nbytes, dtype=str(x.dtype))
+    comb_sel = (comm.plan("alltoall", nbytes, dtype=str(x.dtype),
+                          error_budget=error_budget)
+                if error_budget > 0.0 else a2a_sel)
 
     xspec = P(batch_axes if batch_axes else None, None, None)
     fn = runtime.sharded(

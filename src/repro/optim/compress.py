@@ -7,8 +7,8 @@ the original tree-level API so optimizer-side callers keep importing from
 
 The bespoke ``compressed_allreduce`` that used to live in this module is
 superseded by the subsystem's compressed execution: call
-``runtime.collective(mesh, topo, "allreduce", "pip_mcoll", x,
-codec="int8_block")`` (or ``algo="auto"`` with an ``error_budget``), which
+``Communicator.allreduce(x, algo="pip_mcoll", codec="int8_block")``
+(``repro.core.comm``; or ``algo="auto"`` with an ``error_budget``), which
 shares the compiled-callable cache and the selection subsystem with every
 other consumer. Error feedback is threaded through ``err=`` on the
 ``core.mcoll`` compressed allreduce.

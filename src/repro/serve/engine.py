@@ -11,9 +11,15 @@ Serving loop structure (vLLM-style, reduced):
 
 Token-level sync across DP replicas (multi-host) is a small-message
 collective — the paper's regime. When the engine is given a mesh/topology
-it syncs each tick's sampled tokens through ``runtime.collective`` with the
-algorithm resolved by the selection subsystem (``algo="auto"``: cost-model
-prior until a calibration table is loaded, measured table after). The
+it binds a ``Communicator`` (``repro.core.comm``) and syncs each tick's
+sampled tokens through a **persistent broadcast op**: the tick payload
+shape is fixed at ``(max_batch,)``, so the ``(algo, chunks, codec)`` plan
+is resolved and the executable compiled once on the first tick
+(``comm.broadcast_init``), and every later tick is a bare
+``op.start(...).wait()`` — no cache lookups on the serving hot path. The
+algorithm comes from the selection subsystem (``algo="auto"``: cost-model
+prior until a calibration table is loaded, measured table after — the op
+re-resolves when the tuning table mutates, tracked by generation). The
 engine exposes ``sync_error_budget`` — the subsystem-wide accuracy knob —
 on that plan resolution (integer token payloads always resolve lossless;
 see ``Engine.__init__``)."""
@@ -26,7 +32,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import runtime
+from repro.core.comm import Communicator, PersistentOp
 from repro.core.topology import Topology
 from repro.models import decoder
 from repro.models.decoder import RunFlags
@@ -61,8 +67,16 @@ class Engine:
         self.mesh = mesh
         self.topo = (topo if topo is not None else
                      (Topology.from_mesh(mesh) if mesh is not None else None))
+        self.comm = (Communicator(mesh, self.topo)
+                     if mesh is not None else None)
         self.sync_algo = sync_algo
         self.sync_error_budget = float(sync_error_budget)
+        # lazily bound on the first real sync (a world-1 engine never pays
+        # for plan resolution or compilation — see _sync_tokens); rebound
+        # when the selector's tuning table mutates, so a calibration table
+        # loaded mid-serving still flips auto to the measured plan
+        self._sync_op: Optional[PersistentOp] = None
+        self._sync_gen: int = -1
         self.caches = decoder.init_cache(cfg, max_batch, max_len)
         self.lengths = np.zeros(max_batch, np.int32)
         self.active: List[Optional[Request]] = [None] * max_batch
@@ -85,14 +99,21 @@ class Engine:
         """Cross-replica agreement on each slot's next token (greedy decode
         is deterministic, but sampled decode diverges across hosts without
         this). Small-message broadcast — the paper's latency-bound regime —
-        through the runtime's compiled-callable cache."""
+        through a persistent op: plan + executable fixed on the first tick,
+        every later tick a bare start/wait."""
         if self.mesh is None or self.topo.world == 1:
             return nxt  # nothing to reconcile; skip the per-token dispatch
-        out = runtime.collective(self.mesh, self.topo, "broadcast",
-                                 self.sync_algo,
-                                 jnp.asarray(nxt, jnp.int32),
-                                 error_budget=self.sync_error_budget)
-        return np.asarray(out[0])
+        arr = jnp.asarray(nxt, jnp.int32)
+        gen = self.comm.selector.table.generation
+        if self._sync_op is None or gen != self._sync_gen:
+            # (re)resolve the plan: first tick, or the tuning table changed
+            # (e.g. a calibration table loaded mid-serving) — re-init is an
+            # exec-cache hit when the resolved plan is unchanged
+            self._sync_op = self.comm.broadcast_init(
+                arr, algo=self.sync_algo,
+                error_budget=self.sync_error_budget)
+            self._sync_gen = gen
+        return np.asarray(self._sync_op.start(arr).wait(block=False)[0])
 
     # NOTE: slot-at-a-time prefill keeps the demo simple; the fused decode
     # step is the performance-relevant path.

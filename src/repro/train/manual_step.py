@@ -24,6 +24,30 @@ builds a shard_map'd step in which
   - scalar metrics and the loss always sync lossless (small-message regime
     — the paper's headline case — and reported numbers must be exact).
 
+Two step shapes are built here:
+
+  * :func:`make_manual_train_step` — the **fused barrier-style** step: one
+    jitted shard_map computing backward, per-bucket allreduce, and the
+    optimizer update in a single program (gradient sync happens at the end
+    of backprop, every bucket serialized inside one computation). Supports
+    error-feedback compressed sync.
+  * :func:`make_overlapped_train_step` — the **persistent nonblocking**
+    step (the Communicator API's overlap shape): backward is its own
+    compiled program emitting per-bucket gradient segments; each bucket
+    rides a persistent ``comm.allreduce_init`` op (plan resolved +
+    compiled once, reused every step); ``op.start(bucket)`` returns
+    immediately under JAX async dispatch so bucket i's allreduce overlaps
+    the dispatch/execution of bucket i+1 and the downstream optimizer
+    program, and ``handle.wait()`` composes the results back into the
+    update step. The barrier variant of the same decomposition
+    (``overlap=False``) waits out each bucket before starting the next —
+    the two are bit-identical (same compiled programs, different host
+    scheduling), which the check asserts; the benchmark artifact reports
+    the step-time delta. ``error_budget`` may be a **schedule**
+    ``callable(step) -> float``: the per-bucket codec plan is re-resolved
+    only when the budget crosses a plan boundary (ops rebuilt via the
+    exec cache, so returning to a previous plan never recompiles).
+
 The pjit path (train.step) remains the default for the dry-run; this path
 is validated against it on multi-device CPU meshes in
 tests/checks/manual_step_check.py (same loss/grads to fp32 tolerance, the
@@ -41,6 +65,7 @@ from jax.sharding import PartitionSpec as P
 
 from repro.core import autotune, costmodel, mcoll, runtime
 from repro.core import compress as codecs
+from repro.core.comm import communicator
 from repro.core.topology import Topology
 from repro.optim import adamw
 from repro.train.step import TrainConfig, loss_fn
@@ -250,3 +275,232 @@ def init_error_state(params, error_budget: float = 0.0,
     bucket_elems = max(1, int(bucket_bytes) // 4)
     return tuple(jnp.zeros((topo.world, n), jnp.float32)
                  for _, n in bucket_slices(total, bucket_elems))
+
+
+# ---------------------------------------------------------------------------
+# overlapped gradient sync: persistent nonblocking per-bucket allreduce
+# ---------------------------------------------------------------------------
+
+
+class OverlappedGradSync:
+    """Per-bucket persistent allreduce ops for the overlapped step.
+
+    Holds one ``PersistentOp`` per gradient bucket plus one for the packed
+    scalar-metrics vector (always lossless). ``error_budget`` is a float or
+    a schedule ``callable(step) -> float``; plans are re-resolved per step
+    but ops are **rebuilt only when a bucket's resolved plan changes**
+    (budget crossing a plan boundary) — and rebuilding goes through the
+    runtime exec cache, so flipping back to an earlier plan is a cache hit,
+    not a recompile. ``rebuilds`` counts those transitions.
+    """
+
+    def __init__(self, comm, slices: List[Tuple[int, int]], metric_len: int,
+                 algo: str = "auto", chunks: Optional[int] = None,
+                 codec: Optional[str] = None, error_budget=0.0,
+                 donate: bool = False):
+        self.comm = comm
+        self.slices = list(slices)
+        self.metric_len = int(metric_len)
+        self.algo, self.chunks, self.codec = algo, chunks, codec
+        self.error_budget = error_budget
+        self.donate = bool(donate)
+        self.rebuilds = 0
+        self._plans: Optional[List[Tuple[str, dict]]] = None
+        self._last_budget: Optional[float] = None
+        self._ops: List = []
+        self._metric_op = None
+
+    def budget_at(self, step: int) -> float:
+        if callable(self.error_budget):
+            return float(self.error_budget(int(step)))
+        return float(self.error_budget)
+
+    def plans(self) -> List[str]:
+        """Current per-bucket plan keys (``algo#cN@codec``)."""
+        return [op.plan for op in self._ops]
+
+    def _resolve(self, budget: float) -> List[Tuple[str, dict]]:
+        topo = self.comm.topo
+        return [_resolve_plan(topo, n * 4, jnp.float32, self.algo,
+                              self.chunks, self.codec, budget)
+                for _, n in self.slices]
+
+    def ensure_ops(self, step: int) -> None:
+        """Re-resolve the per-bucket plan for this step's budget; rebuild
+        the persistent ops only when a plan actually changed. Plans are a
+        pure function of the budget value here, so an unchanged budget
+        (always, for a float knob) skips the cost-model walk entirely."""
+        budget = self.budget_at(step)
+        if self._plans is not None and budget == self._last_budget:
+            return
+        self._last_budget = budget
+        plans = self._resolve(budget)
+        if plans == self._plans:
+            return
+        world = self.comm.topo.world
+        self._ops = [
+            self.comm.allreduce_init(
+                shape=(world, n), dtype=jnp.float32, algo=name,
+                chunks=kw.get("chunks"), codec=kw.get("codec"),
+                donate=self.donate)
+            for (_, n), (name, kw) in zip(self.slices, plans)]
+        if self._metric_op is None:
+            # scalar metrics always sync lossless, with the same pinned
+            # algorithm family as the gradient plan (budget 0)
+            mname, mkw = _resolve_plan(self.comm.topo, self.metric_len * 4,
+                                       jnp.float32, self.algo, self.chunks,
+                                       None, 0.0)
+            self._metric_op = self.comm.allreduce_init(
+                shape=(world, self.metric_len), dtype=jnp.float32,
+                algo=mname, chunks=mkw.get("chunks"))
+        if self._plans is not None:
+            self.rebuilds += 1
+        self._plans = plans
+
+    def sync(self, buckets, mvec, overlap: bool = True):
+        """Allreduce every bucket + the metrics vector.
+
+        ``overlap=True``: start everything, then wait — bucket i's
+        communication overlaps bucket i+1's dispatch/execution (software
+        pipelining under async dispatch). ``overlap=False``: the
+        barrier-style reference — each bucket fully completes before the
+        next starts. Same ops either way, so results are bit-identical.
+        """
+        ops = self._ops + [self._metric_op]
+        payloads = list(buckets) + [mvec]
+        if overlap:
+            handles = [op.start(b) for op, b in zip(ops, payloads)]
+            synced = [h.wait(block=False) for h in handles]
+        else:
+            synced = [op.start(b).wait(block=True)
+                      for op, b in zip(ops, payloads)]
+        return synced[:-1], synced[-1]
+
+
+class _OverlappedStep:
+    """Callable train step built by :func:`make_overlapped_train_step`.
+
+    Lazily builds its compiled backward/apply programs from the first
+    (params, batch) it sees (payload shapes and the metric-key set are
+    static from there on).
+    """
+
+    def __init__(self, cfg, tcfg: TrainConfig, mesh, topo: Topology,
+                 algo: str, error_budget, bucket_bytes: int,
+                 chunks: Optional[int], codec: Optional[str],
+                 overlap: bool, donate: bool):
+        self.cfg, self.tcfg = cfg, tcfg
+        self.mesh, self.topo = mesh, topo
+        self.overlap = bool(overlap)
+        self.comm = communicator(mesh, topo)
+        self._knobs = (algo, chunks, codec)
+        self._budget = error_budget
+        self.bucket_bytes = int(bucket_bytes)
+        self.donate = bool(donate)
+        self.grad_sync: Optional[OverlappedGradSync] = None
+        self._backward_c = None
+        self._apply_c = None
+        self._auto_step = 0
+
+    # -- lazy build ---------------------------------------------------------
+
+    def _build(self, params, batch):
+        cfg, tcfg, topo = self.cfg, self.tcfg, self.topo
+        leaves = jax.tree.leaves(params)
+        treedef = jax.tree.structure(params)
+        leaf_meta = [(jnp.shape(l), int(jnp.size(l))) for l in leaves]
+        total = sum(s for _, s in leaf_meta)
+        slices = bucket_slices(total, max(1, self.bucket_bytes // 4))
+        _, metric_avals = jax.eval_shape(
+            lambda p, b: loss_fn(p, b, cfg, tcfg, None, None), params, batch)
+        mkeys = sorted(k for k, v in metric_avals.items() if not v.shape)
+        world, ax = topo.world, topo.axes
+
+        def backward(params, batch):
+            (loss, metrics), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(params, batch, cfg, tcfg, None, None)
+            ls = jax.tree.leaves(grads)
+            flat = (jnp.concatenate(
+                [jnp.asarray(l, jnp.float32).reshape(-1) for l in ls])
+                if len(ls) > 1
+                else jnp.asarray(ls[0], jnp.float32).reshape(-1))
+            segs = tuple(lax.dynamic_slice_in_dim(flat, s, n, axis=0)
+                         for s, n in slices)
+            mvec = jnp.stack(
+                [jnp.asarray(loss, jnp.float32)]
+                + [jnp.asarray(metrics[k], jnp.float32) for k in mkeys])
+            return tuple(g[None] for g in segs) + (mvec[None],)
+
+        self._backward_c = jax.jit(runtime.sharded(
+            backward, self.mesh, in_specs=(P(), P(ax)),
+            out_specs=(P(ax, None),) * (len(slices) + 1), check=False))
+
+        def apply(params, opt_state, *synced):
+            buckets, mvec = synced[:-1], synced[-1]
+            parts = [b[0] / world for b in buckets]
+            flat = jnp.concatenate(parts) if len(parts) > 1 else parts[0]
+            out, off = [], 0
+            for shape, size in leaf_meta:
+                out.append(flat[off:off + size].reshape(shape))
+                off += size
+            grads = jax.tree_util.tree_unflatten(treedef, out)
+            new_params, new_opt, om = adamw.update(params, grads, opt_state,
+                                                   tcfg.optimizer)
+            mv = mvec[0] / world
+            metrics = {k: mv[i + 1] for i, k in enumerate(mkeys)}
+            metrics = dict(metrics, **om, loss=mv[0])
+            return new_params, new_opt, metrics
+
+        mapped = runtime.sharded(
+            apply, self.mesh,
+            in_specs=(P(), P()) + (P(ax, None),) * (len(slices) + 1),
+            out_specs=(P(), P(), P()), check=False)
+        self._apply_c = jax.jit(mapped, donate_argnums=(0, 1))
+
+        algo, chunks, codec = self._knobs
+        self.grad_sync = OverlappedGradSync(
+            self.comm, slices, len(mkeys) + 1, algo=algo, chunks=chunks,
+            codec=codec, error_budget=self._budget, donate=self.donate)
+
+    # -- the step -----------------------------------------------------------
+
+    def __call__(self, params, opt_state, batch, step: Optional[int] = None):
+        """One train step. ``step`` feeds the error-budget schedule (when a
+        callable was given); defaults to an internal counter. Returns
+        ``(new_params, new_opt_state, metrics)``."""
+        if self._backward_c is None:
+            self._build(params, batch)
+        if step is None:
+            step = self._auto_step
+        self._auto_step = int(step) + 1
+        self.grad_sync.ensure_ops(int(step))
+        outs = self._backward_c(params, batch)
+        synced, mvec = self.grad_sync.sync(outs[:-1], outs[-1],
+                                           overlap=self.overlap)
+        return self._apply_c(params, opt_state, *synced, mvec)
+
+
+def make_overlapped_train_step(cfg, tcfg: TrainConfig, mesh, topo: Topology,
+                               algo: str = "auto", error_budget=0.0,
+                               bucket_bytes: int = DEFAULT_BUCKET_BYTES,
+                               chunks: Optional[int] = None,
+                               codec: Optional[str] = None,
+                               overlap: bool = True,
+                               donate: bool = False) -> _OverlappedStep:
+    """Bucketed DP train step with **persistent nonblocking** gradient sync
+    (the Communicator overlap shape; see the module docstring).
+
+    Same data-parallel semantics as :func:`make_manual_train_step`
+    (bucketed, algo/chunks/codec knobs, loss+scalar-metric sync lossless)
+    with two differences: ``error_budget`` may be a schedule
+    ``callable(step) -> float`` (codec plan re-resolved only at plan
+    boundaries), and there is no error-feedback state (stateless
+    compression only — feedback threading needs the fused step). The
+    returned step is ``step(params, opt_state, batch, step=None) ->
+    (params, opt_state, metrics)``; its ``.grad_sync`` exposes the
+    persistent ops (plan keys, rebuild count) for tests/benchmarks.
+    ``overlap=False`` builds the barrier-style variant of the same
+    decomposition — bit-identical results, no pipelining.
+    """
+    return _OverlappedStep(cfg, tcfg, mesh, topo, algo, error_budget,
+                           bucket_bytes, chunks, codec, overlap, donate)

@@ -1,15 +1,17 @@
-"""algo="auto" end-to-end on a real (N, P) CPU mesh.
+"""algo="auto" end-to-end on a real (N, P) CPU mesh, via the Communicator.
 
 Usage: auto_check.py N P   (run under XLA_FLAGS device_count = N*P)
 
 Asserts, for all six collectives:
-  1. runtime.collective(..., algo="auto") resolves through the selector
-     (prior source before calibration) and returns bit-identical results to
+  1. Communicator methods with algo="auto" resolve through the selector
+     (prior source before calibration) and return bit-identical results to
      every explicit algorithm;
-  2. after runtime.calibrate, auto resolves from the measured table and
+  2. after comm.calibrate, auto resolves from the measured table and
      still returns correct results;
   3. auto and explicit callers share exec-cache entries (auto re-invocation
-     is a cache hit, not a fresh compile).
+     is a cache hit, not a fresh compile), and a persistent op initialised
+     for the same plan shares the compiled-executable path (repeated start
+     never compiles).
 """
 import sys
 
@@ -19,11 +21,13 @@ import jax
 import numpy as np
 
 from repro.core import autotune, runtime
+from repro.core.comm import Communicator
 from repro.core.topology import Topology
 
 mesh = jax.make_mesh((N, P), ("node", "local"))
 topo = Topology.from_mesh(mesh)
 assert topo.link_names == ("host_cpu", "host_cpu"), topo.link_names
+comm = Communicator(mesh, topo)
 
 checks = 0
 
@@ -33,8 +37,7 @@ for name in runtime.collectives():
         x = runtime.example_input(name, topo, nbytes)
         outs = {}
         for algo in autotune.candidates(name, topo):
-            outs[algo] = np.asarray(
-                runtime.collective(mesh, topo, name, algo, x))
+            outs[algo] = np.asarray(comm.invoke(name, x, algo=algo))
         ref_algo = sorted(outs)[0]
         for algo, out in outs.items():
             if name == "allreduce":  # reduction order: fp tolerance
@@ -42,32 +45,42 @@ for name in runtime.collectives():
             else:
                 np.testing.assert_array_equal(out, outs[ref_algo],
                                               err_msg=f"{name}/{algo}")
-        before = runtime.selection_stats().total
-        auto_out = np.asarray(
-            runtime.collective(mesh, topo, name, "auto", x))
-        sstats = runtime.selection_stats()
+        before = comm.selection_stats().total
+        auto_out = np.asarray(comm.invoke(name, x))
+        sstats = comm.selection_stats()
         assert sstats.total == before + 1
         np.testing.assert_allclose(auto_out, outs[ref_algo], rtol=1e-6)
         checks += 1
-assert runtime.selection_stats().measured == 0, "no calibration yet"
+assert comm.selection_stats().measured == 0, "no calibration yet"
 
 # --- 3. auto shares the exec cache with explicit callers ------------------
 runtime.clear_cache()
 x = runtime.example_input("allgather", topo, 64)
 resolved, _ = runtime.resolve_algo(topo, "allgather", "auto", x)
-runtime.collective(mesh, topo, "allgather", resolved, x)   # miss (explicit)
-runtime.collective(mesh, topo, "allgather", "auto", x)     # hit (auto)
-s = runtime.cache_stats()
+comm.allgather(x, algo=resolved)   # miss (explicit)
+comm.allgather(x)                  # hit (auto)
+s = comm.cache_stats()
 assert s.exec_misses == 1 and s.exec_hits == 1, s
 checks += 1
 
+# --- 3b. persistent op: compile once at init, never at start --------------
+op = comm.allgather_init(x, algo=resolved)
+misses0 = comm.cache_stats().exec_misses
+for _ in range(4):
+    out_p = np.asarray(op.start(x).wait())
+assert comm.cache_stats().exec_misses == misses0, "start must never compile"
+np.testing.assert_array_equal(out_p, np.asarray(comm.allgather(x)))
+op2 = comm.allgather_init(x, algo=resolved)  # same spec: exec-cache hit
+assert comm.cache_stats().exec_misses == misses0, "re-init must be a hit"
+checks += 1
+
 # --- 2. calibration flips resolution to the measured table ----------------
-runtime.calibrate(mesh, topo, sizes=(64, 4096), iters=3)
+comm.calibrate(sizes=(64, 4096), iters=3)
 for name in runtime.collectives():
     x = runtime.example_input(name, topo, 64)
-    before = runtime.selection_stats().measured
-    out = np.asarray(runtime.collective(mesh, topo, name, "auto", x))
-    assert runtime.selection_stats().measured == before + 1, name
+    before = comm.selection_stats().measured
+    out = np.asarray(comm.invoke(name, x))
+    assert comm.selection_stats().measured == before + 1, name
     assert np.isfinite(out.astype(np.float64)).all()
     checks += 1
 sel = autotune.default_selector()

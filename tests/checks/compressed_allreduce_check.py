@@ -10,34 +10,36 @@ import numpy as np
 from jax.sharding import PartitionSpec as Pt
 
 from repro.core import compress, mcoll, runtime
+from repro.core.comm import Communicator
 from repro.core.topology import Topology
 
 mesh = jax.make_mesh((N, P), ("node", "local"))
 topo = Topology.from_mesh(mesh)
+comm = Communicator(mesh, topo)
 M = N * P
 n = 1000  # non-multiple of world*block on purpose
 x = (jax.random.normal(jax.random.PRNGKey(0), (M, n)) * 0.01)
 want = np.asarray(x).sum(0)
 A = float(np.abs(np.asarray(x)).max())
 
-# 1. every lossy codec, through the runtime's compiled-callable cache, on
-# both the plain and the pipelined compressed allreduce
+# 1. every lossy codec, through the Communicator's compiled-callable cache,
+# on both the plain and the pipelined compressed allreduce — blocking and
+# persistent-nonblocking execution of one plan must agree bitwise
 for codec in compress.lossy():
     tol = compress.collective_tolerance(codec, "allreduce", M, A) + 1e-7
     for algo, kw in (("pip_mcoll", {}), ("pip_pipeline", {"chunks": 3})):
-        got = np.asarray(runtime.collective(
-            mesh, topo, "allreduce", algo, x, codec=codec, **kw))
+        got = np.asarray(comm.allreduce(x, algo=algo, codec=codec, **kw))
         err = max(np.abs(got[d] - want).max() for d in range(M))
         assert err <= tol, (codec, algo, err, tol)
+        op = comm.allreduce_init(x, algo=algo, codec=codec, **kw)
+        np.testing.assert_array_equal(np.asarray(op.start(x).wait()), got)
 
 # 2. error_budget resolution: auto under a budget conforms to the loosest
 # admissible codec's bound; zero budget must reproduce the exact sum
-got = np.asarray(runtime.collective(mesh, topo, "allreduce", "auto", x,
-                                    error_budget=0.05))
+got = np.asarray(comm.allreduce(x, error_budget=0.05))
 tol = compress.collective_tolerance("int8_block", "allreduce", M, A) + 1e-7
 assert np.abs(got[0] - want).max() <= tol
-exact = np.asarray(runtime.collective(mesh, topo, "allreduce", "auto", x,
-                                      error_budget=0.0))
+exact = np.asarray(comm.allreduce(x, error_budget=0.0))
 np.testing.assert_allclose(exact[0], want, atol=1e-5 * max(A, 1.0))
 
 # 3. error feedback: accumulated compressed sums track the true accumulated

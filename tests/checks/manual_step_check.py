@@ -1,6 +1,8 @@
 """Validate the manual mcoll train step against the pjit reference on a
-(node x local) CPU mesh: same loss trajectory, and the compressed variant
-stays within quantization tolerance."""
+(node x local) CPU mesh: same loss trajectory, the compressed variant
+stays within quantization tolerance, the overlapped (persistent
+nonblocking) gradient sync is bit-exact vs its barrier-style twin, and
+the error-budget schedule hook re-resolves plans only at boundaries."""
 import sys
 N, P = int(sys.argv[1]), int(sys.argv[2])
 
@@ -114,6 +116,67 @@ assert losses[-1] < losses[0], losses
 e0 = np.asarray(err[0])
 assert all(np.abs(e0[d]).max() > 0 for d in range(topo.world)), \
     "error feedback never engaged on some device"
+
+# --- overlapped gradient sync (persistent nonblocking per-bucket ops) -----
+# the overlapped step must be BIT-EXACT vs the barrier-style variant of the
+# same decomposition (identical compiled programs, only host scheduling
+# differs), and agree with the fused step's loss
+from repro.core import runtime as _rt2
+po = decoder.init(key, cfg)
+oo = adamw.init(po, ocfg)
+step_ov = manual_step.make_overlapped_train_step(
+    cfg, tcfg, mesh, topo, algo="pip_pipeline", bucket_bytes=256 << 10,
+    overlap=True)
+op1, oo1, om1 = step_ov(po, oo, batch)
+pb2 = decoder.init(key, cfg)
+ob2 = adamw.init(pb2, ocfg)
+step_ba = manual_step.make_overlapped_train_step(
+    cfg, tcfg, mesh, topo, algo="pip_pipeline", bucket_bytes=256 << 10,
+    overlap=False)
+bp1, bo1, bm1 = step_ba(pb2, ob2, batch)
+ov_diffs = jax.tree.map(
+    lambda a, b: float(jnp.abs(a.astype(jnp.float32)
+                               - b.astype(jnp.float32)).max()), op1, bp1)
+worst_ov = max(jax.tree.leaves(ov_diffs))
+assert worst_ov == 0.0, f"overlapped sync not bit-exact: {worst_ov}"
+assert float(om1["loss"]) == float(bm1["loss"]), (om1["loss"], bm1["loss"])
+np.testing.assert_allclose(float(om1["loss"]), float(ref_m["loss"]),
+                           rtol=1e-5)
+assert len(step_ov.grad_sync.plans()) > 1, "expected multiple buckets"
+# persistent ops compile once: further steps add no exec-cache misses
+_misses0 = _rt2.cache_stats().exec_misses
+op1, oo1, om1 = step_ov(op1, oo1, batch)
+op1, oo1, om1 = step_ov(op1, oo1, batch)
+assert _rt2.cache_stats().exec_misses == _misses0, \
+    "overlapped step recompiled after warmup"
+
+# --- adaptive error budget: schedule hook on the persistent grad sync -----
+# the per-bucket codec plan re-resolves ONLY when the budget crosses a plan
+# boundary: lossless below the threshold step, int8_block at/after it, and
+# exactly one op rebuild at the crossing
+ps = decoder.init(key, cfg)
+os_ = adamw.init(ps, ocfg)
+sched = lambda step: 0.0 if step < 2 else BUDGET
+step_ad = manual_step.make_overlapped_train_step(
+    cfg, tcfg, mesh, topo, algo="pip_mcoll", error_budget=sched,
+    bucket_bytes=256 << 10)
+sched_losses = []
+for i in range(4):
+    ps, os_, ms = step_ad(ps, os_, batch)
+    gs = step_ad.grad_sync
+    assert gs.budget_at(i) == sched(i)
+    if i < 2:
+        assert all(p == "pip_mcoll" for p in gs.plans()), (i, gs.plans())
+        assert gs.rebuilds == 0, gs.rebuilds
+    else:
+        assert all(p == "pip_mcoll@int8_block" for p in gs.plans()), \
+            (i, gs.plans())
+        assert gs.rebuilds == 1, gs.rebuilds  # one transition, no churn
+    sched_losses.append(float(ms["loss"]))
+assert sched_losses[-1] < sched_losses[0], sched_losses
+
 print(f"manual_step_check N={N} P={P}: OK worst_param_diff={worst:.2e} "
       f"bucketed_bitexact_diff={worst_bucket:.1e} "
+      f"overlapped_bitexact_diff={worst_ov:.1e} "
+      f"sched_rebuilds={step_ad.grad_sync.rebuilds} "
       f"compressed_losses={losses[0]:.4f}->{losses[-1]:.4f}")

@@ -1,17 +1,19 @@
-"""Serving-engine DP token sync through the selection subsystem on a real
-multi-device mesh.
+"""Serving-engine DP token sync through the Communicator's persistent
+broadcast op on a real multi-device mesh.
 
 Usage: serve_sync_check.py N P   (run under XLA_FLAGS device_count = N*P)
 
 Asserts the mesh-attached engine produces the same tokens as the sync-free
 reference, resolves its per-tick broadcast through the selector
-(algo="auto"), and amortizes ticks through the runtime exec cache.
+(algo="auto"), and compiles the persistent sync op exactly once — every
+later tick is a bare start/wait (no cache lookups, no recompiles).
 """
 import sys
 
 N, P = int(sys.argv[1]), int(sys.argv[2])
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import reduced_config
@@ -38,6 +40,24 @@ got = eng.run([Request(prompt=prompt.copy(), max_new_tokens=4)])[0]
 assert got.out_tokens == want.out_tokens, (got.out_tokens, want.out_tokens)
 assert runtime.selection_stats().total > before, "sync never hit the selector"
 s = runtime.cache_stats()
-assert s.exec_misses >= 1 and s.exec_hits >= 1, s
+# persistent sync op: exactly one compile for the whole run, zero repeat
+# lookups — every decode tick after the first is a bare start/wait
+assert s.exec_misses == 1, s
+assert eng._sync_op is not None and eng._sync_op.starts >= 3, \
+    (eng._sync_op and eng._sync_op.starts)
+
+# a calibration table loaded mid-serving must re-resolve the sync plan
+# (the persistent op is rebound on tuning-table generation bumps) — and
+# the engine still produces the reference tokens from the measured plan
+op_before = eng._sync_op
+# calibrate at the tick payload's exact key: (1,) int32 -> 4-byte bucket
+eng.comm.calibrate(names=("broadcast",), sizes=(4,), iters=1,
+                   dtype=jnp.int32)
+got2 = eng.run([Request(prompt=prompt.copy(), max_new_tokens=4)])[0]
+assert got2.out_tokens == want.out_tokens, got2.out_tokens
+assert eng._sync_op is not op_before, "sync op never re-resolved"
+assert runtime.selection_stats().measured > 0, "measured plan never used"
+
 print(f"serve_sync_check N={N} P={P}: OK tokens={got.out_tokens} "
-      f"exec_hits={s.exec_hits}")
+      f"sync_starts={op_before.starts} exec_misses={s.exec_misses} "
+      f"recal_plan={eng._sync_op.plan}")

@@ -1,0 +1,297 @@
+"""Communicator API: blocking methods, persistent nonblocking ops, the
+plan-spec normalization point, the memoized per-(mesh, topo) communicator,
+the runtime.collective deprecation shim, and the repo-wide grep enforcing
+that no call site outside the shim invokes the free function.
+
+Runs on 1-device meshes (degenerate topology) — multi-device behavior is
+covered by tests/test_conformance.py and the subprocess checks.
+"""
+import pathlib
+import re
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import comm as comm_mod
+from repro.core import mcoll, runtime
+from repro.core.comm import Communicator, PersistentOp, PlanSpec
+from repro.core.topology import Topology
+
+REPO = pathlib.Path(__file__).resolve().parent.parent
+
+
+def _mesh_topo(node="node", local="local"):
+    mesh = jax.make_mesh((1, 1), (node, local))
+    return mesh, Topology(1, 1, node_axis=node, local_axis=local)
+
+
+# ---------------------------------------------------------------------------
+# blocking methods
+# ---------------------------------------------------------------------------
+
+
+def test_methods_cover_every_collective():
+    mesh, topo = _mesh_topo()
+    comm = Communicator(mesh, topo)
+    for name in runtime.collectives():
+        assert callable(getattr(comm, name)), name
+        assert callable(getattr(comm, f"{name}_init")), name
+        x = runtime.example_input(name, topo, 64)
+        out = comm.invoke(name, x)
+        assert np.isfinite(np.asarray(out, np.float64)).all()
+
+
+def test_method_matches_runtime_backend_bitwise():
+    """A Communicator method and the runtime backend entry are one code
+    path — identical results, shared exec-cache entry."""
+    mesh, topo = _mesh_topo()
+    comm = Communicator(mesh, topo)
+    runtime.clear_cache()
+    z = jnp.ones((1, 64), jnp.float32)
+    a = comm.allreduce(z, algo="pip_mcoll")
+    b = runtime.run(mesh, topo, "allreduce", "pip_mcoll", z)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    s = runtime.cache_stats()
+    assert s.exec_misses == 1 and s.exec_hits == 1, s
+
+
+def test_unknown_collective_rejected():
+    mesh, topo = _mesh_topo()
+    comm = Communicator(mesh, topo)
+    with pytest.raises(ValueError, match="unknown collective"):
+        comm.invoke("gossip", jnp.arange(4.0))
+
+
+def test_kwargs_validated_at_plan_construction():
+    """An unsupported knob fails with a clear ValueError when the plan is
+    constructed — never a TypeError mid-trace."""
+    mesh, topo = _mesh_topo()
+    comm = Communicator(mesh, topo)
+    z = jnp.ones((1, 16), jnp.float32)
+    with pytest.raises(ValueError, match="unsupported kwargs"):
+        comm.allreduce(z, algo="xla", radix=3)
+    with pytest.raises(ValueError, match="unknown algorithm"):
+        comm.allreduce(z, algo="does_not_exist")
+    with pytest.raises(ValueError, match="does not support chunking"):
+        comm.allreduce(z, algo="xla", chunks=2)
+    with pytest.raises(ValueError, match="does not support compression"):
+        comm.allreduce(z, algo="xla", codec="int8_block")
+    # a knob pinned in the spec AND passed again as an extra kwarg is a
+    # contradiction the resolver refuses (internal API: methods make this
+    # unreachable by construction)
+    with pytest.raises(ValueError, match="duplicate plan knobs"):
+        comm._resolve(PlanSpec("allreduce", "pip_pipeline", chunks=2), z,
+                      {"chunks": 3})
+
+
+def test_plan_resolution_method():
+    """comm.plan exposes the selector's (algo, chunks, codec) plan for
+    shard-body consumers (MoE) on this communicator's topology."""
+    mesh, topo = _mesh_topo()
+    comm = Communicator(mesh, topo)
+    sel = comm.plan("allreduce", 1 << 20)
+    assert sel.algo in mcoll.algorithms("allreduce")
+    assert sel.chunks >= 1 and sel.codec == "none"
+
+
+def test_instance_selector_drives_auto_resolution():
+    """A Communicator constructed with its own selector resolves auto
+    plans (blocking AND persistent) through IT, not the process default —
+    its calibration data is actually consulted."""
+    from repro.core import autotune
+    mesh, topo = _mesh_topo()
+    custom = autotune.Selector()
+    comm = Communicator(mesh, topo, selector=custom)
+    z = jnp.ones((1, 64), jnp.float32)
+    default_before = autotune.default_selector().stats.total
+    comm.allreduce(z)                   # algo="auto" -> custom selector
+    comm.allreduce_init(z)              # persistent init resolves too
+    assert custom.stats.total == 2, custom.stats
+    assert autotune.default_selector().stats.total == default_before
+    # a measured entry recorded into the custom table wins its resolution
+    custom.table.record(topo, "allreduce", "float32", 256, "xla", 1e-9)
+    algo, _ = runtime.resolve_algo(topo, "allreduce", "auto", z,
+                                   selector=custom)
+    assert algo == "xla"
+    op = comm.allreduce_init(z)
+    assert op.algo == "xla", op.plan
+
+
+# ---------------------------------------------------------------------------
+# the memoized communicator + the deprecation shim
+# ---------------------------------------------------------------------------
+
+
+def test_communicator_memoized_per_mesh_topo():
+    mesh, topo = _mesh_topo()
+    c1 = comm_mod.communicator(mesh, topo)
+    c2 = comm_mod.communicator(mesh, topo)
+    assert c1 is c2
+    mesh2, topo2 = _mesh_topo("n2", "l2")
+    assert comm_mod.communicator(mesh2, topo2) is not c1
+
+
+def test_shim_warns_once_and_is_bit_identical():
+    """runtime.collective survives as a deprecation shim: exactly one
+    DeprecationWarning per process, results bit-identical to the method,
+    cache entries shared."""
+    mesh, topo = _mesh_topo()
+    comm = comm_mod.communicator(mesh, topo)
+    z = jnp.ones((1, 32), jnp.float32)
+    want = np.asarray(comm.allreduce(z, algo="pip_mcoll"))
+    runtime._SHIM_WARNED = False
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        got1 = runtime.collective(mesh, topo, "allreduce", "pip_mcoll", z)
+        got2 = runtime.collective(mesh, topo, "allreduce", "pip_mcoll", z)
+    assert [x for x in w if x.category is DeprecationWarning], \
+        "shim must warn"
+    assert len([x for x in w if x.category is DeprecationWarning]) == 1, \
+        "shim must warn exactly once"
+    np.testing.assert_array_equal(np.asarray(got1), want)
+    np.testing.assert_array_equal(np.asarray(got2), want)
+
+
+def test_shim_shares_cache_entries_with_methods():
+    mesh, topo = _mesh_topo()
+    comm = comm_mod.communicator(mesh, topo)
+    runtime.clear_cache()
+    z = jnp.ones((1, 48), jnp.float32)
+    comm.allreduce(z, algo="pip_mcoll")
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore")
+        runtime.collective(mesh, topo, "allreduce", "pip_mcoll", z)
+    s = runtime.cache_stats()
+    assert s.exec_misses == 1 and s.exec_hits == 1, s
+
+
+# ---------------------------------------------------------------------------
+# persistent ops (1-device semantics; multi-device in conformance/checks)
+# ---------------------------------------------------------------------------
+
+
+def test_persistent_op_properties_and_call():
+    mesh, topo = _mesh_topo()
+    comm = Communicator(mesh, topo)
+    z = jnp.ones((1, 64), jnp.float32)
+    op = comm.allreduce_init(z, algo="pip_pipeline", chunks=2)
+    assert isinstance(op, PersistentOp)
+    assert (op.algo, op.chunks, op.codec) == ("pip_pipeline", 2, "none")
+    assert op.plan == "pip_pipeline#c2"
+    assert op.shape == (1, 64) and op.dtype == jnp.float32
+    np.testing.assert_array_equal(np.asarray(op(z)),  # __call__ sugar
+                                  np.asarray(comm.allreduce(
+                                      z, algo="pip_pipeline", chunks=2)))
+
+
+def test_persistent_init_needs_an_operand_spec():
+    mesh, topo = _mesh_topo()
+    comm = Communicator(mesh, topo)
+    with pytest.raises(ValueError, match="shape"):
+        comm.allreduce_init()
+    op = comm.allreduce_init(shape=(1, 8), dtype=jnp.float32,
+                             algo="pip_mcoll")
+    out = op.start(jnp.ones((1, 8), jnp.float32)).wait()
+    np.testing.assert_array_equal(np.asarray(out), np.ones((1, 8)))
+
+
+def test_persistent_init_resolves_auto_once():
+    """auto resolves at init; the op then carries a concrete plan."""
+    mesh, topo = _mesh_topo()
+    comm = Communicator(mesh, topo)
+    z = jnp.ones((1, 1 << 18), jnp.float32)
+    op = comm.allreduce_init(z)  # algo="auto"
+    assert op.algo != "auto" and op.algo in mcoll.algorithms("allreduce")
+    algo, kw = runtime.resolve_algo(topo, "allreduce", "auto", z)
+    assert op.algo == algo and op.chunks == kw.get("chunks", 1)
+
+
+def test_persistent_depth_validation():
+    mesh, topo = _mesh_topo()
+    comm = Communicator(mesh, topo)
+    with pytest.raises(ValueError, match="depth"):
+        comm.allreduce_init(shape=(1, 8), dtype=jnp.float32,
+                            algo="pip_mcoll", depth=0)
+
+
+def test_persistent_donate_is_a_distinct_program():
+    """donate=True compiles a separate executable (input aliasing differs)
+    but produces identical results."""
+    mesh, topo = _mesh_topo()
+    comm = Communicator(mesh, topo)
+    runtime.clear_cache()
+    z = jnp.ones((1, 32), jnp.float32)
+    op = comm.allreduce_init(z, algo="pip_mcoll")
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore")  # CPU may ignore donation
+        opd = comm.allreduce_init(z, algo="pip_mcoll", donate=True)
+        want = np.asarray(op.start(z).wait())
+        got = np.asarray(opd.start(jnp.ones((1, 32), jnp.float32)).wait())
+    np.testing.assert_array_equal(got, want)
+    assert runtime.cache_stats().exec_misses == 2
+
+
+# ---------------------------------------------------------------------------
+# regression grep: the shim is the ONLY runtime.collective call site
+# ---------------------------------------------------------------------------
+
+
+def test_no_runtime_collective_call_sites_outside_shim():
+    """Like the PR-1 shard_map grep: after the Communicator migration, no
+    code anywhere in the repo invokes the deprecated free function —
+    except its definition (core/runtime.py) and this file's shim tests."""
+    pattern = re.compile(
+        r"runtime\.collective\s*\(|"
+        r"from\s+repro\.core\.runtime\s+import\s+.*\bcollective\b")
+    allowed = {
+        REPO / "src" / "repro" / "core" / "runtime.py",
+        pathlib.Path(__file__).resolve(),
+    }
+    offenders = []
+    for sub in ("src", "tests", "benchmarks", "examples"):
+        for path in sorted((REPO / sub).rglob("*.py")):
+            if path.resolve() in allowed:
+                continue
+            for i, line in enumerate(path.read_text().splitlines(), 1):
+                if pattern.search(line):
+                    offenders.append(
+                        f"{path.relative_to(REPO)}:{i}: {line.strip()}")
+    assert not offenders, (
+        "runtime.collective call sites outside the deprecation shim "
+        "(migrate to repro.core.comm.Communicator):\n"
+        + "\n".join(offenders))
+
+
+# ---------------------------------------------------------------------------
+# PlanSpec normalization (unit level; cache-entry assertions live in
+# test_runtime.py::test_exec_cache_kwargs_normalization_single_entry)
+# ---------------------------------------------------------------------------
+
+
+def test_plan_spec_kwargs_drop_unpinned_knobs():
+    assert PlanSpec("allreduce").kwargs() == {}
+    assert PlanSpec("allreduce", chunks=None, codec=None).kwargs() == {}
+    assert PlanSpec("allreduce", chunks=4).kwargs() == {"chunks": 4}
+    assert PlanSpec("allreduce", codec="none").kwargs() == {"codec": "none"}
+    assert PlanSpec("allreduce", chunk_bytes=1024).kwargs() == \
+        {"chunk_bytes": 1024}
+
+
+def test_plan_spec_normalized_resolution_is_single_plan():
+    """Every spelling of the default plan resolves to identical normalized
+    kwargs — the exec-cache key material."""
+    topo = Topology(1, 1)
+    z = jnp.ones((1, 64), jnp.float32)
+    resolved = set()
+    for spec in (PlanSpec("allreduce", "pip_pipeline"),
+                 PlanSpec("allreduce", "pip_pipeline", chunks=1),
+                 PlanSpec("allreduce", "pip_pipeline", chunks=None),
+                 PlanSpec("allreduce", "pip_pipeline", codec="none"),
+                 PlanSpec("allreduce", "pip_pipeline", codec=None)):
+        algo, kw = runtime.resolve_algo(topo, spec.collective, spec.algo, z,
+                                        spec.kwargs())
+        resolved.add((algo, tuple(sorted(kw.items()))))
+    assert len(resolved) == 1, resolved

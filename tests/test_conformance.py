@@ -23,6 +23,7 @@ import pytest
 from _hypothesis_compat import given, settings, strategies as st
 
 from repro.core import autotune, compress, costmodel, mcoll, runtime
+from repro.core.comm import Communicator
 from repro.core.topology import Topology
 
 # ---------------------------------------------------------------------------
@@ -35,6 +36,7 @@ N = DC // P
 M = N * P
 mesh = jax.make_mesh((N, P), ("node", "local"))
 topo = Topology(N, P)
+COMM = Communicator(mesh, topo)
 
 PAIRS = [(coll, algo) for coll in runtime.collectives()
          for algo in mcoll.algorithms(coll)]
@@ -95,8 +97,15 @@ def _feasible(coll: str, algo: str) -> bool:
 
 
 def _run(coll: str, algo: str, x, **kw):
-    out = runtime.collective(mesh, topo, coll, algo, x, **kw)
+    out = COMM.invoke(coll, x, algo=algo, **kw)
     return np.asarray(out.astype(jnp.float32))
+
+
+def _run_persistent(coll: str, algo: str, x, **kw):
+    """The same plan through a persistent op: init (plan resolved +
+    compiled once), one start/wait."""
+    op = COMM.persistent(coll, x, algo=algo, **kw)
+    return np.asarray(op.start(x).wait().astype(jnp.float32))
 
 
 def _assert_conforms(coll: str, algo: str, m: int, dtype: str, **kw):
@@ -129,6 +138,99 @@ def test_conformance_chunked_pairs_basic(coll, algo):
     # a chunk count that does not divide the payload (remainder segment)
     _assert_conforms(coll, algo, 5, "float32", chunks=2)
     _assert_conforms(coll, algo, 5, "float32", chunks=3)
+
+
+# ---------------------------------------------------------------------------
+# persistent leg: blocking vs persistent-nonblocking execution of ONE plan
+# must be bitwise identical, for every (collective x algorithm x chunks x
+# codec) plan; plus handle-misuse errors (double wait, start past depth)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("coll,algo", PAIRS)
+def test_persistent_matches_blocking_every_pair(coll, algo):
+    if not _feasible(coll, algo):
+        pytest.skip(f"{algo} infeasible on {N}x{P}")
+    x = _operand(coll, 5, "float32")
+    np.testing.assert_array_equal(_run_persistent(coll, algo, x),
+                                  _run(coll, algo, x),
+                                  err_msg=f"{coll}/{algo} persistent")
+
+
+@pytest.mark.parametrize("coll,algo", CHUNKED_PAIRS)
+def test_persistent_matches_blocking_chunked(coll, algo):
+    if not _feasible(coll, algo):
+        pytest.skip(f"{algo} infeasible on {N}x{P}")
+    x = _operand(coll, 5, "float32")
+    for chunks in (2, 3):
+        np.testing.assert_array_equal(
+            _run_persistent(coll, algo, x, chunks=chunks),
+            _run(coll, algo, x, chunks=chunks),
+            err_msg=f"{coll}/{algo} c={chunks} persistent")
+
+
+@pytest.mark.parametrize("coll,algo,cd", CODEC_TRIPLES)
+def test_persistent_matches_blocking_compressed(coll, algo, cd):
+    """Lossy plans too: same compiled plan, deterministic execution —
+    persistent start/wait must reproduce the blocking result bitwise."""
+    if not _feasible(coll, algo):
+        pytest.skip(f"{algo} infeasible on {N}x{P}")
+    x = _operand(coll, 80, "float32")
+    np.testing.assert_array_equal(_run_persistent(coll, algo, x, codec=cd),
+                                  _run(coll, algo, x, codec=cd),
+                                  err_msg=f"{coll}/{algo}@{cd} persistent")
+
+
+@pytest.mark.parametrize("coll", sorted(runtime.collectives()))
+def test_persistent_auto_plan_matches_blocking(coll):
+    """algo="auto" resolves to the same plan at init and call time — the
+    persistent op and the blocking method share one executable."""
+    x = _operand(coll, 5, "float32")
+    np.testing.assert_array_equal(_run_persistent(coll, "auto", x),
+                                  _run(coll, "auto", x))
+
+
+def test_persistent_compiles_once_across_starts():
+    """Repeated start/wait on one op never re-enters the exec cache."""
+    x = _operand("allreduce", 16, "float32")
+    op = COMM.allreduce_init(x, algo="pip_mcoll")
+    misses0 = runtime.cache_stats().exec_misses
+    outs = [np.asarray(op.start(x).wait()) for _ in range(4)]
+    assert runtime.cache_stats().exec_misses == misses0
+    assert op.starts == 4
+    for o in outs[1:]:
+        np.testing.assert_array_equal(o, outs[0])
+    # a second op of the same spec is an exec-cache hit, not a compile
+    COMM.allreduce_init(x, algo="pip_mcoll")
+    assert runtime.cache_stats().exec_misses == misses0
+
+
+def test_persistent_handle_misuse_errors():
+    x = _operand("allreduce", 8, "float32")
+    op = COMM.allreduce_init(x, algo="pip_mcoll")  # depth=1
+    h = op.start(x)
+    with pytest.raises(RuntimeError, match="outstanding"):
+        op.start(x)  # start before wait without double buffering
+    h.wait()
+    with pytest.raises(RuntimeError, match="double wait"):
+        h.wait()
+    op.start(x).wait()  # slot released: pairing works again
+    # depth=2 (double buffering) allows exactly one extra outstanding start
+    op2 = COMM.allreduce_init(x, algo="pip_mcoll", depth=2)
+    h1, h2 = op2.start(x), op2.start(x)
+    with pytest.raises(RuntimeError, match="outstanding"):
+        op2.start(x)
+    np.testing.assert_array_equal(np.asarray(h1.wait()),
+                                  np.asarray(h2.wait()))
+
+
+def test_persistent_rejects_operand_spec_mismatch():
+    x = _operand("allreduce", 8, "float32")
+    op = COMM.allreduce_init(x, algo="pip_mcoll")
+    with pytest.raises(ValueError, match="compiled for"):
+        op.start(_operand("allreduce", 9, "float32"))
+    with pytest.raises(ValueError, match="compiled for"):
+        op.start(_operand("allreduce", 8, "int32"))
 
 
 # ---------------------------------------------------------------------------
@@ -313,7 +415,7 @@ def test_scatter_rejects_non_divisible_payload():
         pytest.skip("every payload divides on 1 device")
     x = jnp.arange(float(M * 3 + 1))
     with pytest.raises(ValueError, match="divisible by world"):
-        runtime.collective(mesh, topo, "scatter", "pip_mcoll", x)
+        COMM.scatter(x, algo="pip_mcoll")
 
 
 def test_plan_encode_decode_round_trip():

@@ -3,6 +3,9 @@ build/exec cache behavior, and the no-direct-shard_map regression grep.
 
 Cache tests run in-process on 1-device meshes (a (1, 1) node x local mesh
 is a valid degenerate topology), keeping device-count containment intact.
+All cache tests drive the runtime through the Communicator (the supported
+surface, via ``_coll``); the ``runtime.collective`` deprecation shim has
+its own tests in test_comm.py.
 """
 import pathlib
 import re
@@ -13,10 +16,15 @@ import numpy as np
 import pytest
 from jax.sharding import PartitionSpec as P
 
+from repro.core import comm as comm_mod
 from repro.core import compat, runtime
 from repro.core.topology import Topology
 
 SRC = pathlib.Path(__file__).resolve().parent.parent / "src"
+
+
+def _coll(mesh, topo, name, algo, x, **kw):
+    return comm_mod.communicator(mesh, topo).invoke(name, x, algo=algo, **kw)
 
 
 # ---------------------------------------------------------------------------
@@ -91,8 +99,8 @@ def test_exec_cache_hit_on_identical_key():
     mesh, topo = _mesh_topo()
     runtime.clear_cache()
     x = jnp.arange(4.0)
-    out1 = runtime.collective(mesh, topo, "allgather", "xla", x)
-    out2 = runtime.collective(mesh, topo, "allgather", "xla", x)
+    out1 = _coll(mesh, topo, "allgather", "xla", x)
+    out2 = _coll(mesh, topo, "allgather", "xla", x)
     s = runtime.cache_stats()
     assert s.exec_misses == 1 and s.exec_hits == 1
     np.testing.assert_array_equal(np.asarray(out1), np.asarray(out2))
@@ -102,16 +110,16 @@ def test_exec_cache_hit_on_identical_key():
 def test_exec_cache_fresh_on_shape_dtype_algo_mesh_change():
     mesh, topo = _mesh_topo()
     runtime.clear_cache()
-    runtime.collective(mesh, topo, "allgather", "xla", jnp.arange(4.0))
-    runtime.collective(mesh, topo, "allgather", "xla", jnp.arange(8.0))
+    _coll(mesh, topo, "allgather", "xla", jnp.arange(4.0))
+    _coll(mesh, topo, "allgather", "xla", jnp.arange(8.0))
     assert runtime.cache_stats().exec_misses == 2, "shape change re-compiles"
-    runtime.collective(mesh, topo, "allgather", "xla",
+    _coll(mesh, topo, "allgather", "xla",
                        jnp.arange(4, dtype=jnp.int32))
     assert runtime.cache_stats().exec_misses == 3, "dtype change re-compiles"
-    runtime.collective(mesh, topo, "allgather", "pip_mcoll", jnp.arange(4.0))
+    _coll(mesh, topo, "allgather", "pip_mcoll", jnp.arange(4.0))
     assert runtime.cache_stats().exec_misses == 4, "algo change re-compiles"
     mesh2, topo2 = _mesh_topo("n2", "l2")
-    runtime.collective(mesh2, topo2, "allgather", "xla", jnp.arange(4.0))
+    _coll(mesh2, topo2, "allgather", "xla", jnp.arange(4.0))
     assert runtime.cache_stats().exec_misses == 5, "mesh change re-compiles"
     assert runtime.cache_stats().exec_hits == 0
 
@@ -121,7 +129,7 @@ def test_collective_correct_through_cache():
     runtime.clear_cache()
     z = jnp.arange(6.0).reshape(1, 6)
     for _ in range(2):  # second pass: every call a cache hit, same results
-        out = runtime.collective(mesh, topo, "allreduce", "pip_mcoll", z)
+        out = _coll(mesh, topo, "allreduce", "pip_mcoll", z)
         np.testing.assert_allclose(np.asarray(out), np.asarray(z))
     assert runtime.cache_stats().exec_hits == 1
 
@@ -150,10 +158,10 @@ def test_exec_cache_chunked_plans_do_not_collide():
     mesh, topo = _mesh_topo()
     runtime.clear_cache()
     z = jnp.ones((1, 64), jnp.float32)
-    runtime.collective(mesh, topo, "allreduce", "pip_pipeline", z, chunks=1)
-    runtime.collective(mesh, topo, "allreduce", "pip_pipeline", z, chunks=2)
+    _coll(mesh, topo, "allreduce", "pip_pipeline", z, chunks=1)
+    _coll(mesh, topo, "allreduce", "pip_pipeline", z, chunks=2)
     assert runtime.cache_stats().exec_misses == 2, "chunk change re-compiles"
-    runtime.collective(mesh, topo, "allreduce", "pip_pipeline", z, chunks=2)
+    _coll(mesh, topo, "allreduce", "pip_pipeline", z, chunks=2)
     s = runtime.cache_stats()
     assert s.exec_hits == 1 and s.exec_misses == 2, s
 
@@ -164,10 +172,51 @@ def test_exec_cache_default_chunks_normalized():
     mesh, topo = _mesh_topo()
     runtime.clear_cache()
     z = jnp.ones((1, 64), jnp.float32)
-    runtime.collective(mesh, topo, "allreduce", "pip_pipeline", z)
-    runtime.collective(mesh, topo, "allreduce", "pip_pipeline", z, chunks=1)
+    _coll(mesh, topo, "allreduce", "pip_pipeline", z)
+    _coll(mesh, topo, "allreduce", "pip_pipeline", z, chunks=1)
     s = runtime.cache_stats()
     assert s.exec_hits == 1 and s.exec_misses == 1, s
+
+
+def test_exec_cache_kwargs_normalization_single_entry():
+    """The PlanSpec normalization point: ``chunks=None``, ``chunks=1``,
+    ``codec=None``, ``codec="none"`` and the bare call are ONE plan — a
+    single exec-cache entry through every call-path spelling (the kwargs
+    drift that used to risk distinct entries per spelling)."""
+    mesh, topo = _mesh_topo()
+    runtime.clear_cache()
+    z = jnp.ones((1, 64), jnp.float32)
+    comm = comm_mod.communicator(mesh, topo)
+    comm.allreduce(z, algo="pip_pipeline")
+    comm.allreduce(z, algo="pip_pipeline", chunks=1)
+    comm.allreduce(z, algo="pip_pipeline", chunks=None)
+    comm.allreduce(z, algo="pip_pipeline", codec=None)
+    comm.allreduce(z, algo="pip_pipeline", codec="none")
+    comm.allreduce(z, algo="pip_pipeline", chunks=None, codec=None)
+    s = runtime.cache_stats()
+    assert s.exec_misses == 1 and s.exec_hits == 5, s
+    # the persistent path of the same plan shares the build cache but pins
+    # the operand sharding, so it compiles exactly one more executable —
+    # and every later init of the spec is a hit
+    op = comm.allreduce_init(z, algo="pip_pipeline", chunks=None, codec=None)
+    op2 = comm.allreduce_init(z, algo="pip_pipeline", chunks=1,
+                              codec="none")
+    s = runtime.cache_stats()
+    assert s.exec_misses == 2 and s.exec_hits == 6, s
+
+
+def test_plan_spec_validates_at_construction():
+    """PlanSpec rejects bad knobs before any trace happens."""
+    with pytest.raises(ValueError, match="unknown collective"):
+        comm_mod.PlanSpec("gossip")
+    with pytest.raises(ValueError, match="chunks"):
+        comm_mod.PlanSpec("allreduce", chunks=0)
+    with pytest.raises(ValueError, match="chunk_bytes"):
+        comm_mod.PlanSpec("allreduce", chunk_bytes=0)
+    with pytest.raises(ValueError, match="error_budget"):
+        comm_mod.PlanSpec("allreduce", error_budget=-0.5)
+    with pytest.raises(TypeError, match="schedule"):
+        comm_mod.PlanSpec("allreduce", error_budget=lambda s: 0.0)
 
 
 def test_auto_and_explicit_chunked_callers_share_entries():
@@ -177,8 +226,8 @@ def test_auto_and_explicit_chunked_callers_share_entries():
     runtime.clear_cache()
     z = jnp.ones((1, 1 << 20), jnp.float32)  # bandwidth regime
     algo, kw = runtime.resolve_algo(topo, "allreduce", "auto", z)
-    runtime.collective(mesh, topo, "allreduce", algo, z, **kw)  # explicit
-    runtime.collective(mesh, topo, "allreduce", "auto", z)      # auto: hit
+    _coll(mesh, topo, "allreduce", algo, z, **kw)  # explicit
+    _coll(mesh, topo, "allreduce", "auto", z)      # auto: hit
     s = runtime.cache_stats()
     assert s.exec_misses == 1 and s.exec_hits == 1, s
 
@@ -192,9 +241,9 @@ def test_chunk_bytes_converts_to_chunks_plan():
     algo, kw = runtime.resolve_algo(topo, "allreduce", "pip_pipeline", z,
                                     {"chunk_bytes": 1024})
     assert algo == "pip_pipeline" and kw == {"chunks": 4, "codec": "none"}, kw
-    runtime.collective(mesh, topo, "allreduce", "pip_pipeline", z,
+    _coll(mesh, topo, "allreduce", "pip_pipeline", z,
                        chunk_bytes=1024)
-    runtime.collective(mesh, topo, "allreduce", "pip_pipeline", z, chunks=4)
+    _coll(mesh, topo, "allreduce", "pip_pipeline", z, chunks=4)
     s = runtime.cache_stats()
     assert s.exec_misses == 1 and s.exec_hits == 1, s
 
@@ -205,9 +254,9 @@ def test_chunks_on_non_capable_algo_rejected_clearly():
     mesh, topo = _mesh_topo()
     z = jnp.ones((1, 64), jnp.float32)
     with pytest.raises(ValueError, match="does not support chunking"):
-        runtime.collective(mesh, topo, "allreduce", "xla", z, chunks=2)
+        _coll(mesh, topo, "allreduce", "xla", z, chunks=2)
     with pytest.raises(ValueError, match="does not support chunking"):
-        runtime.collective(mesh, topo, "allreduce", "xla", z, chunk_bytes=64)
+        _coll(mesh, topo, "allreduce", "xla", z, chunk_bytes=64)
 
 
 def test_calibrate_records_chunked_plans(tmp_path):
@@ -237,11 +286,11 @@ def test_exec_cache_codec_plans_do_not_collide():
     mesh, topo = _mesh_topo()
     runtime.clear_cache()
     z = jnp.ones((1, 64), jnp.float32)
-    runtime.collective(mesh, topo, "allreduce", "pip_mcoll", z)
-    runtime.collective(mesh, topo, "allreduce", "pip_mcoll", z,
+    _coll(mesh, topo, "allreduce", "pip_mcoll", z)
+    _coll(mesh, topo, "allreduce", "pip_mcoll", z,
                        codec="int8_block")
     assert runtime.cache_stats().exec_misses == 2, "codec change re-compiles"
-    runtime.collective(mesh, topo, "allreduce", "pip_mcoll", z,
+    _coll(mesh, topo, "allreduce", "pip_mcoll", z,
                        codec="int8_block")
     s = runtime.cache_stats()
     assert s.exec_hits == 1 and s.exec_misses == 2, s
@@ -254,8 +303,8 @@ def test_exec_cache_default_codec_normalized():
     mesh, topo = _mesh_topo()
     runtime.clear_cache()
     z = jnp.ones((1, 64), jnp.float32)
-    runtime.collective(mesh, topo, "allreduce", "pip_mcoll", z)
-    runtime.collective(mesh, topo, "allreduce", "pip_mcoll", z, codec="none")
+    _coll(mesh, topo, "allreduce", "pip_mcoll", z)
+    _coll(mesh, topo, "allreduce", "pip_mcoll", z, codec="none")
     s = runtime.cache_stats()
     assert s.exec_hits == 1 and s.exec_misses == 1, s
 
@@ -264,10 +313,10 @@ def test_codec_on_non_capable_algo_rejected_clearly():
     mesh, topo = _mesh_topo()
     z = jnp.ones((1, 64), jnp.float32)
     with pytest.raises(ValueError, match="does not support compression"):
-        runtime.collective(mesh, topo, "allreduce", "xla", z,
+        _coll(mesh, topo, "allreduce", "xla", z,
                            codec="int8_block")
     with pytest.raises(ValueError, match="unknown codec"):
-        runtime.collective(mesh, topo, "allreduce", "pip_mcoll", z,
+        _coll(mesh, topo, "allreduce", "pip_mcoll", z,
                            codec="zstd")
 
 
@@ -348,14 +397,14 @@ def test_exec_cache_lru_bounded_and_counts_evictions():
     runtime.set_cache_limits(max_exec=2)
     try:
         for n in (4, 8, 16):  # 3 distinct shapes through a 2-entry cache
-            runtime.collective(mesh, topo, "allgather", "xla",
+            _coll(mesh, topo, "allgather", "xla",
                                jnp.arange(float(n)))
         s = runtime.cache_stats()
         assert s.exec_misses == 3 and s.exec_evictions == 1
         # oldest entry (n=4) was evicted -> re-miss; newest still hits
-        runtime.collective(mesh, topo, "allgather", "xla", jnp.arange(16.0))
+        _coll(mesh, topo, "allgather", "xla", jnp.arange(16.0))
         assert runtime.cache_stats().exec_hits == 1
-        runtime.collective(mesh, topo, "allgather", "xla", jnp.arange(4.0))
+        _coll(mesh, topo, "allgather", "xla", jnp.arange(4.0))
         assert runtime.cache_stats().exec_misses == 4
     finally:
         runtime.set_cache_limits(**{f"max_{k}": v for k, v in old.items()})
@@ -369,12 +418,12 @@ def test_exec_cache_lru_recency_order():
     old = runtime.set_cache_limits()
     runtime.set_cache_limits(max_exec=2)
     try:
-        runtime.collective(mesh, topo, "allgather", "xla", jnp.arange(4.0))
-        runtime.collective(mesh, topo, "allgather", "xla", jnp.arange(8.0))
-        runtime.collective(mesh, topo, "allgather", "xla", jnp.arange(4.0))
+        _coll(mesh, topo, "allgather", "xla", jnp.arange(4.0))
+        _coll(mesh, topo, "allgather", "xla", jnp.arange(8.0))
+        _coll(mesh, topo, "allgather", "xla", jnp.arange(4.0))
         # inserting a third evicts n=8 (LRU), keeping the refreshed n=4
-        runtime.collective(mesh, topo, "allgather", "xla", jnp.arange(16.0))
-        runtime.collective(mesh, topo, "allgather", "xla", jnp.arange(4.0))
+        _coll(mesh, topo, "allgather", "xla", jnp.arange(16.0))
+        _coll(mesh, topo, "allgather", "xla", jnp.arange(4.0))
         s = runtime.cache_stats()
         assert s.exec_hits == 2 and s.exec_misses == 3, s
     finally:
@@ -403,7 +452,7 @@ def test_shrinking_limit_evicts_immediately():
     old = runtime.set_cache_limits()
     try:
         for n in (4, 8, 16):
-            runtime.collective(mesh, topo, "allgather", "xla",
+            _coll(mesh, topo, "allgather", "xla",
                                jnp.arange(float(n)))
         assert runtime.cache_stats().exec_evictions == 0
         runtime.set_cache_limits(max_exec=1)

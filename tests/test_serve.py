@@ -74,9 +74,9 @@ def test_engine_degenerate_mesh_skips_sync_dispatch():
 
 @pytest.mark.slow
 def test_engine_token_sync_resolves_through_selector_2dev():
-    """With a real 2-device mesh, every decode tick syncs tokens via
-    runtime.collective (algo="auto"): same outputs as the sync-free engine,
-    selection stats advance, ticks amortize through the exec cache."""
+    """With a real 2-device mesh, every decode tick syncs tokens via the
+    Communicator's persistent broadcast op (algo="auto"): same outputs as
+    the sync-free engine, selection stats advance, one compile total."""
     out = run_check("serve_sync_check.py", 2, 1, 2)
     assert "serve_sync_check" in out and "OK" in out
 
