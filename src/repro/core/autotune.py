@@ -121,34 +121,46 @@ def _integer_dtype(dtype: str) -> bool:
 
 
 def codec_candidates(collective: str, algo: str,
-                     error_budget: float = 0.0) -> Tuple[str, ...]:
+                     error_budget: float = 0.0,
+                     dtype: str = "float32") -> Tuple[str, ...]:
     """Codec names worth evaluating for one (collective, algo) under an
-    error budget: always ``"none"`` first; lossy codecs only when the
-    algorithm has a compressed execution AND the codec's stated bound fits
-    the budget. ``error_budget=0.0`` therefore yields ``("none",)`` for
-    every pair — the selector can never emit a lossy plan."""
+    error budget: always ``"none"`` first; other codecs only when the
+    algorithm has a compressed execution AND the codec is admissible for
+    the payload domain (``compress.admissible``: bound fits the budget,
+    integer-only codecs need integer payloads on non-reducing collectives,
+    lossy codecs never touch integer payloads). ``error_budget=0.0`` on a
+    float payload therefore yields ``("none",)`` for every pair — the
+    selector can never emit a lossy plan — while an integer payload still
+    admits the lossless integer packers."""
     if not _mcoll.supports_codec(collective, algo):
         return (_codecs.NONE,)
-    return _codecs.for_budget(error_budget)
+    return _codecs.for_budget(error_budget, collective,
+                              integer_payload=_integer_dtype(dtype))
 
 
 def plans(collective: str, topo: Topology, nbytes: int,
           net: Optional[Union[str, NetParams]] = None,
-          codecs: Optional[Tuple[str, ...]] = None
-          ) -> Tuple[Tuple[str, int, str], ...]:
+          codecs: Optional[Tuple[str, ...]] = None,
+          dtype: str = "float32") -> Tuple[Tuple[str, int, str], ...]:
     """(algo, chunks, codec) calibration candidates for one message size:
     every feasible algorithm with chunk-count variants for the pipelined
-    ones, plus one codec variant per lossy codec (at chunks=1) for the
-    codec-capable algorithms — calibration measures each, and the tuning
-    table stores them under :func:`encode_plan` keys."""
+    ones, plus one codec variant per domain-admissible non-identity codec
+    (at chunks=1) for the codec-capable algorithms — lossy codecs for
+    float payloads, lossless integer packers for integer ones.
+    Calibration measures each; the tuning table stores them under
+    :func:`encode_plan` keys."""
     net_p = (costmodel.net_for(topo) if net is None
              else costmodel.resolve_net(net))
+    integer = _integer_dtype(dtype)
     out = []
     for algo in candidates(collective, topo):
         for c in chunk_candidates(collective, algo, topo, nbytes, net_p):
             out.append((algo, c, _codecs.NONE))
         if _mcoll.supports_codec(collective, algo):
-            for cd in (codecs if codecs is not None else _codecs.lossy()):
+            cds = codecs if codecs is not None else tuple(
+                cd for cd in _codecs.codecs() if cd != _codecs.NONE
+                and _codecs.admissible(cd, collective, 1.0, integer))
+            for cd in cds:
                 out.append((algo, 1, cd))
     return tuple(out)
 
@@ -227,7 +239,14 @@ def topo_key(topo: Topology) -> str:
     if intra == "default":
         intra = topo.link_names[0] if topo.link_names[0] != "default" \
             else default
-    return f"{topo.n_nodes}x{topo.n_local}/{inter}/{intra}"
+    key = f"{topo.n_nodes}x{topo.n_local}/{inter}/{intra}"
+    # sub-communicator topologies get a group suffix so groups calibrate
+    # in their own namespace (an 8-way TP group and a 2-way DP group never
+    # share rows; siblings of identical shape — same tag — do). Root
+    # topologies carry no suffix, so pre-group tables keep resolving.
+    if topo.group:
+        key += f"/g:{topo.group}"
+    return key
 
 
 class TuningTable:
@@ -341,8 +360,10 @@ class Selector:
         (``0.0`` -> lossless plans only — in both the prior enumeration and
         the measured-table filter, so a calibrated lossy entry can never
         leak into an exact caller's plan). Integer/bool payload dtypes
-        force the budget to 0.0: the compressed execution rejects them, so
-        auto must keep producing a runnable (lossless) plan."""
+        force the budget to 0.0 — the compressed execution rejects lossy
+        codecs on them — but the lossless integer packers (e.g.
+        ``zlib_sim``) remain candidates on non-reducing collectives, so
+        token/index payloads can still compress bit-exactly."""
         if self._memo_gen != self.table.generation:
             self._memo.clear()
             self._memo_gen = self.table.generation
@@ -372,7 +393,8 @@ class Selector:
                 if algo not in cands:
                     continue
                 try:
-                    if _codecs.meta(cd).error_bound > budget:
+                    if not _codecs.admissible(cd, collective, budget,
+                                              _integer_dtype(dtype)):
                         continue
                 except ValueError:
                     continue
@@ -389,7 +411,7 @@ class Selector:
             float("inf")
         for algo in cands:
             try:
-                for cd in codec_candidates(collective, algo, budget):
+                for cd in codec_candidates(collective, algo, budget, dtype):
                     # chunk candidates under the codec's effective wire
                     # beta: compression shifts the pipelining optimum too
                     cnet = costmodel.codec_net(net_p, topo, cd)

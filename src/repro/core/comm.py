@@ -11,9 +11,18 @@ re-deriving topology per call. This module is that shape on JAX:
   * :class:`Communicator` owns ``(mesh, topo, selector)`` and fronts the
     runtime's build/exec caches (``repro.core.runtime`` is the cache
     backend). One method per collective — ``comm.allreduce(x, algo="auto",
-    chunks=..., codec=..., error_budget=...)`` — replaces the stringly-typed
-    free function (now a deprecation shim in ``runtime``); kwargs are
-    validated when the plan is constructed, not mid-trace.
+    chunks=..., codec=..., error_budget=...)`` — replaces the old
+    stringly-typed free function; kwargs are validated when the plan is
+    constructed, not mid-trace.
+  * ``comm.split(axes=...)`` makes **groups first-class** (the
+    ``MPI_Comm_split`` analog): it returns a child Communicator scoped to
+    a sub-topology over the named mesh axes — its collectives run
+    independently per group (SPMD: one child object serves every group
+    along the orthogonal axes), its tuning table rows are namespaced by
+    the group tag, and its plan/exec/persistent caches key on the group
+    topology so siblings of identical shape share compiled entries.
+    ``split(color=..., key=...)`` handles irregular groups by building a
+    sub-mesh per color.
   * :class:`PlanSpec` normalizes the plan knobs exactly once (``chunks=None``
     == ``chunks=1`` == omitted; ``codec=None`` == ``codec="none"`` ==
     omitted; ``chunk_bytes`` folds into ``chunks``), so every call path of
@@ -27,8 +36,8 @@ re-deriving topology per call. This module is that shape on JAX:
     starts (``depth>=2`` = double buffering); ``donate=True`` donates the
     operand buffer on backends that support aliasing.
 
-The free function ``runtime.collective`` survives as a deprecation shim
-delegating to :func:`communicator` (the per-(mesh, topo) memo below).
+:func:`communicator` (the per-(mesh, topo) memo below) is the canonical
+entry point for hot loops that cannot keep a handle around.
 """
 from __future__ import annotations
 
@@ -38,9 +47,19 @@ from typing import Any, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import autotune, runtime
 from repro.core.topology import Topology
+
+
+def _default_topo(mesh) -> Optional[Topology]:
+    """``Topology.from_mesh`` when the mesh carries the default node/local
+    axes; ``None`` (an unscoped root) otherwise."""
+    try:
+        return Topology.from_mesh(mesh)
+    except (KeyError, ValueError):
+        return None
 
 
 # ---------------------------------------------------------------------------
@@ -244,20 +263,119 @@ class Communicator:
 
     Owns the selector handle and fronts the runtime's build/exec caches;
     exposes one blocking method per collective plus ``*_init`` constructors
-    for persistent nonblocking ops. Construct once per (mesh, topology) and
+    for persistent nonblocking ops, and :meth:`split` for sub-communicators
+    over a subset of the mesh. Construct once per (mesh, topology) and
     reuse — or use :func:`communicator` for the process-wide memo.
+
+    A Communicator built on a mesh whose axes don't map onto the default
+    node/local topology (e.g. a 3-axis MoE mesh) is an **unscoped root**:
+    ``split(axes=...)`` works, collective methods raise until scoped.
     """
 
     def __init__(self, mesh, topo: Optional[Topology] = None, *,
                  selector: Optional[autotune.Selector] = None):
         self.mesh = mesh
-        self.topo = topo if topo is not None else Topology.from_mesh(mesh)
+        if topo is None:
+            topo = _default_topo(mesh)
+        self.topo = topo
         self.selector = (selector if selector is not None
                          else autotune.default_selector())
+        self._groups: Dict[tuple, "Communicator"] = {}
 
     def __repr__(self) -> str:
+        if self.topo is None:
+            return (f"Communicator(unscoped root, "
+                    f"mesh axes={tuple(self.mesh.axis_names)})")
+        grp = f", group={self.topo.group!r}" if self.topo.group else ""
         return (f"Communicator({self.topo.n_nodes}x{self.topo.n_local}, "
-                f"axes={self.topo.axes})")
+                f"axes={self.topo.axes}{grp})")
+
+    def _require_topo(self) -> Topology:
+        if self.topo is None:
+            raise ValueError(
+                "this Communicator is an unscoped root — mesh axes "
+                f"{tuple(self.mesh.axis_names)} do not map onto the default "
+                "node/local topology; call split(axes=...) to scope it to a "
+                "group before running collectives")
+        return self.topo
+
+    # -- sub-communicators --------------------------------------------------
+
+    def split(self, axes=None, *, color=None, key=None,
+              group: Optional[str] = None):
+        """The ``MPI_Comm_split`` analog: derive child communicator(s)
+        scoped to a subset of this communicator's processes.
+
+        Two forms:
+
+        ``split(axes=...)`` — regular (mesh-aligned) groups. ``axes`` is
+        one mesh axis name or a ``(node_axis, local_axis)`` pair; the child
+        shares this mesh and runs every group along the orthogonal axes in
+        one SPMD program, so a single child object serves all siblings.
+        Its :class:`~repro.core.topology.Topology` is derived with
+        :meth:`Topology.subset` (link classes inherited from the parent
+        where the axis matches), its tuning-table rows carry the group tag
+        (``group=`` overrides the default ``"x".join(axes)``), and because
+        children are memoized here, repeated splits of the same spec share
+        plan/exec/persistent caches.
+
+        ``split(color=..., key=...)`` — irregular groups. ``color`` is a
+        sequence of ``world`` ints (one per parent rank, parent flat device
+        order); ranks with equal color form a group, ordered by
+        ``(key[rank], rank)`` (``key`` defaults to parent rank). Returns
+        ``{color: Communicator}``, each on its own ``(1, group_size)``
+        sub-mesh. Use this for groups that don't align with mesh axes.
+
+        Splitting a child again (split-of-split) composes naturally.
+        """
+        if (axes is None) == (color is None):
+            raise ValueError("split() takes exactly one of axes= or color=")
+        if axes is not None:
+            if key is not None:
+                raise ValueError("key= only applies to color splits")
+            ax = (axes,) if isinstance(axes, str) else tuple(axes)
+            gk = ("axes", ax, group)
+            hit = self._groups.get(gk)
+            if hit is None:
+                topo = Topology.subset(self.mesh, ax, parent=self.topo,
+                                       group=group)
+                hit = self._groups[gk] = Communicator(
+                    self.mesh, topo, selector=self.selector)
+            return hit
+        return self._split_color(color, key, group)
+
+    def _split_color(self, color, key, group: Optional[str]
+                     ) -> Dict[Any, "Communicator"]:
+        devices = list(np.asarray(self.mesh.devices).flat)
+        world = len(devices)
+        color = tuple(int(c) for c in color)
+        if len(color) != world:
+            raise ValueError(
+                f"color needs one entry per parent rank: got {len(color)} "
+                f"for world {world}")
+        key = (tuple(range(world)) if key is None
+               else tuple(int(k) for k in key))
+        if len(key) != world:
+            raise ValueError(
+                f"key needs one entry per parent rank: got {len(key)} "
+                f"for world {world}")
+        gk = ("color", color, key, group)
+        hit = self._groups.get(gk)
+        if hit is None:
+            hit = {}
+            for c in sorted(set(color)):
+                ranks = sorted((r for r in range(world) if color[r] == c),
+                               key=lambda r: (key[r], r))
+                sub = jax.sharding.Mesh(
+                    np.asarray([devices[r] for r in ranks]).reshape(
+                        1, len(ranks)),
+                    ("node", "local"))
+                tag = group if group is not None else f"color{c}"
+                topo = dataclasses.replace(Topology.from_mesh(sub),
+                                           group=tag)
+                hit[c] = Communicator(sub, topo, selector=self.selector)
+            self._groups[gk] = hit
+        return dict(hit)
 
     # -- plan resolution ----------------------------------------------------
 
@@ -267,8 +385,8 @@ class Communicator:
         size on this communicator's topology (consumers that execute inside
         their own shard_map bodies — MoE dispatch/combine, the fused train
         step — resolve here and run the mcoll algorithm themselves)."""
-        return self.selector.choose(collective, self.topo, int(nbytes),
-                                    dtype=dtype,
+        return self.selector.choose(collective, self._require_topo(),
+                                    int(nbytes), dtype=dtype,
                                     error_budget=float(error_budget))
 
     def _resolve(self, spec: PlanSpec, proto, extra: Dict[str, Any]
@@ -278,8 +396,8 @@ class Communicator:
         if overlap:
             raise ValueError(f"duplicate plan knobs {sorted(overlap)}")
         kw.update(extra)
-        return runtime.resolve_algo(self.topo, spec.collective, spec.algo,
-                                    proto, kw,
+        return runtime.resolve_algo(self._require_topo(), spec.collective,
+                                    spec.algo, proto, kw,
                                     error_budget=spec.error_budget,
                                     selector=self.selector)
 
@@ -294,8 +412,8 @@ class Communicator:
                         error_budget, stacked)
         x = jnp.asarray(x)
         algo_r, kw_r = self._resolve(spec, x, kw)
-        return runtime.run_resolved(self.mesh, self.topo, name, algo_r, x,
-                                    stacked=stacked, **kw_r)
+        return runtime.run_resolved(self.mesh, self._require_topo(), name,
+                                    algo_r, x, stacked=stacked, **kw_r)
 
     def allreduce(self, x, **knobs):
         """Sum-allreduce: in ``(world, m, ...)`` sharded dim0, out the
@@ -332,8 +450,8 @@ class Communicator:
 
     def invoke(self, name: str, x, **knobs):
         """Name-indexed dispatch to the blocking methods (parametrized
-        sweeps, the deprecation shim); new call sites should prefer the
-        per-collective methods."""
+        sweeps); new call sites should prefer the per-collective
+        methods."""
         method = getattr(self, name, None)
         if name not in runtime.collectives() or method is None:
             raise ValueError(f"unknown collective {name!r}; "
@@ -390,7 +508,7 @@ class Communicator:
         """Timed plan sweeps into this communicator's selector table
         (see ``runtime.calibrate``)."""
         kw.setdefault("selector", self.selector)
-        return runtime.calibrate(self.mesh, self.topo, **kw)
+        return runtime.calibrate(self.mesh, self._require_topo(), **kw)
 
     def cache_stats(self) -> "runtime.CacheStats":
         return runtime.cache_stats()
@@ -400,7 +518,7 @@ class Communicator:
 
 
 # ---------------------------------------------------------------------------
-# process-wide memo (the deprecation shim's backend)
+# process-wide memo
 # ---------------------------------------------------------------------------
 
 
@@ -409,9 +527,11 @@ _COMMS: Dict[tuple, Communicator] = {}
 
 def communicator(mesh, topo: Optional[Topology] = None) -> Communicator:
     """The memoized per-(mesh, topo) Communicator: repeated lookups from
-    hot loops (and the ``runtime.collective`` deprecation shim) share one
-    object per context instead of re-deriving it per call."""
-    t = topo if topo is not None else Topology.from_mesh(mesh)
+    hot loops share one object per context instead of re-deriving it per
+    call — and, because :meth:`Communicator.split` memoizes its children,
+    per split spec too. On a mesh without the default node/local axes this
+    returns the unscoped root (``split(axes=...)`` to scope it)."""
+    t = topo if topo is not None else _default_topo(mesh)
     key = (mesh, t)
     hit = _COMMS.get(key)
     if hit is None:

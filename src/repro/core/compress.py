@@ -29,6 +29,11 @@ Codecs (stated elementwise round-trip bound, relative to ``max|slice|``):
   int8_block   ~3.9x      0.5/127       int8 blocks + per-256-block fp32 scale
   fp8_sim      ~4.0x      2^-4          e4m3 cast against a per-slice scale
   topk         ~8.0x      1.0           keep the top 1/16 by magnitude
+  zlib_sim     ~2.0x      0.0 (int)     bit-width packing: per-slice int32
+                                        base + uint16 offsets (lossless for
+                                        integer payloads whose per-slice
+                                        range fits 16 bits — token ids,
+                                        expert indices)
   ===========  =========  ============  =====================================
 
 Encode operates on ``(S, L)`` float32 slice batches (``S`` slices headed for
@@ -77,12 +82,18 @@ class CodecMeta:
                     ``max|decode(encode(x)) - x| <= error_bound * max|x|``
                     per slice. 0.0 means lossless. The selector admits a
                     codec only when ``error_bound <= error_budget``.
+    integer_only:   the codec's domain is integer payloads (its wire form
+                    exploits integer structure and its lossless claim holds
+                    only there). Integer-only codecs are never admitted for
+                    float payloads or reducing collectives — see
+                    :func:`admissible`.
     """
 
     name: str
     wire_ratio: float
     flops_per_elem: float
     error_bound: float
+    integer_only: bool = False
 
     @property
     def lossless(self) -> bool:
@@ -283,6 +294,48 @@ class NoneCodec(Codec):
 
 
 # ---------------------------------------------------------------------------
+# lossless integer bit-width packing (zlib_sim)
+# ---------------------------------------------------------------------------
+
+
+class ZlibSimCodec(Codec):
+    """Lossless bit-width packing for small-range integer payloads.
+
+    What a byte-stream compressor (zlib) exploits in token/index traffic is
+    mostly the narrow value range; this codec captures that win in a fixed
+    wire shape JAX can trace: per slice, one int32 ``base`` (the slice min)
+    plus 16-bit offsets ``lo = v - base``. Wire: 2 bytes/elem + 4 bytes per
+    slice, ~2x vs the 4-byte integer payload.
+
+    Domain contract (why ``integer_only``): the round trip is exact iff
+    every slice's value range fits 16 bits (``max - min < 2**16``) — true
+    for vocabulary token ids, expert/router indices, and lengths, which are
+    exactly the payloads otherwise forced to ``codec="none"``. Shapes are
+    static under jit, so the 16-bit width is a declared contract, not a
+    measured one; out-of-range offsets wrap (detectably garbage, not
+    silently close). Float payloads and reducing collectives (the wire form
+    cannot be summed) are excluded by :func:`admissible`.
+
+    Unlike the float codecs, encode keeps integer dtypes as-is (no f32
+    cast) and decode returns int32 — the compressed execution casts back to
+    the caller's integer dtype, so values above 2**24 survive the trip.
+    """
+
+    meta = CodecMeta("zlib_sim", wire_ratio=2.0 * (1.0 - 1e-3),
+                     flops_per_elem=2.0, error_bound=0.0, integer_only=True)
+
+    def encode(self, x2d):
+        v = jnp.asarray(x2d).astype(jnp.int32)
+        base = jnp.min(v, axis=1)
+        lo = (v - base[:, None]).astype(jnp.uint16)
+        return {"lo": lo, "base": base}
+
+    def decode(self, comp, length: int):
+        lo, base = comp["lo"], comp["base"]
+        return (base[:, None] + lo.astype(jnp.int32))[:, :length]
+
+
+# ---------------------------------------------------------------------------
 # registry
 # ---------------------------------------------------------------------------
 
@@ -298,6 +351,7 @@ register(NoneCodec())
 register(_INT8)
 register(Fp8SimCodec())
 register(TopKCodec())
+register(ZlibSimCodec())
 
 
 def codecs() -> Tuple[str, ...]:
@@ -323,13 +377,41 @@ def meta(name: str) -> CodecMeta:
     return codec(name).meta
 
 
-def for_budget(error_budget: float) -> Tuple[str, ...]:
-    """Codec names admissible under ``error_budget``: every codec whose
-    stated bound is <= the budget. ``error_budget=0.0`` -> lossless only
-    (the selector can provably never emit a lossy plan)."""
-    b = float(error_budget)
+#: collectives that sum payloads in wire form mid-flight — integer-only
+#: codecs can't ride them (their wire form is not additive)
+REDUCING = frozenset({"allreduce", "reduce_scatter"})
+
+
+def admissible(name: str, collective, error_budget: float,
+               integer_payload: bool = False) -> bool:
+    """Whether one codec may carry one payload under one error budget.
+
+    Three gates compose the domain check:
+      * the codec's stated bound must fit the budget;
+      * an ``integer_only`` codec needs an integer payload and a
+        non-reducing collective (``collective=None`` skips that last
+        check for callers without a collective in hand);
+      * a lossy codec never touches an integer payload (token ids and
+        indices must survive bit-exact).
+    """
+    m = meta(name)
+    if m.error_bound > float(error_budget):
+        return False
+    if m.integer_only:
+        return bool(integer_payload) and (collective is None
+                                          or collective not in REDUCING)
+    return m.lossless or not integer_payload
+
+
+def for_budget(error_budget: float, collective=None,
+               integer_payload: bool = False) -> Tuple[str, ...]:
+    """Codec names admissible under ``error_budget`` (see
+    :func:`admissible` for the domain gates). ``error_budget=0.0`` with a
+    float payload -> lossless non-integer codecs only (the selector can
+    provably never emit a lossy plan); an integer payload additionally
+    admits the integer-only lossless codecs on non-reducing collectives."""
     return tuple(n for n in codecs()
-                 if _REGISTRY[n].meta.error_bound <= b)
+                 if admissible(n, collective, error_budget, integer_payload))
 
 
 def collective_tolerance(name: str, collective: str, world: int,
@@ -340,6 +422,8 @@ def collective_tolerance(name: str, collective: str, world: int,
     compressed execution (``core.mcoll``) accumulates it:
 
       * allgather / alltoall: one encode/decode round trip -> ``eps * A``;
+      * broadcast / scatter: the root encodes once and the tree forwards
+        the wire form verbatim -> one round trip, ``eps * A``;
       * reduce_scatter: one encode per sender, errors sum over the
         ``world`` contributions -> ``eps * world * A``;
       * allreduce: sender residuals sum over ``world`` contributions
@@ -352,6 +436,7 @@ def collective_tolerance(name: str, collective: str, world: int,
     if eps == 0.0:
         return 0.0
     factor = {"allgather": 1.0, "alltoall": 1.0,
+              "broadcast": 1.0, "scatter": 1.0,
               "reduce_scatter": float(world),
               "allreduce": 2.0 * float(world)}.get(collective)
     if factor is None:

@@ -23,8 +23,8 @@ All algorithm functions in this module run INSIDE a shard_map over a mesh
 that contains ``topo.node_axis`` and ``topo.local_axis``. Construction of
 the shard_map'd callables lives in ``repro.core.runtime`` — use the
 Communicator API (``repro.core.comm``: ``comm.allreduce(x, ...)``, cached
-and version-portable) as the supported entry point; ``collective_fn``
-below is a thin delegate kept for compatibility.
+and version-portable) as the supported entry point, or ``runtime.build``
+directly.
 
 Algorithms (selectable, ``algo=`` everywhere):
   allgather : pip_mcoll | bruck | recursive_doubling | ring | ring_pipeline
@@ -54,6 +54,10 @@ selection subsystem admits lossy codecs only under the caller's
 ``error_budget``. The compressed allreduce additionally threads
 **error-feedback state** (``err=``) so gradient consumers keep converging;
 it composes with ``chunks`` (compressed segments pipeline independently).
+Compressed broadcast/scatter use the **root-encodes-once** wire form: the
+root encodes, the multi-object tree forwards the codec's wire form
+leafwise, and only receivers decode — completing the codec matrix over
+every collective.
 """
 from __future__ import annotations
 
@@ -76,12 +80,11 @@ def _axes(topo: Topology) -> Tuple[str, ...]:
     so a 1x1 topology still names a valid axis).
 
     Dropping size-1 axes preserves flat (node, local) rank order, and lets a
-    degenerate topology (e.g. 1 x TP inside the MoE body) name a node axis
-    that does not exist in the enclosing mesh.
+    degenerate topology (e.g. a ``1 x TP`` sub-communicator group) name a
+    node axis that does not exist in the enclosing mesh. Delegates to
+    :meth:`Topology.active_axes` (one definition of "active").
     """
-    axes = tuple(ax for ax, n in ((topo.node_axis, topo.n_nodes),
-                                  (topo.local_axis, topo.n_local)) if n > 1)
-    return axes or (topo.local_axis,)
+    return topo.active_axes
 
 
 def mo_rounds(n_nodes: int, radix: int) -> Sequence[int]:
@@ -159,11 +162,28 @@ def _segments(x, chunks: int, mult: int = 1, axis: int = 0):
 # uncompressed two-level algorithms.
 
 
-def _check_codec_payload(x, codec: str) -> None:
-    if jnp.issubdtype(jnp.asarray(x).dtype, jnp.integer):
+def _check_codec_payload(x, codec: str, collective: Optional[str] = None
+                         ) -> None:
+    """Two-way codec/payload domain check (see ``compress.admissible``):
+    lossy codecs never touch integer payloads, and integer-only codecs
+    never touch float payloads or reducing collectives."""
+    cm = _codecs.meta(codec)
+    dtype = jnp.asarray(x).dtype
+    integer = jnp.issubdtype(dtype, jnp.integer)
+    if cm.integer_only:
+        if not integer:
+            raise ValueError(
+                f"integer-only codec {codec!r} on float payload dtype "
+                f"{dtype}: its lossless claim holds only for integer "
+                f"payloads")
+        if collective in _codecs.REDUCING:
+            raise ValueError(
+                f"integer-only codec {codec!r} on reducing collective "
+                f"{collective!r}: its wire form is not additive")
+    elif integer and not cm.lossless:
         raise ValueError(
             f"lossy codec {codec!r} on integer payload dtype "
-            f"{jnp.asarray(x).dtype}: integer collectives must stay "
+            f"{dtype}: integer collectives must stay "
             f"lossless (codec='none')")
 
 
@@ -209,7 +229,7 @@ def _compressed_allreduce(x, topo: Topology, codec: str, err=None):
     the next call's reduction. Returns ``(out, new_err)`` when given.
     """
     cd = _codecs.codec(codec)
-    _check_codec_payload(x, codec)
+    _check_codec_payload(x, codec, "allreduce")
     dtype = x.dtype
     shape = x.shape
     wire, W = _wire_axis(topo)
@@ -269,7 +289,7 @@ def _compressed_reduce_scatter(x, topo: Topology, codec: str):
     peer w, decode + sum reduces over the wire axis, and a lossless intra
     psum_scatter finishes the reduction over the fast axis."""
     cd = _codecs.codec(codec)
-    _check_codec_payload(x, codec)
+    _check_codec_payload(x, codec, "reduce_scatter")
     dtype = x.dtype
     wire, W = _wire_axis(topo)
     if wire is None:
@@ -295,9 +315,13 @@ def _compressed_reduce_scatter(x, topo: Topology, codec: str):
 
 def _compressed_allgather(x, topo: Topology, codec: str):
     """Lossless intra gather into the node block, encoded allgather over
-    the wire axis, decode. Node-major order needs no final shift."""
+    the wire axis, decode. Node-major order needs no final shift.
+
+    The payload reaches ``encode`` in its own dtype (every codec casts
+    internally) — integer-only codecs keep integer payloads off the f32
+    path, so values above 2**24 survive the trip."""
     cd = _codecs.codec(codec)
-    _check_codec_payload(x, codec)
+    _check_codec_payload(x, codec, "allgather")
     dtype = x.dtype
     wire, W = _wire_axis(topo)
     if wire is None:
@@ -305,7 +329,7 @@ def _compressed_allgather(x, topo: Topology, codec: str):
     fast = topo.local_axis if (topo.n_nodes > 1 and topo.n_local > 1) \
         else None
     nodeblk = lax.all_gather(x, fast, axis=0, tiled=True) if fast else x
-    flat = nodeblk.astype(jnp.float32).reshape(1, -1)
+    flat = nodeblk.reshape(1, -1)
     L = flat.shape[1]
     out = cd.decode(_wire_all_gather(cd.encode(flat), wire), L)
     return out.reshape((W * nodeblk.shape[0],)
@@ -317,7 +341,7 @@ def _compressed_alltoall(x, topo: Topology, codec: str):
     regroup (when both axes exist) stays lossless, the per-node payloads
     encode before the node-axis exchange and decode after."""
     cd = _codecs.codec(codec)
-    _check_codec_payload(x, codec)
+    _check_codec_payload(x, codec, "alltoall")
     dtype = x.dtype
     N, Pl = topo.n_nodes, topo.n_local
     s = x.shape[1:]
@@ -328,14 +352,54 @@ def _compressed_alltoall(x, topo: Topology, codec: str):
         if Pl > 1:
             v = lax.all_to_all(v, topo.local_axis, split_axis=1,
                                concat_axis=1, tiled=False)
-        flat = v.astype(jnp.float32).reshape(N, -1)
+        flat = v.reshape(N, -1)
         out = cd.decode(_wire_all_to_all(cd.encode(flat), topo.node_axis),
                         flat.shape[1])
         return out.reshape((N * Pl,) + s).astype(dtype)
-    flat = x.astype(jnp.float32).reshape(Pl, -1)
+    flat = x.reshape(Pl, -1)
     out = cd.decode(_wire_all_to_all(cd.encode(flat), topo.local_axis),
                     flat.shape[1])
     return out.reshape((Pl,) + s).astype(dtype)
+
+
+def _compressed_broadcast(x, topo: Topology, codec: str,
+                          radix: Optional[int], root: int):
+    """Root-encodes-once compressed broadcast: encode the payload into the
+    codec's wire form, run the multi-object broadcast tree **leafwise over
+    the wire form** (non-root copies are zero-masked exactly like the
+    lossless tree, so only the root's encoding propagates), decode at every
+    receiver. One encode + one decode per device, regardless of tree depth
+    — every device's output is bitwise ``decode(encode(x))`` of the root's
+    payload, which conformance asserts as the wire-form invariant."""
+    cd = _codecs.codec(codec)
+    _check_codec_payload(x, codec, "broadcast")
+    dtype = x.dtype
+    shape = x.shape
+    flat = x.reshape(1, -1)
+    L = flat.shape[1]
+    comp = jax.tree.map(lambda a: _broadcast_tree(a, topo, radix, root),
+                        cd.encode(flat))
+    return cd.decode(comp, L).reshape(shape).astype(dtype)
+
+
+def _compressed_scatter(xfull, topo: Topology, codec: str,
+                        radix: Optional[int], root: int):
+    """Root-encodes-once compressed scatter: the root encodes the ``M``
+    per-destination slices into one wire form (leading dim M), the
+    multi-object scatter tree forwards the wire form leafwise — each
+    subtree receives only its destinations' encoded slices — and every
+    device decodes just its own slice. Device d's output is bitwise row d
+    of ``decode(encode(full))``."""
+    cd = _codecs.codec(codec)
+    _check_codec_payload(xfull, codec, "scatter")
+    dtype = xfull.dtype
+    M = topo.world
+    m = xfull.shape[0] // M
+    flat = xfull.reshape(M, -1)
+    L = flat.shape[1]
+    mine = jax.tree.map(lambda a: _scatter_tree(a, topo, radix, root),
+                        cd.encode(flat))
+    return cd.decode(mine, L).reshape((m,) + xfull.shape[1:]).astype(dtype)
 
 
 # ---------------------------------------------------------------------------
@@ -530,7 +594,7 @@ ALLGATHER = {
 
 
 def pip_mcoll_scatter(xfull, topo: Topology, radix: Optional[int] = None,
-                      root: int = 0, chunks: int = 1):
+                      root: int = 0, chunks: int = 1, codec: str = "none"):
     """Multi-object scatter: radix-(P+1) binomial tree over nodes in which an
     active node's P lanes feed P distinct child nodes *in the same round*,
     then a free intra-node slice (PiP shared memory analogue).
@@ -542,6 +606,11 @@ def pip_mcoll_scatter(xfull, topo: Topology, radix: Optional[int] = None,
     ``chunks > 1`` segments every rank's payload and runs an independent
     tree per segment, so a lane sends segment k down the tree while
     receiving segment k+1 (pipelined large-message scatter).
+
+    ``codec != "none"`` switches to the compressed execution: the root
+    encodes its per-destination slices once and the tree forwards the wire
+    form (see :func:`_compressed_scatter`); compressed segments pipeline
+    independently.
     """
     M = topo.world
     if xfull.shape[0] % M:
@@ -549,13 +618,18 @@ def pip_mcoll_scatter(xfull, topo: Topology, radix: Optional[int] = None,
                          f"divisible by world size {M}")
     m = xfull.shape[0] // M
     c = _norm_chunks(chunks, m)
+    if codec != "none":
+        def body(seg):
+            return _compressed_scatter(seg, topo, codec, radix, root)
+    else:
+        def body(seg):
+            return _scatter_tree(seg, topo, radix, root)
     if c > 1:
         blocks = xfull.reshape((M, m) + xfull.shape[1:])
         segs, per = _segments(blocks, c, axis=1)
-        outs = [_scatter_tree(s.reshape((M * per,) + xfull.shape[1:]),
-                              topo, radix, root) for s in segs]
+        outs = [body(s.reshape((M * per,) + xfull.shape[1:])) for s in segs]
         return jnp.concatenate(outs, axis=0)[:m]
-    return _scatter_tree(xfull, topo, radix, root)
+    return body(xfull)
 
 
 def _scatter_tree(xfull, topo: Topology, radix: Optional[int], root: int):
@@ -665,20 +739,31 @@ SCATTER = {
 
 
 def pip_mcoll_broadcast(x, topo: Topology, radix: Optional[int] = None,
-                        root: int = 0, chunks: int = 1):
+                        root: int = 0, chunks: int = 1, codec: str = "none"):
     """Multi-object broadcast: radix-(P+1) tree over nodes (active node's P
     lanes feed P children per round) + free intra share.
 
     ``chunks > 1`` segments the payload along dim0 and runs an independent
     tree per segment (each round's lane sends segment k while receiving
-    segment k+1 — the pipelined large-message variant)."""
+    segment k+1 — the pipelined large-message variant).
+
+    ``codec != "none"`` switches to the compressed execution: the root
+    encodes once and the tree forwards the wire form (see
+    :func:`_compressed_broadcast`); compressed segments pipeline
+    independently."""
     c = _norm_chunks(chunks, x.shape[0] if x.ndim else 1)
+    if codec != "none":
+        def body(seg):
+            return _compressed_broadcast(seg, topo, codec, radix, root)
+    else:
+        def body(seg):
+            return _broadcast_tree(seg, topo, radix, root)
     if c > 1:
         m = x.shape[0]
         segs, _ = _segments(x, c)
-        outs = [_broadcast_tree(s, topo, radix, root) for s in segs]
+        outs = [body(s) for s in segs]
         return jnp.concatenate(outs, axis=0)[:m]
-    return _broadcast_tree(x, topo, radix, root)
+    return body(x)
 
 
 def _broadcast_tree(x, topo: Topology, radix: Optional[int], root: int):
@@ -1026,8 +1111,8 @@ def supports_chunks(collective: str, algo: str) -> bool:
 # error budget; the runtime normalizes codec="none" into cache keys.
 COMPRESSED = {
     "allgather": frozenset({"pip_mcoll"}),
-    "scatter": frozenset(),
-    "broadcast": frozenset(),
+    "scatter": frozenset({"pip_mcoll"}),
+    "broadcast": frozenset({"pip_mcoll"}),
     "allreduce": frozenset({"pip_mcoll", "pip_pipeline"}),
     "reduce_scatter": frozenset({"pip_mcoll"}),
     "alltoall": frozenset({"pip_mcoll", "pip_pipeline"}),
@@ -1046,27 +1131,3 @@ def algorithms(collective: str):
 def algorithm(collective: str, algo: str):
     """The raw per-device algorithm function (runs inside shard_map)."""
     return _REGISTRY[collective][algo]
-
-
-def collective_fn(mesh, topo: Topology, collective: str, algo: str,
-                  stacked: bool = True, jit: bool = True, **kw):
-    """Build a callable computing `collective` with `algo` over `mesh`.
-
-    Compatibility delegate for ``repro.core.runtime.build`` — new code
-    should use ``repro.core.comm.Communicator`` (cached end-to-end) or
-    ``runtime.build`` directly.
-
-    Input/output conventions (global arrays):
-      allgather:      in (M*m, ...) sharded dim0 -> out (M, M*m, ...) stacked
-                      (row d = device d's full copy) or (M*m, ...) replicated.
-      scatter:        in (M*m, ...) replicated   -> out (M*m, ...) sharded
-                      (device d's shard = its scatter result).
-      broadcast:      in (m, ...) replicated     -> out (M, m, ...) stacked.
-      allreduce:      in (M, m, ...) sharded dim0 -> out (M, m, ...) stacked
-                      (row d = reduced vector on device d).
-      reduce_scatter: in (M, M*s, ...) sharded dim0 -> out (M*s, ...) sharded.
-      alltoall:       in (M, M, s...) sharded dim0 -> out (M, M, s...) sharded.
-    """
-    from repro.core import runtime
-    return runtime.build(mesh, topo, collective, algo, stacked=stacked,
-                         jit=jit, **kw)

@@ -31,17 +31,13 @@ This layer owns, for the whole codebase:
 Since the Communicator API landed (``repro.core.comm``), this module is the
 **cache backend**: construction, compilation and plan resolution live here;
 the supported user-facing surface is ``comm.Communicator`` (one method per
-collective, persistent nonblocking ops). The free function
-:func:`collective` survives only as a deprecation shim delegating to a
-memoized per-(mesh, topo) Communicator.
+collective, persistent nonblocking ops, ``comm.split`` sub-communicators).
 
 Public API:
 
   * :func:`run` — execute a collective through the compiled-callable cache
     (the backend entry point ``Communicator`` methods call); ``algo="auto"``
     picks the algorithm per (topology, collective, dtype, size).
-  * :func:`collective` — DEPRECATED free-function shim (one
-    ``DeprecationWarning`` per process, bit-identical results).
   * :func:`build` — get the cached jitted callable for a collective key.
   * :func:`compile_persistent` — AOT-compile one plan for a fixed
     shape/dtype with a pinned input sharding (the ``PersistentOp`` backend;
@@ -57,7 +53,6 @@ from __future__ import annotations
 import dataclasses
 import inspect
 import time as _time
-import warnings
 from collections import OrderedDict
 from functools import lru_cache, partial
 from typing import Any, Callable, Dict, Iterable, List, Optional, Tuple
@@ -302,6 +297,17 @@ def resolve_algo(topo: Topology, collective: str, algo: str, x,
         if _mcoll.supports_codec(collective, algo):
             cdd = str(kw.get("codec", _codecs.NONE))
             _codecs.codec(cdd)  # validate the name at resolution time
+            if cdd != _codecs.NONE and not _codecs.admissible(
+                    cdd, collective,
+                    max(float(budget), _codecs.meta(cdd).error_bound),
+                    jnp.issubdtype(x.dtype, jnp.integer)):
+                # fail at resolution time with the domain reason, not as a
+                # trace-time error deep inside the algorithm body
+                raise ValueError(
+                    f"codec {cdd!r} is not admissible for {collective} on "
+                    f"dtype {x.dtype} (lossy codecs never touch integer "
+                    f"payloads; integer-only codecs need integer payloads "
+                    f"on non-reducing collectives)")
             kw["codec"] = cdd
         elif kw.get("codec", _codecs.NONE) != _codecs.NONE:
             raise ValueError(
@@ -333,6 +339,14 @@ def resolve_algo(topo: Topology, collective: str, algo: str, x,
             # must admit it even when no explicit budget was given
             budget = max(float(budget),
                          _codecs.meta(pinned_codec).error_bound)
+            if not _codecs.admissible(pinned_codec, collective,
+                                      float(budget),
+                                      jnp.issubdtype(x.dtype, jnp.integer)):
+                raise ValueError(
+                    f"codec {pinned_codec!r} is not admissible for "
+                    f"{collective} on dtype {x.dtype} (lossy codecs never "
+                    f"touch integer payloads; integer-only codecs need "
+                    f"integer payloads on non-reducing collectives)")
     sel = (selector if selector is not None
            else autotune.default_selector()).choose(
         collective, topo, nbytes, dtype=str(x.dtype),
@@ -380,7 +394,13 @@ def _construct(mesh, topo: Topology, collective: str, algo: str,
                stacked: bool, jit: bool, donate: bool, **kw) -> Callable:
     wiring = _WIRING[collective]
     fn = partial(_mcoll.algorithm(collective, algo), topo=topo, **kw)
-    ax = topo.axes
+    # shard over ALL mesh axes, not just the topology's: operands stay
+    # global (dim0 spans every device of the mesh) while the algorithm
+    # communicates only over topo's axes — so a sub-communicator group
+    # (topo covering a subset of the mesh) runs independently per group
+    # and out row d is device d's within-group result. For a topology
+    # covering the whole mesh this is the same spec as before.
+    ax = tuple(mesh.axis_names)
     out_mode = wiring.out_mode
     if wiring.stackable and not stacked:
         out_mode = "replicate"
@@ -409,6 +429,23 @@ def build(mesh, topo: Topology, collective: str, algo: str, *,
     trace cache (and explicitly in the exec cache). ``donate=True`` donates
     the operand buffer to the computation (persistent double-buffered ops
     on backends that support aliasing).
+
+    Input/output conventions (global arrays; D = mesh devices, G =
+    ``topo.world`` — equal for a root communicator, G < D for a
+    sub-communicator group, where every device's result is computed within
+    its own group):
+      allgather:      in (D*m, ...) sharded dim0 -> out (D, G*m, ...)
+                      stacked (row d = device d's group copy) or
+                      (G*m, ...) replicated when G == D.
+      scatter:        in (G*m, ...) replicated   -> out (D*m, ...) sharded
+                      (device d's shard = its within-group scatter share).
+      broadcast:      in (m, ...) replicated     -> out (D, m, ...) stacked.
+      allreduce:      in (D, m, ...) sharded dim0 -> out (D, m, ...)
+                      stacked (row d = device d's group-reduced vector).
+      reduce_scatter: in (D, G*s, ...) sharded dim0 -> out (D*s, ...)
+                      sharded.
+      alltoall:       in (D, G, s...) sharded dim0 -> out (D, G, s...)
+                      sharded.
     """
     if collective not in _WIRING:
         raise ValueError(f"unknown collective {collective!r}; "
@@ -485,8 +522,9 @@ def input_sharding(mesh, topo: Topology, collective: str) -> NamedSharding:
     if collective not in _WIRING:
         raise ValueError(f"unknown collective {collective!r}; "
                          f"one of {collectives()}")
-    return NamedSharding(mesh,
-                         _in_spec(_WIRING[collective].in_mode, topo.axes))
+    del topo  # operands are global over the whole mesh (cf. _construct)
+    return NamedSharding(mesh, _in_spec(_WIRING[collective].in_mode,
+                                        tuple(mesh.axis_names)))
 
 
 def compile_persistent(mesh, topo: Topology, name: str, algo: str,
@@ -523,32 +561,6 @@ def compile_persistent(mesh, topo: Topology, name: str, algo: str,
     _EXEC_CACHE[key] = compiled
     _evict(_EXEC_CACHE, "exec")
     return compiled, sharding
-
-
-_SHIM_WARNED = False
-
-
-def collective(mesh, topo: Topology, name: str, algo: str, x, *,
-               stacked: bool = True, error_budget: float = 0.0, **kw):
-    """DEPRECATED free-function entry point.
-
-    Use :class:`repro.core.comm.Communicator` — one method per collective
-    (``comm.allreduce(x, ...)``) plus persistent nonblocking ops
-    (``comm.allreduce_init(...)``). This shim delegates to a memoized
-    per-(mesh, topo) Communicator, so out-of-tree callers keep bit-identical
-    results and shared caches/tuning tables; it warns once per process.
-    """
-    global _SHIM_WARNED
-    if not _SHIM_WARNED:
-        _SHIM_WARNED = True
-        warnings.warn(
-            "runtime.collective(...) is deprecated; use "
-            "repro.core.comm.Communicator (comm.allreduce(x, ...) / "
-            "comm.allreduce_init(...) etc.)",
-            DeprecationWarning, stacklevel=2)
-    from repro.core import comm as _comm
-    return _comm.communicator(mesh, topo).invoke(
-        name, x, algo=algo, stacked=stacked, error_budget=error_budget, **kw)
 
 
 # ---------------------------------------------------------------------------
@@ -616,9 +628,9 @@ def calibrate(mesh, topo: Topology,
     for name in (tuple(names) if names else collectives()):
         for nbytes in sizes:
             x = example_input(name, topo, int(nbytes), dtype)
-            for algo, chunks, codec in autotune.plans(name, topo,
-                                                      int(nbytes),
-                                                      codecs=codecs):
+            for algo, chunks, codec in autotune.plans(
+                    name, topo, int(nbytes), codecs=codecs,
+                    dtype=str(jnp.dtype(dtype))):
                 kw = {}
                 if _mcoll.supports_chunks(name, algo):
                     kw["chunks"] = chunks

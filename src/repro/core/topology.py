@@ -67,6 +67,11 @@ class Topology:
       node_link: link metadata for the inter level — a NetParams preset name
         or a NetParams instance (None = selector default).
       local_link: link metadata for the intra level, same conventions.
+      group: group tag for sub-communicator topologies (empty for the root).
+        Set by :meth:`subset` / ``Communicator.split``; it namespaces the
+        tuning-table and plan-cache keys so an 8-way TP group and a 2-way DP
+        group calibrate and cache independently, while siblings of identical
+        shape (same tag) share entries.
     """
 
     n_nodes: int
@@ -75,6 +80,7 @@ class Topology:
     local_axis: str = "local"
     node_link: Optional[object] = None
     local_link: Optional[object] = None
+    group: str = ""
 
     def __post_init__(self):
         if self.n_nodes < 1 or self.n_local < 1:
@@ -87,6 +93,21 @@ class Topology:
     @property
     def axes(self) -> Tuple[str, str]:
         return (self.node_axis, self.local_axis)
+
+    @property
+    def active_axes(self) -> Tuple[str, ...]:
+        """Mesh axes this topology actually communicates over (size > 1).
+
+        Degenerate size-1 levels carry no traffic; dropping them keeps
+        sharding specs and collective axis tuples minimal. A fully
+        degenerate 1x1 topology still names ``(local_axis,)`` so specs
+        stay well-formed.
+        """
+        sizes = {self.node_axis: self.n_nodes, self.local_axis: self.n_local}
+        # dict-keyed to dedupe: a single-axis topology names the same mesh
+        # axis at both levels (node_axis == local_axis)
+        active = tuple({a: None for a in self.axes if sizes[a] > 1})
+        return active or (self.local_axis,)
 
     @property
     def link_names(self) -> Tuple[str, str]:
@@ -112,6 +133,52 @@ class Topology:
         Matches `jax.lax.axis_index((node_axis, local_axis))` semantics.
         """
         return node * self.n_local + local
+
+    @classmethod
+    def subset(cls, mesh, axes, parent: Optional["Topology"] = None,
+               group: Optional[str] = None) -> "Topology":
+        """Derive a sub-communicator Topology from one or two mesh axes.
+
+        One axis -> a flat ``1 x size`` intra-only topology over that axis
+        (node level degenerate, so algorithms run their local stage only).
+        Two axes -> a full two-level ``(axes[0], axes[1])`` topology.
+        Link classes are inherited from ``parent`` when the axis matches one
+        of the parent's levels, else auto-derived from the mesh devices.
+        ``group`` overrides the group tag (defaults to the joined axis
+        names), which namespaces tuning tables and plan caches per group
+        shape.
+        """
+        if isinstance(axes, str):
+            axes = (axes,)
+        axes = tuple(axes)
+        if not 1 <= len(axes) <= 2:
+            raise ValueError(f"subset takes 1 or 2 mesh axes, got {axes!r}")
+        for a in axes:
+            if a not in mesh.shape:
+                raise ValueError(f"axis {a!r} not in mesh axes "
+                                 f"{tuple(mesh.axis_names)}")
+
+        def link_for(axis, level):
+            if parent is not None:
+                if axis == parent.node_axis and parent.node_link is not None:
+                    return parent.node_link
+                if axis == parent.local_axis and parent.local_link is not None:
+                    return parent.local_link
+            return derive_link(mesh, axis, level)
+
+        tag = group if group is not None else "x".join(axes)
+        if len(axes) == 1:
+            (ax,) = axes
+            return cls(1, mesh.shape[ax], node_axis=ax, local_axis=ax,
+                       node_link=link_for(ax, "intra"),
+                       local_link=link_for(ax, "intra"), group=tag)
+        node_ax, local_ax = axes
+        if node_ax == local_ax:
+            raise ValueError(f"duplicate axis {node_ax!r} in subset axes")
+        return cls(mesh.shape[node_ax], mesh.shape[local_ax],
+                   node_axis=node_ax, local_axis=local_ax,
+                   node_link=link_for(node_ax, "inter"),
+                   local_link=link_for(local_ax, "intra"), group=tag)
 
     @classmethod
     def from_mesh(cls, mesh, node_axis: str = "node", local_axis: str = "local",

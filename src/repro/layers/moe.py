@@ -13,9 +13,10 @@ combine-weight, standard token-dropping semantics), computes with ragged_dot,
 and ships results back.
 
 The dispatch/combine all-to-alls are not hardcoded to one primitive: a full
-(algorithm, chunk count) plan is resolved per message size through a
-``Communicator`` bound to a (1 x TP) topology whose link metadata is
-derived from the mesh (``comm.plan`` — the same selector
+(algorithm, chunk count) plan is resolved per message size through the TP
+**group communicator** — ``communicator(mesh).split(axes=tp)`` — whose
+Topology and link metadata are derived from the mesh and whose tuning rows
+are namespaced by the group tag (``comm.plan`` — the same selector
 ``Communicator(algo="auto")`` methods use, so MoE shares the process-wide
 tuning table). Large dispatch payloads resolve to the segmented
 ``pip_pipeline`` all-to-all, which pipelines the exchange in ``chunks``
@@ -35,7 +36,6 @@ from jax.sharding import PartitionSpec as P
 
 from repro.core import mcoll, runtime
 from repro.core.comm import communicator
-from repro.core.topology import Topology, derive_link
 from repro.layers import common
 from repro.layers.common import Accum
 
@@ -210,18 +210,18 @@ def apply(p, x, cfg, rules=None, mesh=None, error_budget: float = 0.0):
 
     batch_axes = tuple(a for a in (rules.batch or ()) if a in mesh.axis_names)
 
-    # resolve the dispatch/combine algorithm through the (1 x TP)
+    # resolve the dispatch/combine algorithm through the TP group
     # communicator for the actual per-device exchange size
-    # (tp_size x capacity x D); the memoized communicator shares the
-    # process-wide selector, so MoE rides the same tuning table as every
-    # other consumer
+    # (tp_size x capacity x D): split(axes=tp) derives the group Topology
+    # (link classes from the mesh) and namespaces its tuning rows under the
+    # "tp" group tag; the memoized root shares the process-wide selector,
+    # so MoE rides the same table as every other consumer
     bshard = 1
     for a in batch_axes:
         bshard *= mesh.shape[a]
     cap = _ep_capacity(-(-B // bshard) * S, tp_size, cfg.moe)
-    tp_topo = Topology(1, tp_size, local_axis=tp,
-                       local_link=derive_link(mesh, tp, "intra"))
-    comm = communicator(mesh, tp_topo)
+    comm = communicator(mesh).split(axes=tp)
+    tp_topo = comm.topo
     nbytes = tp_size * cap * D * x.dtype.itemsize
     a2a_sel = comm.plan("alltoall", nbytes, dtype=str(x.dtype))
     comb_sel = (comm.plan("alltoall", nbytes, dtype=str(x.dtype),

@@ -11,8 +11,11 @@ Serving loop structure (vLLM-style, reduced):
 
 Token-level sync across DP replicas (multi-host) is a small-message
 collective — the paper's regime. When the engine is given a mesh/topology
-it binds a ``Communicator`` (``repro.core.comm``) and syncs each tick's
-sampled tokens through a **persistent broadcast op**: the tick payload
+it binds a ``Communicator`` (``repro.core.comm``) — and, with
+``sync_axes=...``, scopes the sync to a sub-communicator
+(``comm.split(axes=sync_axes)``, e.g. the DP group of a DPxTP mesh) — and
+syncs each tick's sampled tokens through a **persistent broadcast op**: the
+tick payload
 shape is fixed at ``(max_batch,)``, so the ``(algo, chunks, codec)`` plan
 is resolved and the executable compiled once on the first tick
 (``comm.broadcast_init``), and every later tick is a bare
@@ -50,7 +53,8 @@ class Engine:
     def __init__(self, params, cfg, max_batch: int = 8, max_len: int = 256,
                  flags: RunFlags = RunFlags(), greedy: bool = True,
                  mesh=None, topo: Optional[Topology] = None,
-                 sync_algo: str = "auto", sync_error_budget: float = 0.0):
+                 sync_axes=None, sync_algo: str = "auto",
+                 sync_error_budget: float = 0.0):
         self.params = params
         self.cfg = cfg
         self.max_batch = max_batch
@@ -59,16 +63,24 @@ class Engine:
         # DP replica token sync: algorithm resolved per tick payload by the
         # selection subsystem (sync_algo="auto"), or pinned explicitly.
         # sync_error_budget is the engine's accuracy knob on that plan: it
-        # flows into the selector's codec gating (core.compress). Today's
-        # token sync is an integer broadcast, which has no codec-capable
-        # algorithm, so resolution stays lossless for any budget — but the
-        # knob is part of the engine API so float-payload syncs (logit /
-        # hidden-state replication) inherit the budget semantics.
+        # flows into the selector's codec gating (core.compress); integer
+        # token payloads resolve lossless for any budget (lossy codecs are
+        # inadmissible on integers), but the knob is part of the engine API
+        # so float-payload syncs (logit / hidden-state replication) inherit
+        # the budget semantics.
+        # sync_axes scopes the tick sync to a sub-communicator —
+        # ``comm.split(axes=sync_axes)`` — e.g. sync_axes="node" broadcasts
+        # within each DP replica group while TP shards stay independent.
+        # Calibration for the sync plan then belongs on ``self.sync_comm``
+        # (the group's tuning rows are namespaced by the group tag).
         self.mesh = mesh
         self.topo = (topo if topo is not None else
                      (Topology.from_mesh(mesh) if mesh is not None else None))
         self.comm = (Communicator(mesh, self.topo)
                      if mesh is not None else None)
+        self.sync_comm = (self.comm.split(axes=sync_axes)
+                          if self.comm is not None and sync_axes is not None
+                          else self.comm)
         self.sync_algo = sync_algo
         self.sync_error_budget = float(sync_error_budget)
         # lazily bound on the first real sync (a world-1 engine never pays
@@ -101,15 +113,16 @@ class Engine:
         this). Small-message broadcast — the paper's latency-bound regime —
         through a persistent op: plan + executable fixed on the first tick,
         every later tick a bare start/wait."""
-        if self.mesh is None or self.topo.world == 1:
+        if self.mesh is None or (self.sync_comm.topo is not None
+                                 and self.sync_comm.topo.world == 1):
             return nxt  # nothing to reconcile; skip the per-token dispatch
         arr = jnp.asarray(nxt, jnp.int32)
-        gen = self.comm.selector.table.generation
+        gen = self.sync_comm.selector.table.generation
         if self._sync_op is None or gen != self._sync_gen:
             # (re)resolve the plan: first tick, or the tuning table changed
             # (e.g. a calibration table loaded mid-serving) — re-init is an
             # exec-cache hit when the resolved plan is unchanged
-            self._sync_op = self.comm.broadcast_init(
+            self._sync_op = self.sync_comm.broadcast_init(
                 arr, algo=self.sync_algo,
                 error_budget=self.sync_error_budget)
             self._sync_gen = gen

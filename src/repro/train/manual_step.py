@@ -65,7 +65,7 @@ from jax.sharding import PartitionSpec as P
 
 from repro.core import autotune, costmodel, mcoll, runtime
 from repro.core import compress as codecs
-from repro.core.comm import communicator
+from repro.core.comm import Communicator, communicator
 from repro.core.topology import Topology
 from repro.optim import adamw
 from repro.train.step import TrainConfig, loss_fn
@@ -73,6 +73,25 @@ from repro.train.step import TrainConfig, loss_fn
 #: default gradient bucket size — large enough that the pipelined allreduce
 #: is the modeled winner, small enough to bound the peak fused buffer
 DEFAULT_BUCKET_BYTES = 4 << 20
+
+
+def _comm_topo(mesh, topo) -> Tuple[Communicator, Topology]:
+    """Both step builders accept either a :class:`Topology` or a
+    :class:`Communicator` (e.g. a ``comm.split(axes=...)`` group child) in
+    the ``topo`` slot — the communicator's group then defines the
+    data-parallel domain: the batch is sharded and gradients are mean-
+    reduced over its axes only, and its tuning rows (group-tagged) drive
+    plan selection."""
+    if isinstance(topo, Communicator):
+        comm = topo
+        if comm.mesh is not mesh:
+            raise ValueError("the group communicator's mesh must be the "
+                             "step's mesh")
+        if comm.topo is None:
+            raise ValueError("unscoped root communicator: split(axes=...) "
+                             "to scope the gradient sync to a group")
+        return comm, comm.topo
+    return communicator(mesh, topo), topo
 
 
 def _resolve_plan(topo: Topology, nbytes: int, dtype, algo: str,
@@ -193,15 +212,17 @@ def sync_tree_bucketed(grads, sync_fn, bucket_bytes: int, err_state=None):
     return jax.tree_util.tree_unflatten(treedef, out), new_state
 
 
-def make_manual_train_step(cfg, tcfg: TrainConfig, mesh, topo: Topology,
+def make_manual_train_step(cfg, tcfg: TrainConfig, mesh, topo,
                            algo: str = "auto",
                            error_budget: float = 0.0,
                            bucketed: bool = True,
                            bucket_bytes: int = DEFAULT_BUCKET_BYTES,
                            chunks: Optional[int] = None,
                            codec: Optional[str] = None):
-    """Data-parallel over topo.axes (node=slow/pod axis, local=fast axis).
-    Params replicated; batch sharded over both axes.
+    """Data-parallel over the topology's active axes (node=slow/pod axis,
+    local=fast axis). Params replicated; batch sharded over those axes.
+    ``topo`` may be a :class:`Topology` or a group :class:`Communicator`
+    (``comm.split(axes=...)``) — the group then scopes the sync.
 
     ``algo`` names an allreduce algorithm from core.mcoll, or "auto"
     (default) to let the selection subsystem pick an (algorithm, chunks,
@@ -214,6 +235,7 @@ def make_manual_train_step(cfg, tcfg: TrainConfig, mesh, topo: Topology,
     ``codec`` pin those knobs instead of the selector's plan. Error
     feedback requires the bucketed path (its state is per bucket); the
     unbucketed path compresses statelessly."""
+    _, topo = _comm_topo(mesh, topo)
     sync_mean = _make_sync(topo, algo, chunks)
     grad_sync = _make_grad_sync(topo, algo, chunks, codec, error_budget)
 
@@ -247,10 +269,11 @@ def make_manual_train_step(cfg, tcfg: TrainConfig, mesh, topo: Topology,
                    for k, v in metrics.items()}
         return new_params, new_opt, err_state, metrics
 
-    err_spec = P(topo.axes) if error_budget > 0.0 else P()
+    ax = topo.active_axes
+    err_spec = P(ax) if error_budget > 0.0 else P()
     mapped = runtime.sharded(
         step, mesh,
-        in_specs=(P(), P(), err_spec, P(topo.axes)),
+        in_specs=(P(), P(), err_spec, P(ax)),
         out_specs=(P(), P(), err_spec, P()),
         check=False)
     return jax.jit(mapped, donate_argnums=(0, 1, 2))
@@ -267,6 +290,8 @@ def init_error_state(params, error_budget: float = 0.0,
     steps."""
     if error_budget <= 0.0:
         return ()
+    if isinstance(topo, Communicator):
+        topo = topo.topo
     if topo is None:
         raise ValueError("init_error_state needs the topology when "
                          "error_budget > 0 (error feedback is per-device "
@@ -385,14 +410,14 @@ class _OverlappedStep:
     static from there on).
     """
 
-    def __init__(self, cfg, tcfg: TrainConfig, mesh, topo: Topology,
+    def __init__(self, cfg, tcfg: TrainConfig, mesh, topo,
                  algo: str, error_budget, bucket_bytes: int,
                  chunks: Optional[int], codec: Optional[str],
                  overlap: bool, donate: bool):
         self.cfg, self.tcfg = cfg, tcfg
-        self.mesh, self.topo = mesh, topo
+        self.comm, self.topo = _comm_topo(mesh, topo)
+        self.mesh = mesh
         self.overlap = bool(overlap)
-        self.comm = communicator(mesh, topo)
         self._knobs = (algo, chunks, codec)
         self._budget = error_budget
         self.bucket_bytes = int(bucket_bytes)
@@ -414,7 +439,7 @@ class _OverlappedStep:
         _, metric_avals = jax.eval_shape(
             lambda p, b: loss_fn(p, b, cfg, tcfg, None, None), params, batch)
         mkeys = sorted(k for k, v in metric_avals.items() if not v.shape)
-        world, ax = topo.world, topo.axes
+        world, ax = topo.world, topo.active_axes
 
         def backward(params, batch):
             (loss, metrics), grads = jax.value_and_grad(
@@ -480,7 +505,7 @@ class _OverlappedStep:
         return self._apply_c(params, opt_state, *synced, mvec)
 
 
-def make_overlapped_train_step(cfg, tcfg: TrainConfig, mesh, topo: Topology,
+def make_overlapped_train_step(cfg, tcfg: TrainConfig, mesh, topo,
                                algo: str = "auto", error_budget=0.0,
                                bucket_bytes: int = DEFAULT_BUCKET_BYTES,
                                chunks: Optional[int] = None,
@@ -491,8 +516,9 @@ def make_overlapped_train_step(cfg, tcfg: TrainConfig, mesh, topo: Topology,
     (the Communicator overlap shape; see the module docstring).
 
     Same data-parallel semantics as :func:`make_manual_train_step`
-    (bucketed, algo/chunks/codec knobs, loss+scalar-metric sync lossless)
-    with two differences: ``error_budget`` may be a schedule
+    (bucketed, algo/chunks/codec knobs, loss+scalar-metric sync lossless,
+    ``topo`` may be a Topology or a group Communicator from
+    ``comm.split``) with two differences: ``error_budget`` may be a schedule
     ``callable(step) -> float`` (codec plan re-resolved only at plan
     boundaries), and there is no error-feedback state (stateless
     compression only — feedback threading needs the fused step). The

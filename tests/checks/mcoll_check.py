@@ -13,7 +13,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.topology import Topology
-from repro.core import mcoll
+from repro.core import mcoll, runtime
 
 M = N * P
 mesh = jax.make_mesh((N, P), ("node", "local"))
@@ -32,14 +32,14 @@ def check_allgather():
     for algo in mcoll.algorithms("allgather"):
         if algo == "recursive_doubling" and (M & (M - 1)):
             continue
-        fn = mcoll.collective_fn(mesh, topo, "allgather", algo, stacked=True)
+        fn = runtime.build(mesh, topo, "allgather", algo, stacked=True)
         out = np.array(fn(x))
         assert out.shape == (M, M * m)
         for d in range(M):
             np.testing.assert_array_equal(out[d], np.array(x), err_msg=f"{algo} d={d}")
         checks += 1
     for radix in range(2, P + 2):
-        fn = mcoll.collective_fn(mesh, topo, "allgather", "pip_mcoll",
+        fn = runtime.build(mesh, topo, "allgather", "pip_mcoll",
                                  stacked=True, radix=radix)
         out = np.array(fn(x))
         for d in range(M):
@@ -47,7 +47,7 @@ def check_allgather():
         checks += 1
     # 2-D payloads and other dtypes
     x2 = jnp.arange(M * 2 * 4, dtype=jnp.bfloat16).reshape(M * 2, 4)
-    fn = mcoll.collective_fn(mesh, topo, "allgather", "pip_mcoll", stacked=True)
+    fn = runtime.build(mesh, topo, "allgather", "pip_mcoll", stacked=True)
     out = np.array(fn(x2).astype(jnp.float32))
     for d in range(M):
         np.testing.assert_array_equal(out[d], np.array(x2.astype(jnp.float32)))
@@ -61,12 +61,12 @@ def check_scatter():
     for algo in mcoll.algorithms("scatter"):
         roots = [0, M // 2, M - 1] if algo != "linear" else [0]
         for root in roots:
-            fn = mcoll.collective_fn(mesh, topo, "scatter", algo, root=root)
+            fn = runtime.build(mesh, topo, "scatter", algo, root=root)
             np.testing.assert_array_equal(np.array(fn(x)), np.array(x),
                                           err_msg=f"{algo} root={root}")
             checks += 1
     for radix in range(2, P + 2):
-        fn = mcoll.collective_fn(mesh, topo, "scatter", "pip_mcoll",
+        fn = runtime.build(mesh, topo, "scatter", "pip_mcoll",
                                  radix=radix, root=1)
         np.testing.assert_array_equal(np.array(fn(x)), np.array(x))
         checks += 1
@@ -77,7 +77,7 @@ def check_broadcast():
     y = jnp.arange(5, dtype=jnp.float32) + 7
     for algo in mcoll.algorithms("broadcast"):
         for root in [0, M - 1]:
-            fn = mcoll.collective_fn(mesh, topo, "broadcast", algo, root=root)
+            fn = runtime.build(mesh, topo, "broadcast", algo, root=root)
             out = np.array(fn(y))
             for d in range(M):
                 np.testing.assert_array_equal(out[d], np.array(y))
@@ -89,12 +89,12 @@ def check_allreduce():
     z = (jnp.arange(M * 7, dtype=jnp.float32) % 13).reshape(M, 7)
     expect = np.array(z).sum(0)
     for algo in mcoll.algorithms("allreduce"):
-        fn = mcoll.collective_fn(mesh, topo, "allreduce", algo)
+        fn = runtime.build(mesh, topo, "allreduce", algo)
         out = np.array(fn(z))
         for d in range(M):
             np.testing.assert_allclose(out[d], expect, rtol=1e-6)
         checks += 1
-    fn = mcoll.collective_fn(mesh, topo, "allreduce", "pip_mcoll",
+    fn = runtime.build(mesh, topo, "allreduce", "pip_mcoll",
                              inter="recursive_doubling")
     out = np.array(fn(z))
     for d in range(M):
@@ -108,14 +108,14 @@ def check_reduce_scatter_alltoall():
     w = (jnp.arange(M * M * s, dtype=jnp.float32) % 11).reshape(M, M * s)
     expect = np.array(w).sum(0)
     for algo in mcoll.algorithms("reduce_scatter"):
-        fn = mcoll.collective_fn(mesh, topo, "reduce_scatter", algo)
+        fn = runtime.build(mesh, topo, "reduce_scatter", algo)
         np.testing.assert_allclose(np.array(fn(w)).reshape(-1), expect,
                                    rtol=1e-6)
         checks += 1
     a = jnp.arange(M * M * s, dtype=jnp.float32).reshape(M, M, s)
     expect_t = np.array(a).transpose(1, 0, 2)
     for algo in mcoll.algorithms("alltoall"):
-        fn = mcoll.collective_fn(mesh, topo, "alltoall", algo)
+        fn = runtime.build(mesh, topo, "alltoall", algo)
         np.testing.assert_array_equal(np.array(fn(a)), expect_t)
         checks += 1
 
@@ -130,25 +130,25 @@ def check_chunked():
     z = (jnp.arange(M * m, dtype=jnp.float32) % 13).reshape(M, m)
     a = jnp.arange(M * M * m, dtype=jnp.float32).reshape(M, M, m)
     for c in (2, 3):
-        fn = mcoll.collective_fn(mesh, topo, "allgather", "ring_pipeline",
+        fn = runtime.build(mesh, topo, "allgather", "ring_pipeline",
                                  stacked=True, chunks=c)
         out = np.array(fn(x))
         for d in range(M):
             np.testing.assert_array_equal(out[d], np.array(x))
-        fn = mcoll.collective_fn(mesh, topo, "scatter", "pip_mcoll",
+        fn = runtime.build(mesh, topo, "scatter", "pip_mcoll",
                                  root=M - 1, chunks=c)
         np.testing.assert_array_equal(np.array(fn(x)), np.array(x))
-        fn = mcoll.collective_fn(mesh, topo, "broadcast", "pip_mcoll",
+        fn = runtime.build(mesh, topo, "broadcast", "pip_mcoll",
                                  root=1, chunks=c)
         out = np.array(fn(y))
         for d in range(M):
             np.testing.assert_array_equal(out[d], np.array(y))
-        fn = mcoll.collective_fn(mesh, topo, "allreduce", "pip_pipeline",
+        fn = runtime.build(mesh, topo, "allreduce", "pip_pipeline",
                                  chunks=c)
         out = np.array(fn(z))
         for d in range(M):
             np.testing.assert_allclose(out[d], np.array(z).sum(0), rtol=1e-6)
-        fn = mcoll.collective_fn(mesh, topo, "alltoall", "pip_pipeline",
+        fn = runtime.build(mesh, topo, "alltoall", "pip_pipeline",
                                  chunks=c)
         np.testing.assert_array_equal(np.array(fn(a)),
                                       np.array(a).transpose(1, 0, 2))

@@ -58,6 +58,27 @@ assert got2.out_tokens == want.out_tokens, got2.out_tokens
 assert eng._sync_op is not op_before, "sync op never re-resolved"
 assert runtime.selection_stats().measured > 0, "measured plan never used"
 
+# group-scoped sync: the tick broadcast runs on the DP ("node") group
+# child (comm.split(axes="node")) — TP shards stay independent — and
+# still reproduces the reference tokens; calibration for the group plan
+# lands on the child's namespaced tuning rows
+geng = Engine(params, cfg, max_batch=1, max_len=32, mesh=mesh,
+              sync_axes="node")
+assert geng.sync_comm is not geng.comm
+assert geng.sync_comm.topo.group == "node"
+assert geng.sync_comm.topo.world == N
+assert geng.sync_comm.selector is geng.comm.selector
+got3 = geng.run([Request(prompt=prompt.copy(), max_new_tokens=4)])[0]
+assert got3.out_tokens == want.out_tokens, got3.out_tokens
+if N > 1:
+    assert geng._sync_op is not None and geng._sync_op.starts >= 3
+    gop = geng._sync_op
+    geng.sync_comm.calibrate(names=("broadcast",), sizes=(4,), iters=1,
+                             dtype=jnp.int32)
+    got4 = geng.run([Request(prompt=prompt.copy(), max_new_tokens=4)])[0]
+    assert got4.out_tokens == want.out_tokens, got4.out_tokens
+    assert geng._sync_op is not gop, "group sync op never re-resolved"
+
 print(f"serve_sync_check N={N} P={P}: OK tokens={got.out_tokens} "
       f"sync_starts={op_before.starts} exec_misses={s.exec_misses} "
-      f"recal_plan={eng._sync_op.plan}")
+      f"recal_plan={eng._sync_op.plan} group={geng.sync_comm.topo.group}")

@@ -235,10 +235,25 @@ def test_integer_dtypes_force_lossless_resolution():
 
 def test_codec_candidates_only_for_capable_algorithms():
     assert autotune.codec_candidates("allreduce", "xla", 1.0) == ("none",)
-    assert autotune.codec_candidates("broadcast", "pip_mcoll", 1.0) == \
-        ("none",)
+    assert autotune.codec_candidates("broadcast", "xla", 1.0) == ("none",)
+    bcast = autotune.codec_candidates("broadcast", "pip_mcoll", 1.0)
+    assert bcast[0] == "none" and set(compress.lossy()) <= set(bcast)
     cands = autotune.codec_candidates("allreduce", "pip_mcoll", 1.0)
     assert cands[0] == "none" and set(compress.lossy()) <= set(cands)
+
+
+def test_codec_candidates_integer_payloads():
+    """Lossy codecs never appear for integer payloads; the lossless packer
+    does — but only on non-reducing collectives."""
+    bcast = autotune.codec_candidates("broadcast", "pip_mcoll", 1.0,
+                                      dtype="int32")
+    assert "zlib_sim" in bcast
+    assert not set(compress.lossy()) & set(bcast)
+    ar = autotune.codec_candidates("allreduce", "pip_mcoll", 1.0,
+                                   dtype="int32")
+    assert ar == ("none",)
+    f32 = autotune.codec_candidates("broadcast", "pip_mcoll", 0.0)
+    assert "zlib_sim" not in f32  # integer-only packer stays off floats
 
 
 def test_plan_cost_prices_codec_wire_and_flops():

@@ -1,7 +1,8 @@
 """Communicator API: blocking methods, persistent nonblocking ops, the
 plan-spec normalization point, the memoized per-(mesh, topo) communicator,
-the runtime.collective deprecation shim, and the repo-wide grep enforcing
-that no call site outside the shim invokes the free function.
+comm.split() sub-communicators, and the repo-wide grep enforcing that the
+retired free-function shims (runtime.collective, mcoll.collective_fn) stay
+gone.
 
 Runs on 1-device meshes (degenerate topology) — multi-device behavior is
 covered by tests/test_conformance.py and the subprocess checks.
@@ -121,7 +122,7 @@ def test_instance_selector_drives_auto_resolution():
 
 
 # ---------------------------------------------------------------------------
-# the memoized communicator + the deprecation shim
+# the memoized communicator
 # ---------------------------------------------------------------------------
 
 
@@ -134,38 +135,147 @@ def test_communicator_memoized_per_mesh_topo():
     assert comm_mod.communicator(mesh2, topo2) is not c1
 
 
-def test_shim_warns_once_and_is_bit_identical():
-    """runtime.collective survives as a deprecation shim: exactly one
-    DeprecationWarning per process, results bit-identical to the method,
-    cache entries shared."""
-    mesh, topo = _mesh_topo()
-    comm = comm_mod.communicator(mesh, topo)
-    z = jnp.ones((1, 32), jnp.float32)
-    want = np.asarray(comm.allreduce(z, algo="pip_mcoll"))
-    runtime._SHIM_WARNED = False
-    with warnings.catch_warnings(record=True) as w:
-        warnings.simplefilter("always")
-        got1 = runtime.collective(mesh, topo, "allreduce", "pip_mcoll", z)
-        got2 = runtime.collective(mesh, topo, "allreduce", "pip_mcoll", z)
-    assert [x for x in w if x.category is DeprecationWarning], \
-        "shim must warn"
-    assert len([x for x in w if x.category is DeprecationWarning]) == 1, \
-        "shim must warn exactly once"
-    np.testing.assert_array_equal(np.asarray(got1), want)
-    np.testing.assert_array_equal(np.asarray(got2), want)
+# ---------------------------------------------------------------------------
+# comm.split(): sub-communicator edge cases (1-device; multi-device group
+# semantics live in tests/test_conformance.py)
+# ---------------------------------------------------------------------------
 
 
-def test_shim_shares_cache_entries_with_methods():
-    mesh, topo = _mesh_topo()
-    comm = comm_mod.communicator(mesh, topo)
+def test_split_memoized_and_shares_selector():
+    """Repeated splits of one spec return the SAME child (so persistent
+    ops and plan caches are shared), and children share the parent's
+    selector so calibration merges into one table."""
+    mesh, _ = _mesh_topo()
+    root = Communicator(mesh)
+    g1 = root.split(axes="local")
+    g2 = root.split(axes="local")
+    assert g1 is g2
+    assert g1.selector is root.selector
+    assert g1.topo.group == "local" and g1.topo.world == 1
+    assert root.split(axes="node") is not g1
+
+
+def test_split_world1_and_size1_axes_run_collectives():
+    """Degenerate groups (size-1 axis -> world-1 child) still run every
+    collective: the identity semantics, not an error."""
+    mesh, _ = _mesh_topo()
+    root = Communicator(mesh)
+    g = root.split(axes="local")
+    z = jnp.ones((1, 16), jnp.float32)
+    np.testing.assert_array_equal(np.asarray(g.allreduce(z)),
+                                  np.asarray(z))
+    for name in runtime.collectives():
+        x = runtime.example_input(name, g.topo, 64)
+        out = g.invoke(name, x)
+        assert np.isfinite(np.asarray(out, np.float64)).all()
+
+
+def test_single_axis_group_topology_dedupes_axes():
+    """A single-axis group names the same mesh axis at both topology
+    levels; ``active_axes`` must still name it once — a repeated axis in
+    the collective tuple is a trace-time ppermute error on real meshes."""
+    topo = Topology(1, 4, node_axis="tp", local_axis="tp")
+    assert topo.active_axes == ("tp",)
+    assert Topology(1, 1, node_axis="tp", local_axis="tp").active_axes \
+        == ("tp",)
+
+
+def test_split_of_split_composes():
+    mesh, _ = _mesh_topo()
+    root = Communicator(mesh)
+    gg = root.split(axes=("node", "local")).split(axes="local")
+    assert gg.topo.world == 1 and gg.topo.group == "local"
+    z = jnp.ones((1, 8), jnp.float32)
+    np.testing.assert_array_equal(np.asarray(gg.allreduce(z)),
+                                  np.asarray(z))
+
+
+def test_split_exec_cache_shared_between_identical_children():
+    """Two identically-specced splits (memo hit) reuse one exec-cache
+    entry — the group topology is the cache key, not the child object."""
+    mesh, _ = _mesh_topo()
+    root = Communicator(mesh)
     runtime.clear_cache()
-    z = jnp.ones((1, 48), jnp.float32)
-    comm.allreduce(z, algo="pip_mcoll")
-    with warnings.catch_warnings():
-        warnings.simplefilter("ignore")
-        runtime.collective(mesh, topo, "allreduce", "pip_mcoll", z)
+    z = jnp.ones((1, 32), jnp.float32)
+    root.split(axes="local").allreduce(z, algo="pip_mcoll")
+    root.split(axes="local").allreduce(z, algo="pip_mcoll")
     s = runtime.cache_stats()
     assert s.exec_misses == 1 and s.exec_hits == 1, s
+
+
+def test_split_group_namespaces_tuning_keys():
+    """A child's tuning rows carry the group tag: the same NxP shape tuned
+    as a group never aliases the ungrouped table rows (an 8-way TP group
+    and an 8-way flat world calibrate independently)."""
+    from repro.core import autotune
+    mesh, topo = _mesh_topo()
+    root = Communicator(mesh, topo)
+    g = root.split(axes="local")
+    assert autotune.topo_key(g.topo) != autotune.topo_key(topo)
+    assert autotune.topo_key(g.topo).endswith("/g:local")
+    root.selector.table.record(g.topo, "allreduce", "float32", 1 << 10,
+                               "xla", 1e-9)
+    assert root.selector.table.lookup(topo, "allreduce", "float32",
+                                      1 << 10) is None
+    sel = g.plan("allreduce", 1 << 10)
+    assert sel.algo == "xla"
+
+
+def test_split_calibration_table_roundtrip_with_group_keys(tmp_path):
+    """Group-keyed rows survive a save/load cycle and keep resolving."""
+    from repro.core import autotune
+    mesh, _ = _mesh_topo()
+    root = Communicator(mesh)
+    g = root.split(axes="local")
+    root.selector.table.record(g.topo, "allreduce", "float32", 1 << 10,
+                               "xla", 1e-9)
+    path = tmp_path / "table.json"
+    root.selector.table.save(path)
+    loaded = autotune.TuningTable.load(path)
+    hit = loaded.lookup(g.topo, "allreduce", "float32", 1 << 10)
+    assert hit == {"xla": 1e-9}
+
+
+def test_split_validation():
+    mesh, _ = _mesh_topo()
+    root = Communicator(mesh)
+    with pytest.raises(ValueError, match="exactly one of"):
+        root.split()
+    with pytest.raises(ValueError, match="exactly one of"):
+        root.split(axes="local", color=[0])
+    with pytest.raises(ValueError, match="key= only"):
+        root.split(axes="local", key=[0])
+    with pytest.raises(ValueError, match="not in mesh axes"):
+        root.split(axes="tp")
+    with pytest.raises(ValueError, match="one entry per parent rank"):
+        root.split(color=[0, 1])
+
+
+def test_split_color_groups():
+    mesh, _ = _mesh_topo()
+    root = Communicator(mesh)
+    groups = root.split(color=[7])
+    assert set(groups) == {7}
+    g = groups[7]
+    assert g.topo.world == 1 and g.topo.group == "color7"
+    z = jnp.ones((1, 8), jnp.float32)
+    np.testing.assert_array_equal(np.asarray(g.allreduce(z)), np.asarray(z))
+
+
+def test_unscoped_root_requires_split():
+    """A mesh without the node/local axes yields an unscoped root:
+    split(axes=...) works, collectives raise with a pointer to it."""
+    mesh = jax.make_mesh((1,), ("tp",))
+    root = Communicator(mesh)
+    assert root.topo is None
+    with pytest.raises(ValueError, match=r"split\(axes=\.\.\.\)"):
+        root.allreduce(jnp.ones((1, 8), jnp.float32))
+    with pytest.raises(ValueError, match=r"split\(axes=\.\.\.\)"):
+        root.plan("allreduce", 1 << 10)
+    g = root.split(axes="tp")
+    assert g.topo is not None and g.topo.world == 1
+    z = jnp.ones((1, 8), jnp.float32)
+    np.testing.assert_array_equal(np.asarray(g.allreduce(z)), np.asarray(z))
 
 
 # ---------------------------------------------------------------------------
@@ -235,21 +345,20 @@ def test_persistent_donate_is_a_distinct_program():
 
 
 # ---------------------------------------------------------------------------
-# regression grep: the shim is the ONLY runtime.collective call site
+# regression grep: the retired free-function shims stay retired
 # ---------------------------------------------------------------------------
 
 
-def test_no_runtime_collective_call_sites_outside_shim():
-    """Like the PR-1 shard_map grep: after the Communicator migration, no
-    code anywhere in the repo invokes the deprecated free function —
-    except its definition (core/runtime.py) and this file's shim tests."""
+def test_retired_shims_have_no_call_sites():
+    """Like the PR-1 shard_map grep: runtime.collective and
+    mcoll.collective_fn were deleted after the Communicator migration —
+    no code anywhere in the repo may reference them again (new call sites
+    go through repro.core.comm.Communicator or runtime.build)."""
     pattern = re.compile(
         r"runtime\.collective\s*\(|"
-        r"from\s+repro\.core\.runtime\s+import\s+.*\bcollective\b")
-    allowed = {
-        REPO / "src" / "repro" / "core" / "runtime.py",
-        pathlib.Path(__file__).resolve(),
-    }
+        r"from\s+repro\.core\.runtime\s+import\s+.*\bcollective\b|"
+        r"\bcollective_fn\b")
+    allowed = {pathlib.Path(__file__).resolve()}
     offenders = []
     for sub in ("src", "tests", "benchmarks", "examples"):
         for path in sorted((REPO / sub).rglob("*.py")):
@@ -260,9 +369,11 @@ def test_no_runtime_collective_call_sites_outside_shim():
                     offenders.append(
                         f"{path.relative_to(REPO)}:{i}: {line.strip()}")
     assert not offenders, (
-        "runtime.collective call sites outside the deprecation shim "
-        "(migrate to repro.core.comm.Communicator):\n"
+        "references to retired shims (runtime.collective / "
+        "mcoll.collective_fn); use Communicator methods or runtime.build:\n"
         + "\n".join(offenders))
+    assert not hasattr(runtime, "collective")
+    assert not hasattr(mcoll, "collective_fn")
 
 
 # ---------------------------------------------------------------------------

@@ -20,8 +20,9 @@ LOSSY = compress.lossy()
 def test_registry_names_and_order():
     names = compress.codecs()
     assert names[0] == "none"
-    assert {"int8_block", "fp8_sim", "topk"} <= set(names)
-    assert set(LOSSY) == set(names) - {"none"}
+    assert {"int8_block", "fp8_sim", "topk", "zlib_sim"} <= set(names)
+    # zlib_sim is the lossless integer packer — not in the lossy set
+    assert set(LOSSY) == set(names) - {"none", "zlib_sim"}
 
 
 def test_meta_sanity():
@@ -49,7 +50,16 @@ def test_for_budget_gating():
     assert set(compress.for_budget(b_int8)) == {"none", "int8_block"}
     assert set(compress.for_budget(0.07)) == {"none", "int8_block",
                                               "fp8_sim"}
-    assert set(compress.for_budget(1.0)) == set(compress.codecs())
+    # float payloads never see the integer-only packer
+    assert set(compress.for_budget(1.0)) == \
+        set(compress.codecs()) - {"zlib_sim"}
+    # integer payloads: lossless packer admissible on non-reducing
+    # collectives even at budget 0; lossy codecs never admissible
+    assert set(compress.for_budget(0.0, "broadcast",
+                                   integer_payload=True)) == \
+        {"none", "zlib_sim"}
+    assert set(compress.for_budget(1.0, "allreduce",
+                                   integer_payload=True)) == {"none"}
 
 
 # ---------------------------------------------------------------------------
@@ -100,6 +110,36 @@ def test_none_codec_identity():
     cd = compress.codec("none")
     np.testing.assert_array_equal(
         np.asarray(cd.decode(cd.encode(x), 6)), np.asarray(x))
+
+
+def test_zlib_sim_lossless_roundtrip_small_range_integers():
+    """Bit-width packing is exactly lossless while each slice's value
+    range stays under 2^16 (the documented domain: token ids, expert
+    indices) — including negative bases and non-zero minima."""
+    m = compress.meta("zlib_sim")
+    assert m.lossless and m.error_bound == 0.0 and m.integer_only
+    assert m.wire_ratio > 1.9
+    cd = compress.codec("zlib_sim")
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.integers(-40_000, -40_000 + 65_535, (3, 777)),
+                    jnp.int32)
+    back = cd.decode(cd.encode(x), 777)
+    assert back.dtype == jnp.int32
+    np.testing.assert_array_equal(np.asarray(back), np.asarray(x))
+    # large magnitudes survive as long as the per-slice RANGE is small
+    big = jnp.asarray(rng.integers(2 ** 28, 2 ** 28 + 1000, (2, 64)),
+                      jnp.int32)
+    np.testing.assert_array_equal(
+        np.asarray(cd.decode(cd.encode(big), 64)), np.asarray(big))
+
+
+def test_zlib_sim_wire_is_uint16_offsets():
+    cd = compress.codec("zlib_sim")
+    comp = cd.encode(jnp.asarray([[5, 7, 5, 70000]], jnp.int32))
+    assert comp["lo"].dtype == jnp.uint16
+    assert comp["base"].dtype == jnp.int32
+    # wire_bytes ~ 2 bytes/elem + the per-slice base
+    assert cd.wire_bytes(comp) == 4 * 2 + 4
 
 
 @pytest.mark.parametrize("name", LOSSY)
@@ -196,8 +236,13 @@ def test_collective_tolerance_shapes_and_monotonicity():
     t2 = compress.collective_tolerance("int8_block", "reduce_scatter", 8, 1.0)
     t3 = compress.collective_tolerance("int8_block", "allreduce", 8, 1.0)
     assert 0 < t1 < t2 < t3
+    # root-encodes-once: broadcast/scatter pay exactly one round trip
+    assert compress.collective_tolerance("int8_block", "broadcast",
+                                         8, 1.0) == t1
+    assert compress.collective_tolerance("int8_block", "scatter",
+                                         8, 1.0) == t1
     with pytest.raises(ValueError, match="no compressed execution"):
-        compress.collective_tolerance("int8_block", "broadcast", 8, 1.0)
+        compress.collective_tolerance("int8_block", "gossip", 8, 1.0)
 
 
 def test_optim_reexports_core_codec_math():

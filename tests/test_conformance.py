@@ -11,7 +11,9 @@ same suite under a device-count matrix
 (``XLA_FLAGS=--xla_force_host_platform_device_count={1,2,8}``) so the
 multi-device routing is conformance-tested per count. The exhaustive
 dtype/shape/chunk sweeps are marked ``slow`` so the matrix can split fast
-and slow legs.
+and slow legs; the ``comm.split()`` group leg (every collective x
+algorithm over the mesh split each way, bitwise against the reference
+restricted to the group) selects with ``-k group``.
 
 Property sweeps use ``_hypothesis_compat``: full property search with
 hypothesis installed, a fixed deterministic replay without it.
@@ -310,6 +312,229 @@ def test_compressed_rejects_integer_payloads():
 def test_conformance_compressed_shape_sweep(coll, algo, cd, m):
     """Odd / non-block-divisible payloads through every codec pair."""
     _assert_conforms_compressed(coll, algo, cd, m)
+
+
+# ---------------------------------------------------------------------------
+# root-encodes-once wire form (broadcast/scatter) + the lossless integer
+# packer: compressed one-to-all moves the ROOT's encoded form verbatim, so
+# even a lossy codec's output is bitwise decode(encode(x)) on every rank —
+# re-encoding at each tree hop would compound the error and break this.
+# The reference round trip runs under jit like the collective does (XLA's
+# fused scale arithmetic differs from eager by an ulp on some blocks).
+# ---------------------------------------------------------------------------
+
+
+def _jit_roundtrip(cd, flat):
+    cdo = compress.codec(cd)
+    L = flat.shape[1]
+    return np.asarray(jax.jit(lambda v: cdo.decode(cdo.encode(v), L))(flat))
+
+
+@pytest.mark.parametrize("cd", sorted(compress.lossy()))
+def test_broadcast_root_encodes_once_wire_form(cd):
+    m = 2 * compress.BLOCK + 7
+    x = jax.random.normal(jax.random.PRNGKey(0), (m,), jnp.float32)
+    got = np.asarray(COMM.broadcast(x, algo="pip_mcoll", codec=cd))
+    want = _jit_roundtrip(cd, x.reshape(1, -1)).reshape(m)
+    for d in range(M):
+        np.testing.assert_array_equal(
+            got[d], want, err_msg=f"broadcast@{cd} rank {d} re-encoded")
+
+
+@pytest.mark.parametrize("cd", sorted(compress.lossy()))
+def test_scatter_root_encodes_once_wire_form(cd):
+    m = compress.BLOCK + 3
+    x = jax.random.normal(jax.random.PRNGKey(1), (M * m,), jnp.float32)
+    got = np.asarray(COMM.scatter(x, algo="pip_mcoll", codec=cd))
+    flat = x.reshape(M, -1)  # one wire row per destination rank
+    want = _jit_roundtrip(cd, flat)
+    np.testing.assert_array_equal(
+        got.reshape(M, m), want, err_msg=f"scatter@{cd} re-encoded")
+
+
+@pytest.mark.parametrize("coll", sorted({c for c, _ in CODEC_PAIRS}
+                                        - {"allreduce", "reduce_scatter"}))
+def test_zlib_sim_bitwise_on_integer_payloads(coll):
+    """The lossless integer packer is bitwise-exact end to end on every
+    non-reducing collective (its admissible domain)."""
+    x = _operand(coll, 40, "int32")
+    got = COMM.invoke(coll, x, algo="pip_mcoll", codec="zlib_sim")
+    ref = COMM.invoke(coll, x, algo=REF[coll])
+    assert got.dtype == jnp.int32
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(ref))
+
+
+def test_zlib_sim_preserves_large_int32_values():
+    """Values above 2^24 (unrepresentable in f32) survive: integer-only
+    codecs never touch the f32 pre-cast path, and only the per-slice RANGE
+    must fit 16 bits."""
+    base = 1 << 28
+    x = ((jnp.arange(M * 5) % 97) + base).astype(jnp.int32)
+    got = np.asarray(COMM.allgather(x, algo="pip_mcoll", codec="zlib_sim"))
+    want = np.stack([np.asarray(x)] * M)
+    np.testing.assert_array_equal(got, want)
+
+
+def test_zlib_sim_rejected_on_reducing_and_float():
+    x = _operand("allreduce", 5, "int32")
+    with pytest.raises(ValueError, match="not additive|not admissible"):
+        _run("allreduce", "pip_mcoll", x, codec="zlib_sim")
+    xf = _operand("broadcast", 5, "float32")
+    with pytest.raises(ValueError, match="float payload|not admissible"):
+        _run("broadcast", "pip_mcoll", xf, codec="zlib_sim")
+
+
+def test_auto_integer_broadcast_can_pick_zlib_sim():
+    """Selection layer: for an integer broadcast, zlib_sim is an
+    admissible candidate at budget 0 — and an explicit measured entry
+    naming it wins resolution."""
+    sel = autotune.Selector()
+    c = Communicator(mesh, topo, selector=sel)
+    sel.table.record(topo, "broadcast", "int32", 4 * 40,
+                     autotune.encode_plan("pip_mcoll", 1, "zlib_sim"), 1e-12)
+    s = sel.choose("broadcast", topo, 4 * 40, dtype="int32")
+    assert (s.algo, s.codec) == ("pip_mcoll", "zlib_sim")
+    x = _operand("broadcast", 40, "int32")
+    np.testing.assert_array_equal(np.asarray(c.broadcast(x)),
+                                  np.asarray(_run("broadcast",
+                                                  REF["broadcast"], x)))
+
+
+# ---------------------------------------------------------------------------
+# group leg: comm.split() sub-communicators — every collective x algorithm
+# over the mesh split along each axis (and both), asserting bitwise
+# equality against the reference algorithm restricted to the group AND a
+# pure-numpy group oracle (CI selects this leg with ``-k group``)
+# ---------------------------------------------------------------------------
+
+GROUP_AXES = [("node",), ("local",), ("node", "local")]
+GROUP_IDS = ["node", "local", "node-local"]
+
+
+def _group_members(axes):
+    """Flat mesh ranks of every group, each in group-rank order (mesh is
+    (N, P) row-major: flat rank d = n * P + p)."""
+    if axes == ("node",):
+        return [[n * P + p for n in range(N)] for p in range(P)]
+    if axes == ("local",):
+        return [[n * P + p for p in range(P)] for n in range(N)]
+    return [list(range(M))]
+
+
+def _group_operand(coll: str, G: int, m: int, dtype: str):
+    """Global operand per the group I/O convention (D = mesh devices,
+    G = group world; see runtime.build)."""
+    dt = jnp.dtype(dtype)
+    if coll == "allgather":
+        return (jnp.arange(M * m) % 97).astype(dt)
+    if coll == "scatter":
+        return (jnp.arange(G * m) % 97).astype(dt)
+    if coll == "broadcast":
+        return (jnp.arange(m) % 97 + 1).astype(dt)
+    if coll == "allreduce":
+        return (jnp.arange(M * m) % 5).astype(dt).reshape(M, m)
+    if coll == "reduce_scatter":
+        return (jnp.arange(M * G * m) % 5).astype(dt).reshape(M, G * m)
+    if coll == "alltoall":
+        return (jnp.arange(M * G * m) % 97).astype(dt).reshape(M, G, m)
+    raise ValueError(coll)
+
+
+def _group_oracle(coll: str, x, members, m: int):
+    """Pure-numpy group collective: every group reduces/gathers over its
+    own members only."""
+    a = np.asarray(x.astype(jnp.float32))
+    where = {d: (mem, r) for mem in members for r, d in enumerate(mem)}
+    G = len(members[0])
+    if coll == "allgather":
+        return np.stack([np.concatenate(
+            [a[j * m:(j + 1) * m] for j in where[d][0]]) for d in range(M)])
+    if coll == "broadcast":
+        return np.stack([a] * M)
+    if coll == "scatter":
+        return np.concatenate(
+            [a[where[d][1] * m:(where[d][1] + 1) * m] for d in range(M)])
+    if coll == "allreduce":
+        return np.stack([a[where[d][0]].sum(0) for d in range(M)])
+    if coll == "reduce_scatter":
+        s = a.shape[1] // G
+        return np.concatenate(
+            [a[where[d][0]].sum(0)[where[d][1] * s:(where[d][1] + 1) * s]
+             for d in range(M)])
+    if coll == "alltoall":
+        out = np.empty_like(a)
+        for d in range(M):
+            mem, r = where[d]
+            for j in range(G):
+                out[d, j] = a[mem[j], r]
+        return out
+    raise ValueError(coll)
+
+
+@pytest.mark.parametrize("axes", GROUP_AXES, ids=GROUP_IDS)
+@pytest.mark.parametrize("coll", sorted(runtime.collectives()))
+def test_group_conformance_every_algorithm(coll, axes):
+    g = COMM.split(axes=axes if len(axes) > 1 else axes[0])
+    members = _group_members(axes)
+    m = 3
+    x = _group_operand(coll, g.topo.world, m, "float32")
+    want = _group_oracle(coll, x, members, m)
+    ref = np.asarray(g.invoke(coll, x, algo=REF[coll]).astype(jnp.float32))
+    np.testing.assert_array_equal(
+        ref, want, err_msg=f"group {axes} {coll}/{REF[coll]} vs oracle")
+    for algo in autotune.candidates(coll, g.topo):
+        got = np.asarray(g.invoke(coll, x, algo=algo).astype(jnp.float32))
+        np.testing.assert_array_equal(
+            got, ref, err_msg=f"group {axes} {coll}/{algo}")
+
+
+@pytest.mark.parametrize("axes", GROUP_AXES, ids=GROUP_IDS)
+def test_group_conformance_root_sweep(axes):
+    g = COMM.split(axes=axes if len(axes) > 1 else axes[0])
+    G = g.topo.world
+    members = _group_members(axes)
+    for coll in ("broadcast", "scatter"):
+        x = _group_operand(coll, G, 4, "float32")
+        want = _group_oracle(coll, x, members, 4)
+        for root in sorted({0, G - 1}):
+            got = np.asarray(
+                g.invoke(coll, x, algo="pip_mcoll", root=root)
+                .astype(jnp.float32))
+            np.testing.assert_array_equal(
+                got, want, err_msg=f"group {axes} {coll} root={root}")
+
+
+@pytest.mark.parametrize("axes", GROUP_AXES, ids=GROUP_IDS)
+def test_group_persistent_matches_blocking(axes):
+    g = COMM.split(axes=axes if len(axes) > 1 else axes[0])
+    x = _group_operand("allreduce", g.topo.world, 6, "float32")
+    op = g.allreduce_init(x, algo="pip_mcoll")
+    np.testing.assert_array_equal(
+        np.asarray(op.start(x).wait()),
+        np.asarray(g.allreduce(x, algo="pip_mcoll")))
+
+
+@pytest.mark.parametrize("axes", GROUP_AXES, ids=GROUP_IDS)
+def test_group_compressed_broadcast_in_bounds(axes):
+    g = COMM.split(axes=axes if len(axes) > 1 else axes[0])
+    m = 2 * compress.BLOCK + 5
+    x = jax.random.normal(jax.random.PRNGKey(2), (m,), jnp.float32)
+    got = np.asarray(g.broadcast(x, algo="pip_mcoll", codec="int8_block"))
+    want = np.stack([np.asarray(x)] * M)
+    tol = compress.collective_tolerance(
+        "int8_block", "broadcast", g.topo.world, float(jnp.abs(x).max()))
+    assert np.abs(got - want).max() <= tol + 1e-6
+
+
+def test_group_split_of_split_matches_direct():
+    """comm.split(...).split(...) lands on the same group semantics as the
+    direct split (and the same memoized child when specs agree)."""
+    direct = COMM.split(axes="local")
+    nested = COMM.split(axes=("node", "local")).split(axes="local")
+    x = _group_operand("allreduce", direct.topo.world, 4, "float32")
+    np.testing.assert_array_equal(
+        np.asarray(direct.allreduce(x, algo="pip_mcoll")),
+        np.asarray(nested.allreduce(x, algo="pip_mcoll")))
 
 
 @pytest.mark.parametrize("coll", ("allreduce", "reduce_scatter"))

@@ -335,16 +335,22 @@ def test_auto_honors_pinned_codec_at_every_size():
 
 
 def test_auto_rejects_bad_codec_pins():
-    """Invalid codec names and codec pins on collectives with no
-    codec-capable algorithm fail at resolution, auto or explicit."""
+    """Invalid codec names and codec pins on non-capable algorithms fail
+    at resolution; a pin under auto lands on a codec-capable algorithm
+    (every collective has one since compressed broadcast/scatter)."""
     topo = Topology(4, 2)
     x = jnp.ones((8, 64), jnp.float32)
     with pytest.raises(ValueError, match="unknown codec"):
         runtime.resolve_algo(topo, "allreduce", "auto", x, {"codec": "zstd"})
     xb = jnp.ones((64,), jnp.float32)
-    with pytest.raises(ValueError, match="no codec-capable"):
-        runtime.resolve_algo(topo, "broadcast", "auto", xb,
+    with pytest.raises(ValueError, match="does not support compression"):
+        runtime.resolve_algo(topo, "broadcast", "binomial", xb,
                              {"codec": "int8_block"})
+    algo, kw = runtime.resolve_algo(topo, "broadcast", "auto", xb,
+                                    {"codec": "int8_block"})
+    from repro.core import mcoll
+    assert mcoll.supports_codec("broadcast", algo)
+    assert kw.get("codec") == "int8_block"
 
 
 def test_resolve_auto_zero_budget_is_lossless():
