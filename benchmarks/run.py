@@ -14,11 +14,14 @@ benches. Prints ``name,us_per_call,derived`` CSV rows.
   roofline_summary aggregates results/dryrun.jsonl (if present)
 
 ``python benchmarks/run.py calibrate`` runs the measured calibration sweep
-plus the persistent-op overlap leg on the 8-CPU-device mesh, persisting
-the selection subsystem's tuning table and an ``overlap`` section
-(barrier vs overlapped bucketed sync, init/start amortization curve,
-train-step delta) to ``results/BENCH_collectives.json`` (the CI perf
-artifact).
+plus the persistent-op overlap leg and the codec-kernel microbench on the
+8-CPU-device mesh, persisting the selection subsystem's tuning table, an
+``overlap`` section (barrier vs overlapped bucketed sync, init/start
+amortization curve, train-step delta), and a ``codec_kernels`` section
+(fused Pallas codec lowerings vs jnp reference: wall-clock, analytic HBM
+traffic, roofline seconds) to ``results/BENCH_collectives.json`` (the CI
+perf artifact; the codec section is also written standalone as
+``results/BENCH_codec_kernels.json``).
 
 The paper's absolute numbers come from an OPA cluster; figures here are the
 alpha-beta model (core/costmodel.py) instantiated with the paper's cluster
@@ -226,6 +229,18 @@ def overlap_collectives():
                       timeout=1800, fatal=True)
 
 
+def codec_kernel_collectives():
+    """Run the codec-kernel microbench (fused Pallas codec lowerings vs jnp
+    reference: wall-clock, analytic HBM traffic, roofline seconds) on the
+    8-CPU-device mesh and merge its ``codec_kernels`` section into the
+    calibration artifact (run AFTER calibrate_collectives — the calibrate
+    mode rewrites the file). Also writes results/BENCH_codec_kernels.json
+    as a standalone artifact."""
+    out_json = REPO / "results" / "BENCH_collectives.json"
+    _bench_subprocess(["--codec-kernels", str(out_json)], "codec_kernel/",
+                      timeout=1800, fatal=True)
+
+
 def kernel_bench():
     import jax
     import jax.numpy as jnp
@@ -274,9 +289,11 @@ def main() -> None:
     print("name,us_per_call,derived")
     if "calibrate" in sys.argv[1:]:
         # CI smoke: measured calibration sweep + persistent-op overlap leg
-        # -> BENCH_collectives.json (table, crossovers, overlap section)
+        # + codec-kernel microbench -> BENCH_collectives.json (table,
+        # crossovers, overlap + codec_kernels sections)
         calibrate_collectives()
         overlap_collectives()
+        codec_kernel_collectives()
         autotune_table()
         return
     fig1_scatter()

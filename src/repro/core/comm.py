@@ -502,13 +502,42 @@ class Communicator:
     def scatter_init(self, x=None, **knobs) -> PersistentOp:
         return self.persistent("scatter", x, **knobs)
 
+    def split_lattice(self) -> Tuple["Communicator", ...]:
+        """Every mesh-aligned split child of this communicator: one per
+        single active (size > 1) axis, plus the full multi-axis group when
+        more than one axis is active — e.g. a 2x4 mesh yields the
+        ``("node",)``, ``("local",)`` and ``("node", "local")`` children.
+        Children are the same memoized objects :meth:`split` returns."""
+        topo = self._require_topo()
+        axes = tuple(topo.active_axes)
+        combos = [(a,) for a in axes]
+        if len(axes) > 1:
+            combos.append(tuple(axes))
+        return tuple(self.split(axes=c) for c in combos)
+
     # -- calibration / observability passthroughs ---------------------------
 
-    def calibrate(self, **kw):
+    def calibrate(self, include_splits: bool = False, **kw):
         """Timed plan sweeps into this communicator's selector table
-        (see ``runtime.calibrate``)."""
+        (see ``runtime.calibrate``).
+
+        ``include_splits=True`` additionally walks :meth:`split_lattice`
+        and calibrates every mesh-aligned split child, so each group
+        topology lands measured ``/g:``-keyed tuning rows *before* first
+        use — a fresh ``comm.split(axes=...)`` then resolves
+        ``algo="auto"`` from measurement instead of the cost-model prior.
+        All rows land in the shared selector table; ``path=`` (when given)
+        is saved once, after the whole lattice."""
         kw.setdefault("selector", self.selector)
-        return runtime.calibrate(self.mesh, self._require_topo(), **kw)
+        if not include_splits:
+            return runtime.calibrate(self.mesh, self._require_topo(), **kw)
+        path = kw.pop("path", None)
+        rows = list(runtime.calibrate(self.mesh, self._require_topo(), **kw))
+        for child in self.split_lattice():
+            rows.extend(runtime.calibrate(child.mesh, child.topo, **kw))
+        if path is not None:
+            self.selector.table.save(path)
+        return rows
 
     def cache_stats(self) -> "runtime.CacheStats":
         return runtime.cache_stats()

@@ -731,9 +731,14 @@ COST_FNS = {
 
 
 def codec_seconds(codec: str, nbytes: float, net: NetParams) -> float:
-    """Modeled encode+decode time for ``nbytes`` of fp32 payload."""
-    m = _codecs.meta(codec)
-    return m.flops_per_elem * (float(nbytes) / 4.0) / net.flop_rate
+    """Modeled encode+decode time for ``nbytes`` of fp32 payload.
+
+    Prices :func:`compress.effective_flops_per_elem` — codecs with fused
+    Pallas lowerings (encode+error-feedback and decode+reduce in one memory
+    pass each) cost fewer streaming passes while fusion is enabled, so the
+    autotuned compression crossover moves to smaller messages."""
+    return (_codecs.effective_flops_per_elem(codec)
+            * (float(nbytes) / 4.0) / net.flop_rate)
 
 
 def codec_net(net: NetParams, topo: Topology, codec: str) -> NetParams:

@@ -257,14 +257,21 @@ def _compressed_allreduce(x, topo: Topology, codec: str, err=None):
     Ls = -(-Lp // W)
     sp, _ = _pad_to(s, W * Ls)
     xs = sp.reshape(W, Ls)
-    comp = cd.encode(xs)
+    # fused-capable encode sites: the codec emits wire form + round-trip
+    # residual in one pass (kernels/codec.py) instead of a decode round trip
     if err is not None:
-        r1 = xs - cd.decode(comp, Ls)
-    # reduce-scatter over the wire: peer w receives sub-slice w of everyone
-    mine = cd.decode(_wire_all_to_all(comp, wire), Ls).sum(axis=0)
-    comp2 = cd.encode(mine[None])
+        comp, r1 = cd.encode_residual(xs)
+    else:
+        comp = cd.encode(xs)
+    # reduce-scatter over the wire: peer w receives sub-slice w of everyone;
+    # decode_reduce accumulates the W wire slices without materializing the
+    # dequantized (W, Ls) intermediate
+    mine = cd.decode_reduce(_wire_all_to_all(comp, wire), Ls)
     if err is not None:
-        r2 = mine - cd.decode(comp2, Ls)[0]
+        comp2, r2s = cd.encode_residual(mine[None])
+        r2 = r2s[0]
+    else:
+        comp2 = cd.encode(mine[None])
     red = cd.decode(_wire_all_gather(comp2, wire), Ls).reshape(-1)[:Lp]
     out = lax.all_gather(red, fast, axis=0, tiled=True) if fast else red
     out = out[:orig].astype(dtype).reshape(shape)
@@ -307,7 +314,7 @@ def _compressed_reduce_scatter(x, topo: Topology, codec: str):
     Ls = flat.shape[0] // W
     xs = flat.reshape(W, Ls)
     comp = cd.encode(xs)
-    mine = cd.decode(_wire_all_to_all(comp, wire), Ls).sum(axis=0)
+    mine = cd.decode_reduce(_wire_all_to_all(comp, wire), Ls)
     if fast:
         mine = lax.psum_scatter(mine, fast, scatter_dimension=0, tiled=True)
     return mine.astype(dtype).reshape((rows // topo.world,) + x.shape[1:])

@@ -454,8 +454,12 @@ def build(mesh, topo: Topology, collective: str, algo: str, *,
         raise ValueError("algo='auto' resolves per input size/dtype; call "
                          "Communicator methods (or resolve_algo first)")
     # Mesh hashes/compares by axis names + device assignment, so it keys
-    # the cache directly (no per-call O(n_devices) key construction)
-    key = (mesh, topo, collective, algo, stacked, jit, donate, _kw_key(kw))
+    # the cache directly (no per-call O(n_devices) key construction). The
+    # fused-codec switch changes the traced program, so it's part of the key
+    # (the conformance A/B under compress.jnp_reference_paths must not hit
+    # a program built with fusion on, and vice versa).
+    key = (mesh, topo, collective, algo, stacked, jit, donate, _kw_key(kw),
+           _codecs.fused_enabled())
     hit = _BUILD_CACHE.get(key)
     if hit is not None:
         _STATS.build_hits += 1
@@ -502,7 +506,7 @@ def run_resolved(mesh, topo: Topology, name: str, algo: str, x, *,
     path for callers that ran :func:`resolve_algo` themselves (Communicator
     methods resolve once with their own selector, then come here)."""
     key = (mesh, topo, name, algo, stacked, _kw_key(kw),
-           (tuple(x.shape), str(x.dtype)))
+           (tuple(x.shape), str(x.dtype)), _codecs.fused_enabled())
     compiled = _EXEC_CACHE.get(key)
     if compiled is not None:
         _STATS.exec_hits += 1
@@ -546,7 +550,8 @@ def compile_persistent(mesh, topo: Topology, name: str, algo: str,
                          "does this)")
     sharding = input_sharding(mesh, topo, name)
     key = (mesh, topo, name, algo, stacked, _kw_key(kw),
-           (tuple(shape), str(jnp.dtype(dtype))), ("persistent", donate))
+           (tuple(shape), str(jnp.dtype(dtype))), ("persistent", donate),
+           _codecs.fused_enabled())
     compiled = _EXEC_CACHE.get(key)
     if compiled is not None:
         _STATS.exec_hits += 1
@@ -569,26 +574,32 @@ def compile_persistent(mesh, topo: Topology, name: str, algo: str,
 
 
 def example_input(collective: str, topo: Topology, nbytes: int,
-                  dtype=jnp.float32):
+                  dtype=jnp.float32, devices: Optional[int] = None):
     """A global operand for ``collective`` sized so the per-process message
-    is ``nbytes`` (the cost model's size convention)."""
-    M = topo.world
+    is ``nbytes`` (the cost model's size convention).
+
+    ``devices`` is the total mesh device count ``D`` the operand's sharded
+    dim0 spans (see :func:`build`'s conventions); it defaults to
+    ``topo.world`` and must be passed for sub-communicator topologies,
+    where the group size ``G = topo.world`` is smaller than the mesh."""
+    G = topo.world
+    D = int(devices) if devices is not None else G
     itemsize = jnp.dtype(dtype).itemsize
     elems = max(1, nbytes // itemsize)
     if collective == "allgather":
-        return jnp.arange(M * elems, dtype=dtype)
+        return jnp.arange(D * elems, dtype=dtype)
     if collective == "scatter":
-        return jnp.arange(M * elems, dtype=dtype)
+        return jnp.arange(G * elems, dtype=dtype)
     if collective == "broadcast":
         return jnp.arange(elems, dtype=dtype)
     if collective == "allreduce":
-        return (jnp.arange(M * elems, dtype=dtype) % 13).reshape(M, elems)
+        return (jnp.arange(D * elems, dtype=dtype) % 13).reshape(D, elems)
     if collective == "reduce_scatter":
-        s = max(1, elems // M)
-        return (jnp.arange(M * M * s, dtype=dtype) % 11).reshape(M, M * s)
+        s = max(1, elems // G)
+        return (jnp.arange(D * G * s, dtype=dtype) % 11).reshape(D, G * s)
     if collective == "alltoall":
-        s = max(1, elems // M)
-        return jnp.arange(M * M * s, dtype=dtype).reshape(M, M, s)
+        s = max(1, elems // G)
+        return jnp.arange(D * G * s, dtype=dtype).reshape(D, G, s)
     raise ValueError(collective)
 
 
@@ -601,6 +612,9 @@ class CalibrationRow:
     seconds: float
     chunks: int = 1
     codec: str = "none"
+    #: sub-communicator group tag ("" = the root topology); split-lattice
+    #: sweeps (Communicator.calibrate(include_splits=True)) fill this
+    group: str = ""
 
 
 def calibrate(mesh, topo: Topology,
@@ -625,9 +639,11 @@ def calibrate(mesh, topo: Topology,
     """
     sel = selector or autotune.default_selector()
     rows: List[CalibrationRow] = []
+    n_dev = int(np.asarray(mesh.devices).size)
     for name in (tuple(names) if names else collectives()):
         for nbytes in sizes:
-            x = example_input(name, topo, int(nbytes), dtype)
+            x = example_input(name, topo, int(nbytes), dtype,
+                              devices=n_dev)
             for algo, chunks, codec in autotune.plans(
                     name, topo, int(nbytes), codecs=codecs,
                     dtype=str(jnp.dtype(dtype))):
@@ -651,7 +667,8 @@ def calibrate(mesh, topo: Topology,
                                  sec)
                 rows.append(CalibrationRow(name, algo, int(nbytes),
                                            str(jnp.dtype(dtype)), sec,
-                                           chunks, codec))
+                                           chunks, codec,
+                                           group=topo.group or ""))
     if path is not None:
         sel.table.save(path)
     return rows

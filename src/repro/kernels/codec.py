@@ -1,0 +1,414 @@
+"""Pallas fused codec kernels for the compressed-collective hot path.
+
+The jnp codecs in ``repro.core.compress`` execute the wire path as separate
+streaming passes over the hottest bytes in the system: quantize, ship,
+dequantize, add — with error feedback adding a decode and a subtract on
+top. Each pass is a full HBM round trip. Following the paper's core claim
+(eliminating extra copies/passes is what unlocks message rate) and C-Coll's
+observation that codec work sits directly on the wire path, this module
+fuses them:
+
+  encode + error-feedback   read the f32 payload (and optionally the carried
+                            residual) ONCE; emit the wire blocks, the scales
+                            AND the updated residual from registers — the
+                            intermediate ``decode(encode(x))`` tensor never
+                            materializes in HBM.
+  decode + reduce           accumulate the ``W`` incoming wire slices into
+                            f32 registers directly (the reduction runs over
+                            the grid's inner axis into a revisited output
+                            block), replacing dequantize-then-``sum(axis=0)``.
+
+Kernels exist for the ``int8_block``, ``int4_block`` (packed two-per-byte)
+and ``fp8_sim`` (when the float8 dtype exists) wire forms. Each is
+registered here as a :class:`CodecLowering`; ``core.compress`` routes
+``Codec.encode_with_feedback`` / ``encode_residual`` / ``decode_reduce``
+through the lowering when ``CodecMeta.fused`` advertises it (and the
+module-level fused toggle is on — ``compress.jnp_reference_paths()`` is the
+A/B escape hatch conformance uses).
+
+Backend dispatch follows ``kernels/ops.py``: compiled Pallas on TPU,
+``interpret=True`` elsewhere — CPU CI runs the same kernel bodies through
+the interpreter, so the fused paths are conformance-tested everywhere.
+
+:func:`memory_traffic` is the analytic per-stage HBM byte count (jnp passes
+vs fused passes) the codec-kernel microbench and the cost model's
+fewer-passes pricing are derived from.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+
+from repro.core.compress import BLOCK
+
+_FP8_MAX = 448.0  # e4m3 finite max (matches compress.Fp8SimCodec)
+_HAVE_FP8 = hasattr(jnp, "float8_e4m3fn")
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _pad_blocks(x2d):
+    """Pad (S, L) f32 to a whole number of BLOCK-element blocks."""
+    x2d = jnp.asarray(x2d).astype(jnp.float32)
+    S, L = x2d.shape
+    nb = -(-L // BLOCK)
+    return jnp.pad(x2d, ((0, 0), (0, nb * BLOCK - L))), nb
+
+
+# ---------------------------------------------------------------------------
+# int8_block: per-256-block int8 + fp32 scale
+# ---------------------------------------------------------------------------
+
+
+def _i8_store(c, q_ref, s_ref, r_ref):
+    """Shared body: quantize one (1, BLOCK) block of the corrected payload
+    ``c`` and store wire + scale + residual — the same arithmetic as the
+    jnp codec (scale = blockmax/127, round-to-nearest, clamped divisor)."""
+    scale = jnp.max(jnp.abs(c)) / 127.0
+    q = jnp.clip(jnp.round(c / jnp.maximum(scale, 1e-12)), -127, 127)
+    q_ref[...] = q.astype(jnp.int8)
+    s_ref[0, 0] = scale
+    r_ref[...] = c - q * scale
+
+
+def _i8_ef_kernel(x_ref, e_ref, q_ref, s_ref, r_ref):
+    _i8_store(x_ref[...] + e_ref[...], q_ref, s_ref, r_ref)
+
+
+def _i8_enc_kernel(x_ref, q_ref, s_ref, r_ref):
+    _i8_store(x_ref[...], q_ref, s_ref, r_ref)
+
+
+def _i8_dr_kernel(q_ref, s_ref, o_ref):
+    w = pl.program_id(1)
+
+    @pl.when(w == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += q_ref[...].astype(jnp.float32) * s_ref[0, 0]
+
+
+def _block_encode_call(kernel, inputs, S: int, nb: int, wire_dtype,
+                       wire_cols: int, interpret: bool):
+    """One fused pass over (S, nb) blocks -> (wire, scale, residual)."""
+    n_in = len(inputs)
+    return pl.pallas_call(
+        kernel,
+        grid=(S, nb),
+        in_specs=[pl.BlockSpec((1, BLOCK), lambda s, b: (s, b))] * n_in,
+        out_specs=[
+            pl.BlockSpec((1, wire_cols), lambda s, b: (s, b)),
+            pl.BlockSpec((1, 1), lambda s, b: (s, b)),
+            pl.BlockSpec((1, BLOCK), lambda s, b: (s, b)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((S, nb * wire_cols), wire_dtype),
+            jax.ShapeDtypeStruct((S, nb), jnp.float32),
+            jax.ShapeDtypeStruct((S, nb * BLOCK), jnp.float32),
+        ],
+        interpret=interpret,
+    )(*inputs)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def int8_encode_feedback(x2d, err, *, interpret: bool = True):
+    """Fused encode + error feedback: read x and the carried residual once,
+    emit ({"q", "scale"}, new residual). Matches the jnp
+    ``encode_with_feedback`` contract bit-for-bit in arithmetic."""
+    S, L = x2d.shape
+    xp, nb = _pad_blocks(x2d)
+    ep, _ = _pad_blocks(jnp.asarray(err).astype(jnp.float32))
+    q, scale, res = _block_encode_call(_i8_ef_kernel, (xp, ep), S, nb,
+                                       jnp.int8, BLOCK, interpret)
+    return ({"q": q.reshape(S, nb, BLOCK), "scale": scale}, res[:, :L])
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def int8_encode_residual(x2d, *, interpret: bool = True):
+    """Fused encode + round-trip residual (no feedback input)."""
+    S, L = x2d.shape
+    xp, nb = _pad_blocks(x2d)
+    q, scale, res = _block_encode_call(_i8_enc_kernel, (xp,), S, nb,
+                                       jnp.int8, BLOCK, interpret)
+    return ({"q": q.reshape(S, nb, BLOCK), "scale": scale}, res[:, :L])
+
+
+@functools.partial(jax.jit, static_argnames=("length", "interpret"))
+def int8_decode_reduce(comp, length: int, *, interpret: bool = True):
+    """Fused decode + sum over the leading wire-peer axis: accumulate the
+    int8 wire slices into an f32 register block per grid column."""
+    q3, scale = comp["q"], comp["scale"]
+    W, nb = scale.shape
+    out = pl.pallas_call(
+        _i8_dr_kernel,
+        grid=(nb, W),
+        in_specs=[pl.BlockSpec((1, BLOCK), lambda b, w: (w, b)),
+                  pl.BlockSpec((1, 1), lambda b, w: (w, b))],
+        out_specs=pl.BlockSpec((1, BLOCK), lambda b, w: (0, b)),
+        out_shape=jax.ShapeDtypeStruct((1, nb * BLOCK), jnp.float32),
+        interpret=interpret,
+    )(q3.reshape(W, nb * BLOCK), scale)
+    return out.reshape(-1)[:length]
+
+
+# ---------------------------------------------------------------------------
+# int4_block: packed two-per-byte wire form, per-256-block fp32 scale
+# ---------------------------------------------------------------------------
+
+_HALF = BLOCK // 2
+
+
+def _i4_store(c, q_ref, s_ref, r_ref):
+    """Quantize to [-7, 7] against blockmax/7 and pack nibble pairs
+    (+8 bias, even element low nibble) — mirrors Int4BlockCodec.encode."""
+    scale = jnp.max(jnp.abs(c)) / 7.0
+    q = jnp.clip(jnp.round(c / jnp.maximum(scale, 1e-12)), -7, 7)
+    r_ref[...] = c - q * scale
+    s_ref[0, 0] = scale
+    pairs = (q.astype(jnp.int32) + 8).reshape(1, _HALF, 2)
+    q_ref[...] = (pairs[..., 0] | (pairs[..., 1] << 4)).astype(jnp.uint8)
+
+
+def _i4_ef_kernel(x_ref, e_ref, q_ref, s_ref, r_ref):
+    _i4_store(x_ref[...] + e_ref[...], q_ref, s_ref, r_ref)
+
+
+def _i4_enc_kernel(x_ref, q_ref, s_ref, r_ref):
+    _i4_store(x_ref[...], q_ref, s_ref, r_ref)
+
+
+def _i4_dr_kernel(q_ref, s_ref, o_ref):
+    w = pl.program_id(1)
+
+    @pl.when(w == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    b = q_ref[...].astype(jnp.int32)
+    lo = (b & 0xF) - 8
+    hi = (b >> 4) - 8
+    pair = jnp.stack([lo, hi], axis=-1).reshape(1, BLOCK)
+    o_ref[...] += pair.astype(jnp.float32) * s_ref[0, 0]
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def int4_encode_feedback(x2d, err, *, interpret: bool = True):
+    S, L = x2d.shape
+    xp, nb = _pad_blocks(x2d)
+    ep, _ = _pad_blocks(jnp.asarray(err).astype(jnp.float32))
+    q, scale, res = _block_encode_call(_i4_ef_kernel, (xp, ep), S, nb,
+                                       jnp.uint8, _HALF, interpret)
+    return ({"q": q.reshape(S, nb, _HALF), "scale": scale}, res[:, :L])
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def int4_encode_residual(x2d, *, interpret: bool = True):
+    S, L = x2d.shape
+    xp, nb = _pad_blocks(x2d)
+    q, scale, res = _block_encode_call(_i4_enc_kernel, (xp,), S, nb,
+                                       jnp.uint8, _HALF, interpret)
+    return ({"q": q.reshape(S, nb, _HALF), "scale": scale}, res[:, :L])
+
+
+@functools.partial(jax.jit, static_argnames=("length", "interpret"))
+def int4_decode_reduce(comp, length: int, *, interpret: bool = True):
+    q3, scale = comp["q"], comp["scale"]
+    W, nb = scale.shape
+    out = pl.pallas_call(
+        _i4_dr_kernel,
+        grid=(nb, W),
+        in_specs=[pl.BlockSpec((1, _HALF), lambda b, w: (w, b)),
+                  pl.BlockSpec((1, 1), lambda b, w: (w, b))],
+        out_specs=pl.BlockSpec((1, BLOCK), lambda b, w: (0, b)),
+        out_shape=jax.ShapeDtypeStruct((1, nb * BLOCK), jnp.float32),
+        interpret=interpret,
+    )(q3.reshape(W, nb * _HALF), scale)
+    return out.reshape(-1)[:length]
+
+
+# ---------------------------------------------------------------------------
+# fp8_sim: e4m3 cast against a per-slice scale (whole-slice blocks — the
+# scale is a slice-level amax, so the natural fused tile is one slice)
+# ---------------------------------------------------------------------------
+
+
+def _fp8_store(c, q_ref, s_ref, r_ref):
+    amax = jnp.max(jnp.abs(c))
+    scale = jnp.maximum(amax / _FP8_MAX, 1e-30)
+    q = jnp.clip(c / scale, -_FP8_MAX, _FP8_MAX)
+    f8 = q.astype(jnp.float8_e4m3fn)
+    q_ref[...] = lax.bitcast_convert_type(f8, jnp.uint8)
+    s_ref[0, 0] = scale
+    r_ref[...] = c - f8.astype(jnp.float32) * scale
+
+
+def _fp8_ef_kernel(x_ref, e_ref, q_ref, s_ref, r_ref):
+    _fp8_store(x_ref[...] + e_ref[...], q_ref, s_ref, r_ref)
+
+
+def _fp8_enc_kernel(x_ref, q_ref, s_ref, r_ref):
+    _fp8_store(x_ref[...], q_ref, s_ref, r_ref)
+
+
+def _fp8_dr_kernel(q_ref, s_ref, o_ref):
+    w = pl.program_id(0)
+
+    @pl.when(w == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    f8 = lax.bitcast_convert_type(q_ref[...], jnp.float8_e4m3fn)
+    o_ref[...] += f8.astype(jnp.float32) * s_ref[0, 0]
+
+
+def _fp8_encode_call(kernel, inputs, S: int, L: int, interpret: bool):
+    n_in = len(inputs)
+    return pl.pallas_call(
+        kernel,
+        grid=(S,),
+        in_specs=[pl.BlockSpec((1, L), lambda s: (s, 0))] * n_in,
+        out_specs=[
+            pl.BlockSpec((1, L), lambda s: (s, 0)),
+            pl.BlockSpec((1, 1), lambda s: (s, 0)),
+            pl.BlockSpec((1, L), lambda s: (s, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((S, L), jnp.uint8),
+            jax.ShapeDtypeStruct((S, 1), jnp.float32),
+            jax.ShapeDtypeStruct((S, L), jnp.float32),
+        ],
+        interpret=interpret,
+    )(*inputs)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def fp8_encode_feedback(x2d, err, *, interpret: bool = True):
+    S, L = x2d.shape
+    x = jnp.asarray(x2d).astype(jnp.float32)
+    e = jnp.asarray(err).astype(jnp.float32)
+    q, scale, res = _fp8_encode_call(_fp8_ef_kernel, (x, e), S, L, interpret)
+    return ({"q": q, "scale": scale.reshape(S)}, res)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def fp8_encode_residual(x2d, *, interpret: bool = True):
+    S, L = x2d.shape
+    x = jnp.asarray(x2d).astype(jnp.float32)
+    q, scale, res = _fp8_encode_call(_fp8_enc_kernel, (x,), S, L, interpret)
+    return ({"q": q, "scale": scale.reshape(S)}, res)
+
+
+@functools.partial(jax.jit, static_argnames=("length", "interpret"))
+def fp8_decode_reduce(comp, length: int, *, interpret: bool = True):
+    q, scale = comp["q"], comp["scale"]
+    W, L = q.shape
+    out = pl.pallas_call(
+        _fp8_dr_kernel,
+        grid=(W,),
+        in_specs=[pl.BlockSpec((1, L), lambda w: (w, 0)),
+                  pl.BlockSpec((1, 1), lambda w: (w, 0))],
+        out_specs=pl.BlockSpec((1, L), lambda w: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((1, L), jnp.float32),
+        interpret=interpret,
+    )(q, scale.reshape(W, 1))
+    return out.reshape(-1)[:length]
+
+
+# ---------------------------------------------------------------------------
+# per-codec lowering registry (what CodecMeta.fused points at)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class CodecLowering:
+    """The fused entry points for one codec's wire form.
+
+    encode_feedback(x2d, err) -> (comp, new_err)   one pass over x + err
+    encode_residual(x2d)      -> (comp, residual)  one pass over x
+    decode_reduce(comp, L)    -> (L,) f32          one pass over the wire
+    """
+
+    name: str
+    encode_feedback: Callable
+    encode_residual: Callable
+    decode_reduce: Callable
+
+
+LOWERINGS: Dict[str, CodecLowering] = {}
+
+
+def _register(lw: CodecLowering) -> CodecLowering:
+    LOWERINGS[lw.name] = lw
+    return lw
+
+
+def _dispatch(fn):
+    """Bind the backend choice (compiled TPU vs interpret) at call time."""
+    def call(*args, **kw):
+        return fn(*args, interpret=_interpret(), **kw)
+    return call
+
+
+_register(CodecLowering("int8_block",
+                        _dispatch(int8_encode_feedback),
+                        _dispatch(int8_encode_residual),
+                        _dispatch(int8_decode_reduce)))
+_register(CodecLowering("int4_block",
+                        _dispatch(int4_encode_feedback),
+                        _dispatch(int4_encode_residual),
+                        _dispatch(int4_decode_reduce)))
+if _HAVE_FP8:
+    _register(CodecLowering("fp8_sim",
+                            _dispatch(fp8_encode_feedback),
+                            _dispatch(fp8_encode_residual),
+                            _dispatch(fp8_decode_reduce)))
+
+
+def lowering(name: str) -> Optional[CodecLowering]:
+    """The registered fused lowering for one codec name (None = jnp only)."""
+    return LOWERINGS.get(name)
+
+
+def fused_codec_names() -> Tuple[str, ...]:
+    return tuple(sorted(LOWERINGS))
+
+
+# ---------------------------------------------------------------------------
+# analytic memory traffic: jnp passes vs fused passes (the numbers behind
+# the cost model's fewer-passes pricing and the codec-kernel microbench)
+# ---------------------------------------------------------------------------
+
+
+def memory_traffic(wire_bytes_per_elem: float, n_elems: int,
+                   W: int = 8) -> Dict[str, Dict[str, float]]:
+    """HBM bytes moved per stage for ``n_elems`` f32 payload elements.
+
+    jnp encode+feedback: add (r8 w4), encode (r4 w b), decode for the
+    residual (r b w4), subtract (r8 w4) — every intermediate round-trips
+    HBM. Fused: read x + err once (r8), write wire + residual (w b+4).
+
+    jnp decode+reduce over ``W`` wire slices: dequantize (r b w4) then
+    ``sum(axis=0)`` (r4 w 4/W) per wire element. Fused: read the wire
+    slices once (r b), accumulate in registers, write f32 once (w 4/W).
+    """
+    b = float(wire_bytes_per_elem)
+    n = float(n_elems)
+    return {
+        "encode_feedback": {
+            "jnp_bytes": n * (8 + 4 + 4 + b + b + 4 + 8 + 4),
+            "fused_bytes": n * (8 + b + 4),
+        },
+        "decode_reduce": {
+            "jnp_bytes": n * (b + 4 + 4 + 4.0 / W),
+            "fused_bytes": n * (b + 4.0 / W),
+        },
+    }

@@ -315,6 +315,74 @@ def test_conformance_compressed_shape_sweep(coll, algo, cd, m):
 
 
 # ---------------------------------------------------------------------------
+# fused-kernel leg: every fused codec x codec-capable collective x chunk
+# plan, A/B against the pure-jnp reference paths (compress.
+# jnp_reference_paths flips the routing; the runtime caches key on the
+# toggle so the two variants compile separately). Lossy fused codecs agree
+# within collective_tolerance (decode+reduce accumulates in a different
+# order, which can flip one requantization rounding); lossless plans are
+# bitwise invariant under the toggle.
+# ---------------------------------------------------------------------------
+
+FUSED_TRIPLES = [(coll, algo, cd) for coll, algo in CODEC_PAIRS
+                 for cd in compress.fused_codecs()]
+
+
+def _assert_fused_matches_jnp(coll: str, algo: str, cd: str, m: int, **kw):
+    if not _feasible(coll, algo):
+        pytest.skip(f"{algo} infeasible on {N}x{P}")
+    x = _operand(coll, m, "float32")
+    got_fused = _run(coll, algo, x, codec=cd, **kw)
+    with compress.jnp_reference_paths():
+        got_jnp = _run(coll, algo, x, codec=cd, **kw)
+    tol = compress.collective_tolerance(cd, coll, M,
+                                        float(jnp.abs(x).max())) + 1e-6
+    ab = np.abs(got_fused - got_jnp).max()
+    assert ab <= tol, f"{coll}/{algo}@{cd} fused-vs-jnp m={m} {kw}: " \
+                      f"{ab} > {tol}"
+    # the fused path also conforms to the lossless reference on its own
+    ref = _run(coll, REF[coll], x)
+    err = np.abs(got_fused - ref).max()
+    assert err <= tol, f"{coll}/{algo}@{cd} fused-vs-ref m={m} {kw}: " \
+                       f"{err} > {tol}"
+
+
+@pytest.mark.parametrize("coll,algo,cd", FUSED_TRIPLES)
+def test_conformance_fused_matches_jnp_reference(coll, algo, cd):
+    _assert_fused_matches_jnp(coll, algo, cd, 80)
+
+
+@pytest.mark.parametrize("chunks", [2, 3])
+@pytest.mark.parametrize(
+    "coll,algo,cd", [t for t in FUSED_TRIPLES
+                     if mcoll.supports_chunks(t[0], t[1])])
+def test_conformance_fused_chunked_plans(coll, algo, cd, chunks):
+    """Fusion composes with chunked pipelining: every chunk segment rides
+    the fused kernels independently."""
+    _assert_fused_matches_jnp(coll, algo, cd, 80, chunks=chunks)
+
+
+@pytest.mark.parametrize("coll,algo", CODEC_PAIRS)
+def test_conformance_fused_toggle_lossless_bitwise(coll, algo):
+    """codec="none" never routes through a fused lowering — the toggle
+    must be bitwise invisible on lossless plans."""
+    x = _operand(coll, 5, "float32")
+    a = _run(coll, algo, x, codec="none")
+    with compress.jnp_reference_paths():
+        b = _run(coll, algo, x, codec="none")
+    np.testing.assert_array_equal(a, b)
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("coll,algo,cd", FUSED_TRIPLES)
+@given(m=st.sampled_from([1, 7, 64, 300]))
+@settings(max_examples=4, deadline=None)
+def test_conformance_fused_shape_sweep(coll, algo, cd, m):
+    """Odd / non-block-divisible payloads through every fused pair."""
+    _assert_fused_matches_jnp(coll, algo, cd, m)
+
+
+# ---------------------------------------------------------------------------
 # root-encodes-once wire form (broadcast/scatter) + the lossless integer
 # packer: compressed one-to-all moves the ROOT's encoded form verbatim, so
 # even a lossy codec's output is bitwise decode(encode(x)) on every rank —
@@ -535,6 +603,31 @@ def test_group_split_of_split_matches_direct():
     np.testing.assert_array_equal(
         np.asarray(direct.allreduce(x, algo="pip_mcoll")),
         np.asarray(nested.allreduce(x, algo="pip_mcoll")))
+
+
+def test_group_split_lattice_calibration_lands_measured_rows():
+    """comm.calibrate(include_splits=True) walks the split lattice: every
+    mesh-aligned group shape gets measured /g:-keyed tuning rows before
+    first use, in the one shared selector table."""
+    from repro.core import autotune as _autotune
+    from repro.core.comm import Communicator as _Comm
+
+    local = _Comm(mesh, topo, selector=_autotune.Selector(
+        table=_autotune.TuningTable()))
+    kids = local.split_lattice()
+    active = tuple(topo.active_axes)
+    want_groups = {"x".join(c) for c in
+                   ([(a,) for a in active]
+                    + ([tuple(active)] if len(active) > 1 else []))}
+    assert {k.topo.group for k in kids} == want_groups
+    rows = local.calibrate(include_splits=True, names=("allreduce",),
+                           sizes=(256,), iters=1)
+    assert {r.group for r in rows} == want_groups | {""}
+    # every lattice child resolves auto from measurement, not the prior
+    for k in kids:
+        assert local.selector.table.lookup(
+            k.topo, "allreduce", "float32", 256) is not None
+        assert _autotune.topo_key(k.topo).endswith(f"/g:{k.topo.group}")
 
 
 @pytest.mark.parametrize("coll", ("allreduce", "reduce_scatter"))
