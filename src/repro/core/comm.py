@@ -90,11 +90,19 @@ class PlanSpec:
     codec: Optional[str] = None
     error_budget: float = 0.0
     stacked: bool = True
+    #: carry-threaded persistent program: start(x, carry=state) ->
+    #: wait() -> (result, new_state). Only meaningful for persistent ops
+    #: on carry-capable algorithms (error-feedback allreduce).
+    carry: bool = False
 
     def __post_init__(self):
         if self.collective not in runtime.collectives():
             raise ValueError(f"unknown collective {self.collective!r}; "
                              f"one of {runtime.collectives()}")
+        if self.carry and self.collective != "allreduce":
+            raise ValueError(
+                f"carry state threading is only supported on allreduce "
+                f"(error-feedback reductions), not {self.collective!r}")
         if self.chunks is not None and int(self.chunks) < 1:
             raise ValueError(f"chunks must be >= 1, got {self.chunks}")
         if self.chunk_bytes is not None and int(self.chunk_bytes) < 1:
@@ -178,6 +186,18 @@ class CollHandle:
         return self._value
 
 
+#: count of live (initialised, not yet released) persistent ops — the
+#: rebind-hygiene observable: re-resolving a plan must release the old op,
+#: so repeated plan crossings keep this flat instead of growing it
+_LIVE_OPS = 0
+
+
+def live_persistent_ops() -> int:
+    """Number of :class:`PersistentOp` objects initialised and not yet
+    :meth:`~PersistentOp.release`\\ d (process-wide)."""
+    return _LIVE_OPS
+
+
 class PersistentOp:
     """A persistent collective: plan resolved and executable compiled once
     at init (``comm.<collective>_init``), reused by every ``start``.
@@ -187,12 +207,25 @@ class PersistentOp:
     ``depth`` starts may be outstanding (un-waited) at once — ``depth=1``
     is strict request/complete pairing, ``depth>=2`` enables double
     buffering (start bucket i+1 before waiting bucket i).
+
+    ``carry=True`` builds the carry-threaded variant: ``start(x,
+    carry=state)`` takes a second operand with the payload's spec and
+    ``handle.wait()`` returns ``(result, new_state)`` — per-bucket
+    error-feedback residuals riding the persistent compressed allreduce.
+
+    Owners that re-resolve plans must :meth:`release` the op they replace
+    (``MPI_Request_free`` analog): release drops the compiled-callable
+    reference (the donated-buffer pin with ``donate=True``) and makes any
+    later ``start`` a clear error. The compiled executable itself stays in
+    the runtime's LRU exec cache, so releasing and re-initialising an
+    identical spec never recompiles.
     """
 
     def __init__(self, comm: "Communicator", collective: str,
                  shape: Tuple[int, ...], dtype, algo: str,
                  kw: Dict[str, Any], *, stacked: bool = True,
-                 depth: int = 1, donate: bool = False):
+                 depth: int = 1, donate: bool = False,
+                 carry: bool = False):
         if int(depth) < 1:
             raise ValueError(f"depth must be >= 1, got {depth}")
         self.comm = comm
@@ -204,11 +237,15 @@ class PersistentOp:
         self.stacked = bool(stacked)
         self.depth = int(depth)
         self.donate = bool(donate)
+        self.carry = bool(carry)
         self.starts = 0
         self._inflight = 0
+        self._released = False
         self._compiled, self._in_sharding = runtime.compile_persistent(
             comm.mesh, comm.topo, collective, algo, self.shape, self.dtype,
-            stacked=stacked, donate=donate, **self.kw)
+            stacked=stacked, donate=donate, carry=self.carry, **self.kw)
+        global _LIVE_OPS
+        _LIVE_OPS += 1
 
     @property
     def chunks(self) -> int:
@@ -227,30 +264,65 @@ class PersistentOp:
     def inflight(self) -> int:
         return self._inflight
 
-    def start(self, x) -> CollHandle:
+    @property
+    def released(self) -> bool:
+        return self._released
+
+    def release(self) -> None:
+        """Free this op (``MPI_Request_free``): drop the compiled-callable
+        reference and retire it from the live-op count. Idempotent; any
+        ``start`` after release raises. The compiled executable stays in
+        the runtime exec cache (re-init of the same spec is a cache hit)."""
+        global _LIVE_OPS
+        if self._released:
+            return
+        self._released = True
+        self._compiled = None
+        _LIVE_OPS -= 1
+
+    def _check_operand(self, x, what: str = "operand"):
+        x = jnp.asarray(x)
+        if tuple(x.shape) != self.shape or x.dtype != self.dtype:
+            raise ValueError(
+                f"persistent {self.collective} op compiled for "
+                f"{self.shape}/{self.dtype}, got {what} {tuple(x.shape)}/"
+                f"{x.dtype}; init a new op for a new operand spec")
+        if getattr(x, "sharding", None) != self._in_sharding:
+            x = jax.device_put(x, self._in_sharding)
+        return x
+
+    def start(self, x, carry=None) -> CollHandle:
         """Dispatch one invocation of the compiled plan on ``x`` and return
-        its handle immediately (no recompile, no cache lookup)."""
+        its handle immediately (no recompile, no cache lookup). A carry op
+        additionally takes ``carry=state`` (same spec as ``x``) and its
+        handle's ``wait()`` returns ``(result, new_state)``."""
+        if self._released:
+            raise RuntimeError(
+                f"start() on a released {self.collective} persistent op; "
+                f"init a new op (release() retired this one)")
         if self._inflight >= self.depth:
             raise RuntimeError(
                 f"{self.collective} persistent op already has "
                 f"{self._inflight} outstanding start(s) at depth="
                 f"{self.depth}; wait() the previous handle first, or init "
                 f"with depth>=2 for double buffering")
-        x = jnp.asarray(x)
-        if tuple(x.shape) != self.shape or x.dtype != self.dtype:
+        if self.carry != (carry is not None):
             raise ValueError(
-                f"persistent {self.collective} op compiled for "
-                f"{self.shape}/{self.dtype}, got {tuple(x.shape)}/"
-                f"{x.dtype}; init a new op for a new operand spec")
-        if getattr(x, "sharding", None) != self._in_sharding:
-            x = jax.device_put(x, self._in_sharding)
+                f"{self.collective} persistent op was compiled with "
+                f"carry={self.carry}; start() "
+                + ("requires carry=state" if self.carry
+                   else "does not take a carry operand"))
+        x = self._check_operand(x)
         self._inflight += 1
         self.starts += 1
+        if self.carry:
+            carry = self._check_operand(carry, what="carry")
+            return CollHandle(self, self._compiled(x, carry))
         return CollHandle(self, self._compiled(x))
 
-    def __call__(self, x):
+    def __call__(self, x, carry=None):
         """Blocking convenience: ``start(x).wait()``."""
-        return self.start(x).wait()
+        return self.start(x, carry=carry).wait()
 
 
 # ---------------------------------------------------------------------------
@@ -465,11 +537,18 @@ class Communicator:
                    chunk_bytes: Optional[int] = None,
                    codec: Optional[str] = None, error_budget: float = 0.0,
                    stacked: bool = True, depth: int = 1,
-                   donate: bool = False, **kw) -> PersistentOp:
+                   donate: bool = False, carry: bool = False,
+                   **kw) -> PersistentOp:
         """Init a :class:`PersistentOp` for ``name`` on a fixed operand
         spec — pass an example operand ``x`` (array or ShapeDtypeStruct) or
         explicit ``shape=``/``dtype=``. The ``(algo, chunks, codec)`` plan
-        is resolved and the executable compiled here, once."""
+        is resolved and the executable compiled here, once.
+
+        ``carry=True`` (allreduce only) threads a per-op state operand:
+        ``op.start(x, carry=state)``; ``handle.wait()`` returns
+        ``(result, new_state)`` — the error-feedback hookup for
+        compressed gradient sync. The resolved algorithm must accept an
+        ``err`` state (the pip family does; ``xla``/``flat_rd`` do not)."""
         if x is not None:
             shape = tuple(x.shape)
             dtype = x.dtype
@@ -477,12 +556,12 @@ class Communicator:
             raise ValueError("persistent op needs an example operand x or "
                              "explicit shape= and dtype=")
         spec = PlanSpec(name, algo, chunks, chunk_bytes, codec,
-                        error_budget, stacked)
+                        error_budget, stacked, carry)
         proto = _Proto(shape, dtype)
         algo_r, kw_r = self._resolve(spec, proto, kw)
         return PersistentOp(self, name, proto.shape, proto.dtype, algo_r,
                             kw_r, stacked=stacked, depth=depth,
-                            donate=donate)
+                            donate=donate, carry=carry)
 
     def allreduce_init(self, x=None, **knobs) -> PersistentOp:
         return self.persistent("allreduce", x, **knobs)

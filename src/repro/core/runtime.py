@@ -390,8 +390,20 @@ def resolve_algo(topo: Topology, collective: str, algo: str, x,
 # ---------------------------------------------------------------------------
 
 
+def supports_carry(collective: str, algo: str) -> bool:
+    """Whether ``(collective, algo)`` can run as a carry-threaded persistent
+    program: the algorithm must accept an ``err`` state operand (the
+    error-feedback carry of the compressed reductions)."""
+    try:
+        fn = _mcoll.algorithm(collective, algo)
+    except KeyError:
+        return False
+    return "err" in _accepted_params(fn)
+
+
 def _construct(mesh, topo: Topology, collective: str, algo: str,
-               stacked: bool, jit: bool, donate: bool, **kw) -> Callable:
+               stacked: bool, jit: bool, donate: bool,
+               carry: bool = False, **kw) -> Callable:
     wiring = _WIRING[collective]
     fn = partial(_mcoll.algorithm(collective, algo), topo=topo, **kw)
     # shard over ALL mesh axes, not just the topology's: operands stay
@@ -406,6 +418,34 @@ def _construct(mesh, topo: Topology, collective: str, algo: str,
         out_mode = "replicate"
     take_row0, stack_out = wiring.take_row0, out_mode == "stack"
 
+    if carry:
+        # carry-threaded variant: a second state operand rides the same
+        # wiring as the payload (error-feedback residuals live at
+        # device-dependent offsets, so both are "row"-sharded) and a fresh
+        # state comes back next to the result — op.start(x, carry=e) ->
+        # (y, new_e). Only algorithms that accept err can be built this way.
+        if not (take_row0 and stack_out):
+            raise ValueError(
+                f"carry operand needs row-in/stack-out wiring; "
+                f"{collective} is {wiring.in_mode}/{wiring.out_mode}")
+        if not supports_carry(collective, algo):
+            raise ValueError(
+                f"{collective}/{algo} does not thread a carry (no err "
+                f"state operand); carry-capable allreduce algorithms: "
+                f"{[a for a in _mcoll.algorithms(collective) if supports_carry(collective, a)]}")
+
+        def body_carry(x, e):
+            y, ne = fn(x[0], err=e[0])
+            return y[None], ne[None]
+
+        spec = _in_spec(wiring.in_mode, ax)
+        mapped = sharded(body_carry, mesh, in_specs=(spec, spec),
+                         out_specs=(_out_spec(out_mode, ax),) * 2,
+                         check=False)
+        if not jit:
+            return mapped
+        return jax.jit(mapped, donate_argnums=(0, 1) if donate else ())
+
     def body(x):
         y = fn(x[0] if take_row0 else x)
         return y[None] if stack_out else y
@@ -419,7 +459,7 @@ def _construct(mesh, topo: Topology, collective: str, algo: str,
 
 def build(mesh, topo: Topology, collective: str, algo: str, *,
           stacked: bool = True, jit: bool = True, donate: bool = False,
-          **kw) -> Callable:
+          carry: bool = False, **kw) -> Callable:
     """Build (or fetch from cache) the jitted shard_map'd callable for one
     collective key. Identical keys return the identical callable object, so
     jit's trace cache is shared across call sites.
@@ -458,8 +498,8 @@ def build(mesh, topo: Topology, collective: str, algo: str, *,
     # fused-codec switch changes the traced program, so it's part of the key
     # (the conformance A/B under compress.jnp_reference_paths must not hit
     # a program built with fusion on, and vice versa).
-    key = (mesh, topo, collective, algo, stacked, jit, donate, _kw_key(kw),
-           _codecs.fused_enabled())
+    key = (mesh, topo, collective, algo, stacked, jit, donate, carry,
+           _kw_key(kw), _codecs.fused_enabled())
     hit = _BUILD_CACHE.get(key)
     if hit is not None:
         _STATS.build_hits += 1
@@ -467,7 +507,7 @@ def build(mesh, topo: Topology, collective: str, algo: str, *,
         return hit
     _STATS.build_misses += 1
     built = _construct(mesh, topo, collective, algo, stacked, jit, donate,
-                       **kw)
+                       carry, **kw)
     _BUILD_CACHE[key] = built
     _evict(_BUILD_CACHE, "build")
     return built
@@ -534,10 +574,19 @@ def input_sharding(mesh, topo: Topology, collective: str) -> NamedSharding:
 def compile_persistent(mesh, topo: Topology, name: str, algo: str,
                        shape: Tuple[int, ...], dtype, *,
                        stacked: bool = True, donate: bool = False,
+                       carry: bool = False,
                        **kw) -> Tuple[Callable, NamedSharding]:
     """AOT-compile one resolved plan for a fixed operand shape/dtype with
     the collective's canonical input sharding pinned (``PersistentOp``
     backend). Returns ``(compiled, in_sharding)``.
+
+    ``carry=True`` compiles the carry-threaded program variant: the
+    executable takes ``(x, carry)`` — both with the payload's shape, dtype
+    and sharding — and returns ``(result, new_carry)``. This is how
+    per-bucket error-feedback state rides a persistent compressed
+    allreduce (``op.start(x, carry=err)`` -> ``handle.wait()`` ->
+    ``(y, new_err)``); only algorithms with an ``err`` state operand
+    support it (:func:`supports_carry`).
 
     Entries live in the same LRU exec cache as :func:`run`, keyed with the
     pinned sharding (a blocking call compiled against a host-local operand
@@ -550,8 +599,8 @@ def compile_persistent(mesh, topo: Topology, name: str, algo: str,
                          "does this)")
     sharding = input_sharding(mesh, topo, name)
     key = (mesh, topo, name, algo, stacked, _kw_key(kw),
-           (tuple(shape), str(jnp.dtype(dtype))), ("persistent", donate),
-           _codecs.fused_enabled())
+           (tuple(shape), str(jnp.dtype(dtype))),
+           ("persistent", donate, carry), _codecs.fused_enabled())
     compiled = _EXEC_CACHE.get(key)
     if compiled is not None:
         _STATS.exec_hits += 1
@@ -559,10 +608,11 @@ def compile_persistent(mesh, topo: Topology, name: str, algo: str,
         return compiled, sharding
     _STATS.exec_misses += 1
     jitted = build(mesh, topo, name, algo, stacked=stacked, jit=True,
-                   donate=donate, **kw)
+                   donate=donate, carry=carry, **kw)
     proto = jax.ShapeDtypeStruct(tuple(shape), jnp.dtype(dtype),
                                  sharding=sharding)
-    compiled = jitted.lower(proto).compile()
+    compiled = (jitted.lower(proto, proto).compile() if carry
+                else jitted.lower(proto).compile())
     _EXEC_CACHE[key] = compiled
     _evict(_EXEC_CACHE, "exec")
     return compiled, sharding

@@ -297,14 +297,21 @@ attend_streaming.defvjp(_streaming_fwd, _streaming_bwd)
 def attend_decode(q, cache_k, cache_v, cur_index, use_kernel: bool = False):
     """One-token decode against a (possibly sharded) KV cache.
 
-    q: (B,1,H,hd); cache: (B,S,KV,hd); cur_index: scalar count of valid
-    positions (the new token is already written at cur_index-1)."""
-    if use_kernel:
+    q: (B,1,H,hd); cache: (B,S,KV,hd); cur_index: count of valid positions
+    (the new token is already written at cur_index-1) — a scalar, or a
+    ``(B,)`` vector of per-row counts (continuous batching: each slot at
+    its own true length). Rows mask independently, so a freshly admitted
+    short row never attends past its own filled positions."""
+    if use_kernel and not getattr(cur_index, "ndim", 0):
         from repro.kernels import ops as kops
         return kops.flash_decode(q, cache_k, cache_v, cur_index)
     s = _gqa_scores(q, cache_k)  # (B,KV,G,1,S)
     S = s.shape[-1]
-    valid = jnp.arange(S)[None, None, None, None, :] < cur_index
+    if getattr(cur_index, "ndim", 0):
+        valid = (jnp.arange(S)[None, None, None, None, :]
+                 < cur_index[:, None, None, None, None])
+    else:
+        valid = jnp.arange(S)[None, None, None, None, :] < cur_index
     s = jnp.where(valid, s, -jnp.inf)
     w = jax.nn.softmax(s, axis=-1)
     return _gqa_out(w, cache_v)
@@ -338,8 +345,13 @@ def apply(p, x, cfg, *, rules=None, mesh=None, mode: str = "causal",
     if cfg.rope != "none" and mode != "cross":
         if positions is None:
             base = cache_index if mode == "decode" else 0
-            positions = jnp.arange(T)[None, :] + base
-            positions = jnp.broadcast_to(positions, (B, T))
+            if getattr(base, "ndim", 0):
+                # per-row decode indices: each slot's rotary position is its
+                # own true length (mixed-length continuous batching)
+                positions = jnp.arange(T)[None, :] + base[:, None]
+            else:
+                positions = jnp.arange(T)[None, :] + base
+                positions = jnp.broadcast_to(positions, (B, T))
         if cfg.rope == "mrope":
             p3 = positions3 if positions3 is not None else \
                 common.text_positions3(positions)
@@ -357,8 +369,19 @@ def apply(p, x, cfg, *, rules=None, mesh=None, mode: str = "causal",
     new_cache = None
     if mode == "decode":
         assert cache is not None and cache_index is not None
-        ck = jax.lax.dynamic_update_slice(cache["k"], k, (0, cache_index, 0, 0))
-        cv = jax.lax.dynamic_update_slice(cache["v"], v, (0, cache_index, 0, 0))
+        if getattr(cache_index, "ndim", 0):
+            # per-row write offsets: slot b's new KV lands at its own true
+            # length, not the batch max (which would leave uninitialized
+            # rows a short sequence then attends over)
+            row_upd = jax.vmap(
+                lambda c, u, i: jax.lax.dynamic_update_slice(c, u, (i, 0, 0)))
+            ck = row_upd(cache["k"], k, cache_index)
+            cv = row_upd(cache["v"], v, cache_index)
+        else:
+            ck = jax.lax.dynamic_update_slice(cache["k"], k,
+                                              (0, cache_index, 0, 0))
+            cv = jax.lax.dynamic_update_slice(cache["v"], v,
+                                              (0, cache_index, 0, 0))
         if mesh is not None and rules is not None:
             from jax.sharding import NamedSharding
             spec = cache_pspec(cfg, rules,

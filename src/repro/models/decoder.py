@@ -239,6 +239,77 @@ def _cycle(h, group, cfg, rules, mesh, flags, caches, cache_index, positions,
     return h, aux_total, new_caches
 
 
+def embed_apply(params, tokens, cfg, *, rules=None, mesh=None,
+                embeds: Optional[jax.Array] = None):
+    """The forward's embedding stage alone: token lookup (+ optional
+    frontend embeds prepended). The entry segment of the backward-segmented
+    train step — its VJP is the embedding-table grad bucket."""
+    h = jnp.take(params["embed"], tokens, axis=0)
+    if embeds is not None:
+        h = jnp.concatenate([embeds.astype(h.dtype), h], axis=1)
+    return constrain(h, ("batch", None, None), rules, mesh)
+
+
+def _mrope_positions3(cfg, B, T, cache_index, positions3):
+    if cfg.rope == "mrope" and positions3 is None:
+        base = cache_index if cache_index is not None else 0
+        if getattr(base, "ndim", 0):
+            # per-slot decode indices: each row's positions start at its own
+            # true length (continuous-batching mixed-length ticks)
+            pos = jnp.arange(T)[None] + base[:, None]
+        else:
+            pos = jnp.broadcast_to(jnp.arange(T)[None] + base, (B, T))
+        positions3 = common.text_positions3(pos)
+    return positions3
+
+
+def _remat_wrap(scan_body, flags: RunFlags):
+    if flags.remat == "full":
+        return jax.checkpoint(scan_body,
+                              policy=jax.checkpoint_policies.nothing_saveable)
+    if flags.remat == "dots":
+        return jax.checkpoint(
+            scan_body,
+            policy=jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims)
+    return scan_body
+
+
+def segment_apply(params, h, cfg, lo: int, hi: int, *, rules=None,
+                  mesh=None, flags: RunFlags = RunFlags(),
+                  positions3: Optional[jax.Array] = None):
+    """Run pattern cycles ``[lo, hi)`` of the stacked groups on hidden
+    state ``h`` (training path: no caches). Returns ``(h, aux_sum)``.
+
+    This is the forward's scan restricted to a static cycle window — the
+    unit the backward-segmented train step takes a per-bucket VJP of, so
+    bucket i's allreduce can start while cycles ``[0, lo)`` are still
+    running backward. ``segment_apply(params, h, cfg, 0, n_cycles(cfg))``
+    is the whole trunk (and is exactly what :func:`forward` runs)."""
+    B, T, _ = h.shape
+    positions3 = _mrope_positions3(cfg, B, T, None, positions3)
+    body = partial(_cycle, cfg=cfg, rules=rules, mesh=mesh, flags=flags,
+                   cache_index=None, positions=None, positions3=positions3)
+
+    def scan_body(carry, group):
+        h, aux, _ = body(carry, group, caches=None)
+        return h, aux
+
+    gslice = jax.tree.map(
+        lambda g: jax.lax.slice_in_dim(g, lo, hi, axis=0), params["groups"])
+    h, auxs = jax.lax.scan(_remat_wrap(scan_body, flags), h, gslice)
+    return h, auxs.sum()
+
+
+def head_apply(params, h, cfg, *, rules=None, mesh=None,
+               flags: RunFlags = RunFlags()):
+    """The forward's output stage alone: final norm + LM head. The exit
+    segment of the backward-segmented train step — its VJP is the
+    (final_norm, lm_head) grad bucket plus the trunk cotangent."""
+    h = common.rmsnorm(h, params["final_norm"]["scale"], cfg.norm_eps)
+    logits = (h @ params["lm_head"]).astype(jnp.dtype(flags.logits_dtype))
+    return constrain(logits, ("batch", None, "vocab"), rules, mesh)
+
+
 def forward(params, tokens, cfg, *, rules=None, mesh=None,
             flags: RunFlags = RunFlags(), caches=None, cache_index=None,
             embeds: Optional[jax.Array] = None,
@@ -248,17 +319,12 @@ def forward(params, tokens, cfg, *, rules=None, mesh=None,
 
     Returns (logits (B, T_total, vocab_padded), aux_loss scalar, new_caches).
     """
-    h = jnp.take(params["embed"], tokens, axis=0)
-    if embeds is not None:
-        h = jnp.concatenate([embeds.astype(h.dtype), h], axis=1)
-    h = constrain(h, ("batch", None, None), rules, mesh)
+    h = embed_apply(params, tokens, cfg, rules=rules, mesh=mesh,
+                    embeds=embeds)
     B, T, D = h.shape
 
     positions = None
-    if cfg.rope == "mrope" and positions3 is None:
-        base = cache_index if cache_index is not None else 0
-        pos = jnp.broadcast_to(jnp.arange(T)[None] + base, (B, T))
-        positions3 = common.text_positions3(pos)
+    positions3 = _mrope_positions3(cfg, B, T, cache_index, positions3)
 
     body = partial(_cycle, cfg=cfg, rules=rules, mesh=mesh, flags=flags,
                    cache_index=cache_index, positions=positions,
@@ -269,15 +335,8 @@ def forward(params, tokens, cfg, *, rules=None, mesh=None,
             h = carry
             h, aux, _ = body(h, group, caches=None)
             return h, aux
-        fn = scan_body
-        if flags.remat == "full":
-            fn = jax.checkpoint(scan_body,
-                                policy=jax.checkpoint_policies.nothing_saveable)
-        elif flags.remat == "dots":
-            fn = jax.checkpoint(
-                scan_body,
-                policy=jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims)
-        h, auxs = jax.lax.scan(fn, h, params["groups"])
+        h, auxs = jax.lax.scan(_remat_wrap(scan_body, flags), h,
+                               params["groups"])
         new_caches = None
         aux = auxs.sum()
     else:
@@ -290,8 +349,5 @@ def forward(params, tokens, cfg, *, rules=None, mesh=None,
                                              (params["groups"], caches))
         aux = auxs.sum()
 
-    h = common.rmsnorm(h, params["final_norm"]["scale"], cfg.norm_eps)
-    logits = (h @ params["lm_head"]).astype(
-        jnp.dtype(flags.logits_dtype))
-    logits = constrain(logits, ("batch", None, "vocab"), rules, mesh)
+    logits = head_apply(params, h, cfg, rules=rules, mesh=mesh, flags=flags)
     return logits, aux, new_caches

@@ -74,13 +74,26 @@ class Engine:
         # Calibration for the sync plan then belongs on ``self.sync_comm``
         # (the group's tuning rows are namespaced by the group tag).
         self.mesh = mesh
-        self.topo = (topo if topo is not None else
-                     (Topology.from_mesh(mesh) if mesh is not None else None))
-        self.comm = (Communicator(mesh, self.topo)
-                     if mesh is not None else None)
+        # Communicator(mesh, None) derives the default node/local topology
+        # when the mesh has those axes, and is an *unscoped root* (topo
+        # None) otherwise — split(axes=...) still works on it, so
+        # sync_axes= remains the way to serve on e.g. a 3-axis MoE mesh.
+        self.comm = (Communicator(mesh, topo) if mesh is not None else None)
+        self.topo = self.comm.topo if self.comm is not None else topo
         self.sync_comm = (self.comm.split(axes=sync_axes)
                           if self.comm is not None and sync_axes is not None
                           else self.comm)
+        if mesh is not None and (self.sync_comm is None
+                                 or self.sync_comm.topo is None):
+            # fail at construction, not on the first mid-serving tick: an
+            # unscoped root would slip past _sync_tokens' world-1 guard and
+            # blow up inside broadcast_init with a live batch in flight
+            raise ValueError(
+                f"engine tick-sync needs a scoped communicator: mesh axes "
+                f"{tuple(mesh.axis_names)} do not map onto the default "
+                f"node/local topology. Pass sync_axes=<axis or (axis, "
+                f"axis)> so the engine scopes the sync via comm.split("
+                f"axes=...), or pass an explicit topo=.")
         self.sync_algo = sync_algo
         self.sync_error_budget = float(sync_error_budget)
         # lazily bound on the first real sync (a world-1 engine never pays
@@ -121,7 +134,11 @@ class Engine:
         if self._sync_op is None or gen != self._sync_gen:
             # (re)resolve the plan: first tick, or the tuning table changed
             # (e.g. a calibration table loaded mid-serving) — re-init is an
-            # exec-cache hit when the resolved plan is unchanged
+            # exec-cache hit when the resolved plan is unchanged. Release
+            # the op being replaced (rebind hygiene: an orphaned op would
+            # linger in the live-op count and pin donated buffers).
+            if self._sync_op is not None:
+                self._sync_op.release()
             self._sync_op = self.sync_comm.broadcast_init(
                 arr, algo=self.sync_algo,
                 error_budget=self.sync_error_budget)
@@ -155,23 +172,25 @@ class Engine:
             for slot in range(self.max_batch):
                 if self.active[slot] is None and queue:
                     self._admit(queue.pop(0), slot)
-            # fused decode tick: every active slot advances one token.
-            # per-slot cache_index differs; we use the max index and rely on
-            # per-slot valid-length masking for correctness of short rows —
-            # a uniform index keeps the step fully batched.
-            idx = int(self.lengths.max())
+            # fused decode tick: every active slot advances one token, each
+            # at its OWN cache index (a (B,) vector): slot b's new KV row
+            # lands at lengths[b] and its attention masks to lengths[b]+1.
+            # A uniform max index would jump a freshly admitted short row
+            # past its true length, leaving uninitialized KV it then
+            # attends over (mixed-length admission corruption).
             toks = np.zeros((self.max_batch, 1), np.int32)
             for slot, req in enumerate(self.active):
                 if req is not None:
                     toks[slot, 0] = req.out_tokens[-1]
             logits, self.caches = self._decode(
-                self.params, self.caches, jnp.asarray(toks), jnp.int32(idx))
+                self.params, self.caches, jnp.asarray(toks),
+                jnp.asarray(self.lengths, jnp.int32))
             nxt = self._sync_tokens(np.asarray(logits[:, 0].argmax(-1)))
             for slot, req in enumerate(self.active):
                 if req is None:
                     continue
                 req.out_tokens.append(int(nxt[slot]))
-                self.lengths[slot] = idx + 1
+                self.lengths[slot] += 1
                 if (len(req.out_tokens) >= req.max_new_tokens or
                         (req.eos_id is not None
                          and req.out_tokens[-1] == req.eos_id)):

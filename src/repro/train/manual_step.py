@@ -32,21 +32,27 @@ Two step shapes are built here:
     of backprop, every bucket serialized inside one computation). Supports
     error-feedback compressed sync.
   * :func:`make_overlapped_train_step` — the **persistent nonblocking**
-    step (the Communicator API's overlap shape): backward is its own
-    compiled program emitting per-bucket gradient segments; each bucket
-    rides a persistent ``comm.allreduce_init`` op (plan resolved +
-    compiled once, reused every step); ``op.start(bucket)`` returns
-    immediately under JAX async dispatch so bucket i's allreduce overlaps
-    the dispatch/execution of bucket i+1 and the downstream optimizer
-    program, and ``handle.wait()`` composes the results back into the
-    update step. The barrier variant of the same decomposition
+    step (the Communicator API's overlap shape): each bucket rides a
+    persistent ``comm.allreduce_init`` op (plan resolved + compiled once,
+    reused every step). With ``segmented="auto"`` (default, decoder
+    family) backprop itself is split into **layer-wise VJP segments**
+    aligned to bucket boundaries: the head/chunk/embed backward programs
+    run newest-to-oldest and ``op.start(bucket_i)`` is issued *between*
+    segment executions, so bucket i's allreduce overlaps bucket i+1's
+    backward **compute** — the PiP-MColl overlap shape — instead of only
+    its dispatch (the monolithic fallback, one backward program emitting
+    all buckets). Compressed buckets thread per-bucket error-feedback
+    residuals through **carry ops** (``op.start(x, carry=err)``;
+    ``handle.wait() -> (y, new_err)``), matching the fused step's EF
+    semantics. The barrier variant of the same decomposition
     (``overlap=False``) waits out each bucket before starting the next —
     the two are bit-identical (same compiled programs, different host
     scheduling), which the check asserts; the benchmark artifact reports
     the step-time delta. ``error_budget`` may be a **schedule**
     ``callable(step) -> float``: the per-bucket codec plan is re-resolved
-    only when the budget crosses a plan boundary (ops rebuilt via the
-    exec cache, so returning to a previous plan never recompiles).
+    only when the budget crosses a plan boundary (old ops released, new
+    ops built via the exec cache, so returning to a previous plan never
+    recompiles).
 
 The pjit path (train.step) remains the default for the dry-run; this path
 is validated against it on multi-device CPU meshes in
@@ -119,10 +125,14 @@ def _resolve_plan(topo: Topology, nbytes: int, dtype, algo: str,
             cd = sel.codec
     elif cd is None and error_budget > 0.0 and \
             mcoll.supports_codec("allreduce", name):
-        cd = min(codecs.for_budget(error_budget),
-                 key=lambda k: costmodel.plan_cost(
-                     "allreduce", name, topo, nbytes, net,
-                     chunks=c or 1, codec=k).time)
+        cands = codecs.for_budget(error_budget)
+        if cands:
+            cd = min(cands,
+                     key=lambda k: costmodel.plan_cost(
+                         "allreduce", name, topo, nbytes, net,
+                         chunks=c or 1, codec=k).time)
+        # else: no codec admissible under this budget — stay lossless
+        # rather than letting min() raise on the empty sequence
     kw = {}
     if c and mcoll.supports_chunks("allreduce", name):
         kw["chunks"] = int(c)
@@ -314,9 +324,21 @@ class OverlappedGradSync:
     scalar-metrics vector (always lossless). ``error_budget`` is a float or
     a schedule ``callable(step) -> float``; plans are re-resolved per step
     but ops are **rebuilt only when a bucket's resolved plan changes**
-    (budget crossing a plan boundary) — and rebuilding goes through the
-    runtime exec cache, so flipping back to an earlier plan is a cache hit,
-    not a recompile. ``rebuilds`` counts those transitions.
+    (budget crossing a plan boundary) — the old ops are :meth:`released
+    <repro.core.comm.PersistentOp.release>` first (rebind hygiene: with
+    ``donate=True`` a dropped-but-unreleased op would pin its donated
+    buffers), and rebuilding goes through the runtime exec cache, so
+    flipping back to an earlier plan is a cache hit, not a recompile.
+    ``rebuilds`` counts those transitions.
+
+    Buckets whose resolved plan carries a codec ride **carry ops**
+    (``start(x, carry=err) -> handle; wait() -> (y, new_err)``): per-bucket
+    error-feedback residuals thread through the persistent op exactly like
+    the fused step's ``err_state``, updated on :meth:`wait`. Lossless
+    buckets use plain ops (bit-identical to the fused lossless sync path's
+    reduction). ``errs`` holds the live per-bucket state (``None`` for
+    lossless buckets); it resets to zeros when a plan change rebuilds an
+    op.
     """
 
     def __init__(self, comm, slices: List[Tuple[int, int]], metric_len: int,
@@ -333,6 +355,7 @@ class OverlappedGradSync:
         self._plans: Optional[List[Tuple[str, dict]]] = None
         self._last_budget: Optional[float] = None
         self._ops: List = []
+        self.errs: List = []
         self._metric_op = None
 
     def budget_at(self, step: int) -> float:
@@ -362,13 +385,19 @@ class OverlappedGradSync:
         plans = self._resolve(budget)
         if plans == self._plans:
             return
+        for op in self._ops:
+            op.release()
         world = self.comm.topo.world
         self._ops = [
             self.comm.allreduce_init(
                 shape=(world, n), dtype=jnp.float32, algo=name,
                 chunks=kw.get("chunks"), codec=kw.get("codec"),
-                donate=self.donate)
+                donate=self.donate,
+                carry=bool(kw.get("codec"))
+                and runtime.supports_carry("allreduce", name))
             for (_, n), (name, kw) in zip(self.slices, plans)]
+        self.errs = [jnp.zeros(op.shape, jnp.float32) if op.carry else None
+                     for op in self._ops]
         if self._metric_op is None:
             # scalar metrics always sync lossless, with the same pinned
             # algorithm family as the gradient plan (budget 0)
@@ -382,6 +411,33 @@ class OverlappedGradSync:
             self.rebuilds += 1
         self._plans = plans
 
+    # -- per-bucket start/wait (the segmented step interleaves these with
+    # its backward-segment programs) ----------------------------------------
+
+    def start(self, i: int, payload):
+        """Start bucket ``i``'s persistent allreduce (threading its EF
+        carry when the plan compresses); returns the handle."""
+        op = self._ops[i]
+        if op.carry:
+            return op.start(payload, carry=self.errs[i])
+        return op.start(payload)
+
+    def wait(self, i: int, handle, block: bool = False):
+        """Complete bucket ``i``: returns the reduced payload and absorbs
+        the new error-feedback state for carry buckets."""
+        if self._ops[i].carry:
+            y, new_err = handle.wait(block=block)
+            self.errs[i] = new_err
+            return y
+        return handle.wait(block=block)
+
+    def run(self, i: int, payload):
+        """Barrier-style bucket ``i``: start and block out the wait."""
+        return self.wait(i, self.start(i, payload), block=True)
+
+    def start_metric(self, mvec):
+        return self._metric_op.start(mvec)
+
     def sync(self, buckets, mvec, overlap: bool = True):
         """Allreduce every bucket + the metrics vector.
 
@@ -391,15 +447,14 @@ class OverlappedGradSync:
         barrier-style reference — each bucket fully completes before the
         next starts. Same ops either way, so results are bit-identical.
         """
-        ops = self._ops + [self._metric_op]
-        payloads = list(buckets) + [mvec]
         if overlap:
-            handles = [op.start(b) for op, b in zip(ops, payloads)]
-            synced = [h.wait(block=False) for h in handles]
-        else:
-            synced = [op.start(b).wait(block=True)
-                      for op, b in zip(ops, payloads)]
-        return synced[:-1], synced[-1]
+            handles = [self.start(i, b) for i, b in enumerate(buckets)]
+            mh = self.start_metric(mvec)
+            synced = [self.wait(i, h, block=False)
+                      for i, h in enumerate(handles)]
+            return synced, mh.wait(block=False)
+        synced = [self.run(i, b) for i, b in enumerate(buckets)]
+        return synced, self.start_metric(mvec).wait(block=True)
 
 
 class _OverlappedStep:
@@ -408,12 +463,30 @@ class _OverlappedStep:
     Lazily builds its compiled backward/apply programs from the first
     (params, batch) it sees (payload shapes and the metric-key set are
     static from there on).
+
+    Two decompositions (``.mode`` after the first call):
+
+    * ``"monolithic"`` — one backward program emitting every bucket, then
+      all per-bucket allreduces. Only the *dispatch* of the allreduces
+      overlaps (bucket i's comm vs bucket i+1's dispatch).
+    * ``"segmented"`` — backprop is split into layer-wise VJP segments
+      aligned to bucket boundaries: a forward program records the hidden
+      state at each segment boundary, the head/chunk/embed backward
+      programs run newest-to-oldest, and bucket i's persistent allreduce
+      **starts between segment executions** — its communication overlaps
+      bucket i+1's backward *compute*, the PiP-MColl overlap shape (DDP-
+      style gradient bucketing). Available for the decoder family
+      (``params`` = embed/groups/final_norm/lm_head, no frontend embeds,
+      ``microbatches == 1``); grads match the monolithic decomposition to
+      fp32 tolerance but are **not** bitwise against it (segment-shaped
+      XLA programs reduce in a different order) — bitwise identity holds
+      between the overlap/barrier twins of the *same* decomposition.
     """
 
     def __init__(self, cfg, tcfg: TrainConfig, mesh, topo,
                  algo: str, error_budget, bucket_bytes: int,
                  chunks: Optional[int], codec: Optional[str],
-                 overlap: bool, donate: bool):
+                 overlap: bool, donate: bool, segmented="auto"):
         self.cfg, self.tcfg = cfg, tcfg
         self.comm, self.topo = _comm_topo(mesh, topo)
         self.mesh = mesh
@@ -422,14 +495,49 @@ class _OverlappedStep:
         self._budget = error_budget
         self.bucket_bytes = int(bucket_bytes)
         self.donate = bool(donate)
+        self.segmented = segmented
+        self.mode: Optional[str] = None
         self.grad_sync: Optional[OverlappedGradSync] = None
         self._backward_c = None
         self._apply_c = None
         self._auto_step = 0
+        # segmented-mode programs
+        self._fwd_c = None
+        self._head_bwd_c = None
+        self._chunk_bwd_c: List = []
+        self._embed_bwd_c = None
+        self.bounds: List[Tuple[int, int]] = []
 
     # -- lazy build ---------------------------------------------------------
 
+    def _segment_support(self, params, batch) -> Optional[str]:
+        """None when the segmented decomposition applies, else the reason
+        it does not (the decomposition mirrors decoder.forward exactly)."""
+        if getattr(self.cfg, "family", None) == "encdec":
+            return "encoder-decoder family"
+        if self.tcfg.microbatches != 1:
+            return "microbatch gradient accumulation"
+        if not (isinstance(params, dict)
+                and set(params) == {"embed", "groups", "final_norm",
+                                    "lm_head"}):
+            return "non-decoder parameter tree"
+        if isinstance(batch, dict) and batch.get("embeds") is not None:
+            return "frontend embeds in the batch"
+        return None
+
     def _build(self, params, batch):
+        why_not = self._segment_support(params, batch)
+        if self.segmented and why_not is None:
+            self.mode = "segmented"
+            return self._build_segmented(params, batch)
+        if self.segmented is True:
+            raise ValueError(
+                f"segmented=True but the segmented backward does not "
+                f"apply here: {why_not}")
+        self.mode = "monolithic"
+        return self._build_monolithic(params, batch)
+
+    def _build_monolithic(self, params, batch):
         cfg, tcfg, topo = self.cfg, self.tcfg, self.topo
         leaves = jax.tree.leaves(params)
         treedef = jax.tree.structure(params)
@@ -487,18 +595,213 @@ class _OverlappedStep:
             self.comm, slices, len(mkeys) + 1, algo=algo, chunks=chunks,
             codec=codec, error_budget=self._budget, donate=self.donate)
 
+    def _build_segmented(self, params, batch):
+        from repro.models import decoder
+        from repro.train.step import cross_entropy
+
+        cfg, tcfg, topo = self.cfg, self.tcfg, self.topo
+        flags = tcfg.flags
+        moe_w = cfg.moe.aux_loss_weight if cfg.moe else 0.0
+        world, ax = topo.world, topo.active_axes
+
+        # segment boundaries: whole pattern cycles, sized so one chunk's
+        # group grads fill ~bucket_bytes (fp32 wire dtype)
+        gleaves = jax.tree.leaves(params["groups"])
+        gdef = jax.tree.structure(params["groups"])
+        nc = int(jnp.shape(gleaves[0])[0])
+        cycle_elems = sum(int(jnp.size(l)) // nc for l in gleaves)
+        seg = min(nc, max(1, (self.bucket_bytes // 4) // max(1, cycle_elems)))
+        bounds = [(lo, min(lo + seg, nc)) for lo in range(0, nc, seg)]
+        self.bounds = bounds
+        K = len(bounds)
+
+        # per-chunk flat layout: the group leaves sliced to the chunk's
+        # cycle window, flattened in tree-leaf order
+        def chunk_meta(lo, hi):
+            metas = []
+            for l in gleaves:
+                shape = ((hi - lo),) + tuple(jnp.shape(l)[1:])
+                metas.append((shape, int(jnp.size(l)) // nc * (hi - lo)))
+            return metas
+
+        head_meta = [(jnp.shape(params["final_norm"]["scale"]),
+                      int(jnp.size(params["final_norm"]["scale"]))),
+                     (jnp.shape(params["lm_head"]),
+                      int(jnp.size(params["lm_head"])))]
+        embed_shape = jnp.shape(params["embed"])
+        sizes = ([sum(s for _, s in head_meta)]
+                 + [sum(s for _, s in chunk_meta(lo, hi))
+                    for lo, hi in reversed(bounds)]
+                 + [int(jnp.size(params["embed"]))])
+        mkeys = ["aux", "ce", "tokens"]  # loss_fn's scalar metrics, sorted
+
+        def _flat32(leaves_):
+            parts = [jnp.asarray(l, jnp.float32).reshape(-1) for l in leaves_]
+            return jnp.concatenate(parts) if len(parts) > 1 else parts[0]
+
+        # (1) forward: record the hidden state entering every segment
+        def fwd(params, batch):
+            h = decoder.embed_apply(params, batch["tokens"], cfg)
+            hs, aux = [], jnp.zeros((), jnp.float32)
+            for lo, hi in bounds:
+                hs.append(h)
+                h, a = decoder.segment_apply(params, h, cfg, lo, hi,
+                                             flags=flags)
+                aux = aux + jnp.asarray(a, jnp.float32)
+            return tuple(hs) + (h, aux[None])
+
+        self._fwd_c = jax.jit(runtime.sharded(
+            fwd, self.mesh, in_specs=(P(), P(ax)),
+            out_specs=(P(ax),) * (K + 1) + (P(ax),), check=False))
+
+        # (2) head backward: loss + (final_norm, lm_head) bucket + trunk
+        # cotangent + the packed metrics vector
+        def head_bwd(params, h_out, aux, batch):
+            hp = {"final_norm": params["final_norm"],
+                  "lm_head": params["lm_head"]}
+
+            def head_loss(hp_, h_):
+                logits = decoder.head_apply(hp_, h_, cfg, flags=flags)
+                return cross_entropy(logits, batch["labels"], tcfg.z_loss)
+
+            ce, vjp, n = jax.vjp(head_loss, hp, h_out, has_aux=True)
+            dhp, dh = vjp(jnp.ones((), ce.dtype))
+            a = aux[0]
+            loss = jnp.asarray(ce, jnp.float32) + moe_w * a
+            metrics = {"aux": a, "ce": ce, "tokens": n}
+            mvec = jnp.stack(
+                [loss] + [jnp.asarray(metrics[k], jnp.float32)
+                          for k in mkeys])
+            return _flat32(jax.tree.leaves(dhp))[None], dh, mvec[None]
+
+        self._head_bwd_c = jax.jit(runtime.sharded(
+            head_bwd, self.mesh, in_specs=(P(), P(ax), P(ax), P(ax)),
+            out_specs=(P(ax, None), P(ax), P(ax, None)), check=False))
+
+        # (3) one backward program per segment: VJP of that cycle window,
+        # emitting its grad bucket + the cotangent for the segment below
+        def make_chunk_bwd(lo, hi):
+            def chunk_bwd(params, h_in, dh):
+                def seg(p, h_):
+                    return decoder.segment_apply(p, h_, cfg, lo, hi,
+                                                 flags=flags)
+
+                (_, aux_k), vjp_k = jax.vjp(seg, params, h_in)
+                dp, dh_in = vjp_k((dh, jnp.asarray(moe_w, aux_k.dtype)))
+                gg = jax.tree.map(
+                    lambda g: lax.slice_in_dim(g, lo, hi, axis=0),
+                    dp["groups"])
+                return _flat32(jax.tree.leaves(gg))[None], dh_in
+
+            return jax.jit(runtime.sharded(
+                chunk_bwd, self.mesh, in_specs=(P(), P(ax), P(ax)),
+                out_specs=(P(ax, None), P(ax)), check=False))
+
+        self._chunk_bwd_c = [make_chunk_bwd(lo, hi) for lo, hi in bounds]
+
+        # (4) embedding backward: the final (oldest) bucket
+        def embed_bwd(params, batch, dh0):
+            _, vjp_e = jax.vjp(
+                lambda p: decoder.embed_apply(p, batch["tokens"], cfg),
+                params)
+            de = vjp_e(dh0)[0]["embed"]
+            return jnp.asarray(de, jnp.float32).reshape(-1)[None]
+
+        self._embed_bwd_c = jax.jit(runtime.sharded(
+            embed_bwd, self.mesh, in_specs=(P(), P(ax), P(ax)),
+            out_specs=P(ax, None), check=False))
+
+        # (5) apply: reassemble the param-tree grads from the synced
+        # buckets (start order: head, chunk_{K-1}..chunk_0, embed)
+        cmetas = [chunk_meta(lo, hi) for lo, hi in bounds]
+
+        def unflatten(flat, metas):
+            out, off = [], 0
+            for shape, size in metas:
+                out.append(lax.slice_in_dim(flat, off, off + size,
+                                            axis=0).reshape(shape))
+                off += size
+            return out
+
+        def apply(params, opt_state, *synced):
+            buckets, mvec = synced[:-1], synced[-1]
+            head = buckets[0][0] / world
+            chunks_fwd = [buckets[1 + j][0] / world
+                          for j in range(K)][::-1]
+            emb = buckets[1 + K][0] / world
+            scale_g, lm_g = unflatten(head, head_meta)
+            gtrees = [jax.tree_util.tree_unflatten(gdef, unflatten(f, m))
+                      for f, m in zip(chunks_fwd, cmetas)]
+            ggroups = (jax.tree.map(
+                lambda *xs: jnp.concatenate(xs, axis=0), *gtrees)
+                if K > 1 else gtrees[0])
+            grads = {"embed": emb.reshape(embed_shape),
+                     "final_norm": {"scale": scale_g},
+                     "groups": ggroups, "lm_head": lm_g}
+            new_params, new_opt, om = adamw.update(params, grads, opt_state,
+                                                   tcfg.optimizer)
+            mv = mvec[0] / world
+            metrics = {k: mv[i + 1] for i, k in enumerate(mkeys)}
+            metrics = dict(metrics, **om, loss=mv[0])
+            return new_params, new_opt, metrics
+
+        mapped = runtime.sharded(
+            apply, self.mesh,
+            in_specs=(P(), P()) + (P(ax, None),) * (len(sizes) + 1),
+            out_specs=(P(), P(), P()), check=False)
+        self._apply_c = jax.jit(mapped, donate_argnums=(0, 1))
+
+        algo, chunks, codec = self._knobs
+        self.grad_sync = OverlappedGradSync(
+            self.comm, [(0, n) for n in sizes], len(mkeys) + 1, algo=algo,
+            chunks=chunks, codec=codec, error_budget=self._budget,
+            donate=self.donate)
+
     # -- the step -----------------------------------------------------------
+
+    def _segmented_step(self, params, opt_state, batch):
+        """Backward newest-to-oldest, starting bucket i's allreduce before
+        computing segment i+1's backward — under async dispatch bucket i's
+        communication runs while the next segment's VJP executes. The
+        barrier twin blocks out each bucket before touching the next
+        segment (same compiled programs, so the two are bit-identical)."""
+        gs, K = self.grad_sync, len(self.bounds)
+        outs = self._fwd_c(params, batch)
+        hs, h_out, aux = outs[:K], outs[K], outs[K + 1]
+        head_flat, dh, mvec = self._head_bwd_c(params, h_out, aux, batch)
+        if self.overlap:
+            handles = [gs.start(0, head_flat)]
+            mh = gs.start_metric(mvec)
+            for j, k in enumerate(range(K - 1, -1, -1)):
+                bflat, dh = self._chunk_bwd_c[k](params, hs[k], dh)
+                handles.append(gs.start(1 + j, bflat))
+            handles.append(
+                gs.start(K + 1, self._embed_bwd_c(params, batch, dh)))
+            synced = [gs.wait(i, h, block=False)
+                      for i, h in enumerate(handles)]
+            mvec_s = mh.wait(block=False)
+        else:
+            synced = [gs.run(0, head_flat)]
+            mvec_s = gs.start_metric(mvec).wait(block=True)
+            for j, k in enumerate(range(K - 1, -1, -1)):
+                bflat, dh = self._chunk_bwd_c[k](params, hs[k], dh)
+                synced.append(gs.run(1 + j, bflat))
+            synced.append(
+                gs.run(K + 1, self._embed_bwd_c(params, batch, dh)))
+        return self._apply_c(params, opt_state, *synced, mvec_s)
 
     def __call__(self, params, opt_state, batch, step: Optional[int] = None):
         """One train step. ``step`` feeds the error-budget schedule (when a
         callable was given); defaults to an internal counter. Returns
         ``(new_params, new_opt_state, metrics)``."""
-        if self._backward_c is None:
+        if self.mode is None:
             self._build(params, batch)
         if step is None:
             step = self._auto_step
         self._auto_step = int(step) + 1
         self.grad_sync.ensure_ops(int(step))
+        if self.mode == "segmented":
+            return self._segmented_step(params, opt_state, batch)
         outs = self._backward_c(params, batch)
         synced, mvec = self.grad_sync.sync(outs[:-1], outs[-1],
                                            overlap=self.overlap)
@@ -511,22 +814,33 @@ def make_overlapped_train_step(cfg, tcfg: TrainConfig, mesh, topo,
                                chunks: Optional[int] = None,
                                codec: Optional[str] = None,
                                overlap: bool = True,
-                               donate: bool = False) -> _OverlappedStep:
+                               donate: bool = False,
+                               segmented="auto") -> _OverlappedStep:
     """Bucketed DP train step with **persistent nonblocking** gradient sync
     (the Communicator overlap shape; see the module docstring).
 
     Same data-parallel semantics as :func:`make_manual_train_step`
     (bucketed, algo/chunks/codec knobs, loss+scalar-metric sync lossless,
     ``topo`` may be a Topology or a group Communicator from
-    ``comm.split``) with two differences: ``error_budget`` may be a schedule
-    ``callable(step) -> float`` (codec plan re-resolved only at plan
-    boundaries), and there is no error-feedback state (stateless
-    compression only — feedback threading needs the fused step). The
-    returned step is ``step(params, opt_state, batch, step=None) ->
-    (params, opt_state, metrics)``; its ``.grad_sync`` exposes the
-    persistent ops (plan keys, rebuild count) for tests/benchmarks.
+    ``comm.split``), including error feedback: compressed buckets thread
+    per-bucket EF residuals through **carry ops** (``start(x, carry=err)``)
+    exactly like the fused step's ``err_state``, so the two paths no
+    longer diverge semantically. ``error_budget`` may additionally be a
+    schedule ``callable(step) -> float`` (codec plan re-resolved only at
+    plan boundaries; ops released and rebuilt through the exec cache).
+
+    ``segmented`` selects the backward decomposition: ``"auto"`` (default)
+    uses layer-wise VJP segments when the model supports it — bucket i's
+    allreduce then overlaps bucket i+1's backward *compute*, not just its
+    dispatch — falling back to the monolithic backward otherwise;
+    ``True`` requires it (raises when unsupported); ``False`` pins the
+    monolithic shape. The returned step is ``step(params, opt_state,
+    batch, step=None) -> (params, opt_state, metrics)``; ``.mode`` names
+    the decomposition chosen and ``.grad_sync`` exposes the persistent ops
+    (plan keys, rebuild count, EF state) for tests/benchmarks.
     ``overlap=False`` builds the barrier-style variant of the same
     decomposition — bit-identical results, no pipelining.
     """
     return _OverlappedStep(cfg, tcfg, mesh, topo, algo, error_budget,
-                           bucket_bytes, chunks, codec, overlap, donate)
+                           bucket_bytes, chunks, codec, overlap, donate,
+                           segmented=segmented)

@@ -1,8 +1,13 @@
 """Validate the manual mcoll train step against the pjit reference on a
 (node x local) CPU mesh: same loss trajectory, the compressed variant
 stays within quantization tolerance, the overlapped (persistent
-nonblocking) gradient sync is bit-exact vs its barrier-style twin, and
-the error-budget schedule hook re-resolves plans only at boundaries."""
+nonblocking) gradient sync is bit-exact vs its barrier-style twin — in
+both its decompositions (backward-segmented layer-wise VJP, the default
+where supported, and monolithic) and with per-bucket error-feedback
+threading through carry ops under a codec — the error-budget schedule
+hook re-resolves plans only at boundaries, and plan rebinds release the
+ops they replace (live-op count stays flat under an oscillating
+schedule)."""
 import sys
 N, P = int(sys.argv[1]), int(sys.argv[2])
 
@@ -142,6 +147,13 @@ assert worst_ov == 0.0, f"overlapped sync not bit-exact: {worst_ov}"
 assert float(om1["loss"]) == float(bm1["loss"]), (om1["loss"], bm1["loss"])
 np.testing.assert_allclose(float(om1["loss"]), float(ref_m["loss"]),
                            rtol=1e-5)
+# ... and the segmented decomposition's UPDATE agrees with the pjit
+# reference within bf16 rounding (its grads differ from the monolithic
+# backward only by XLA reduction order, ~2^-11 relative)
+seg_ref_diffs = jax.tree.map(lambda a, b: float(jnp.abs(
+    a.astype(jnp.float32) - b.astype(jnp.float32)).max()), ref_p, op1)
+worst_seg_ref = max(jax.tree.leaves(seg_ref_diffs))
+assert worst_seg_ref < 5e-2, worst_seg_ref
 assert len(step_ov.grad_sync.plans()) > 1, "expected multiple buckets"
 # persistent ops compile once: further steps add no exec-cache misses
 _misses0 = _rt2.cache_stats().exec_misses
@@ -175,8 +187,88 @@ for i in range(4):
     sched_losses.append(float(ms["loss"]))
 assert sched_losses[-1] < sched_losses[0], sched_losses
 
+# --- backward-segmented decomposition ------------------------------------
+# the overlapped steps above resolved segmented="auto" -> the layer-wise
+# VJP decomposition (decoder family, microbatches=1): bucket i's allreduce
+# is in flight while bucket i+1's backward segment computes. The monolithic
+# decomposition must still be constructible and agree on the loss (its
+# grads differ from segmented only by XLA reduction-order rounding).
+assert step_ov.mode == "segmented", step_ov.mode
+assert step_ba.mode == "segmented", step_ba.mode
+assert len(step_ov.bounds) >= 1, step_ov.bounds
+pm = decoder.init(key, cfg)
+om_ = adamw.init(pm, ocfg)
+step_mono = manual_step.make_overlapped_train_step(
+    cfg, tcfg, mesh, topo, algo="pip_pipeline", bucket_bytes=256 << 10,
+    segmented=False)
+_, _, mm = step_mono(pm, om_, batch)
+assert step_mono.mode == "monolithic", step_mono.mode
+np.testing.assert_allclose(float(mm["loss"]), float(ref_m["loss"]),
+                           rtol=1e-5)
+
+# segmented + compressed: per-bucket error feedback rides the CARRY ops
+# (start(x, carry=err) -> (y, new_err)); the overlap/barrier twins stay
+# bit-identical because the threaded state makes each step a pure function
+# of (params, opt, errs, batch), identically scheduled either way
+pe1 = decoder.init(key, cfg)
+oe1 = adamw.init(pe1, ocfg)
+step_ef = manual_step.make_overlapped_train_step(
+    cfg, tcfg, mesh, topo, algo="pip_mcoll", error_budget=BUDGET,
+    codec="int8_block", bucket_bytes=64 << 10, overlap=True)
+pe2 = jax.tree.map(jnp.copy, pe1)
+oe2 = jax.tree.map(jnp.copy, oe1)
+step_ef_ba = manual_step.make_overlapped_train_step(
+    cfg, tcfg, mesh, topo, algo="pip_mcoll", error_budget=BUDGET,
+    codec="int8_block", bucket_bytes=64 << 10, overlap=False)
+ef_losses = []
+for i in range(3):
+    pe1, oe1, me1 = step_ef(pe1, oe1, batch)
+    pe2, oe2, me2 = step_ef_ba(pe2, oe2, batch)
+    assert float(me1["loss"]) == float(me2["loss"]), (me1, me2)
+    ef_losses.append(float(me1["loss"]))
+ef_diffs = jax.tree.map(
+    lambda a, b: float(jnp.abs(a.astype(jnp.float32)
+                               - b.astype(jnp.float32)).max()), pe1, pe2)
+worst_ef = max(jax.tree.leaves(ef_diffs))
+assert worst_ef == 0.0, f"compressed overlap twins diverged: {worst_ef}"
+assert ef_losses[-1] < ef_losses[0], ef_losses
+gse = step_ef.grad_sync
+assert all(op.carry for op in gse._ops), gse.plans()
+assert all(float(jnp.abs(e).max()) > 0 for e in gse.errs), \
+    "per-bucket carry feedback never engaged"
+
+# --- rebind hygiene under the REAL resolver ------------------------------
+# an oscillating budget schedule crosses a plan boundary every step on this
+# topology (pip_mcoll resolves lossless at 0.0, @int8_block at BUDGET);
+# every rebuild must release the ops it replaces, so the process-wide
+# live-op count stays flat however often the schedule oscillates
+from repro.core import comm as _comm_mod
+from repro.core.comm import Communicator
+gs2 = manual_step.OverlappedGradSync(
+    Communicator(mesh, topo), [(0, 65536), (65536, 2 * 65536)],
+    metric_len=4, algo="pip_mcoll",  # 256 KiB buckets: the same regime the
+    error_budget=lambda s: BUDGET if s % 2 else 0.0)  # sched leg proved
+    # resolves lossless at 0.0 and @int8_block at BUDGET
+rngp = np.random.default_rng(0)
+pay = [jnp.asarray(rngp.standard_normal((topo.world, n)), jnp.float32)
+       for _, n in gs2.slices]
+mv = jnp.ones((topo.world, 4), jnp.float32)
+gs2.ensure_ops(0)
+live0 = _comm_mod.live_persistent_ops()
+for s in range(8):
+    gs2.ensure_ops(s)
+    assert _comm_mod.live_persistent_ops() == live0, (s, live0)
+    synced, _ = gs2.sync(pay, mv)
+    assert all(np.isfinite(np.asarray(x)).all() for x in synced)
+assert gs2.rebuilds == 7, gs2.rebuilds
+assert gs2.plans() == ["pip_mcoll@int8_block"] * 2, gs2.plans()
+assert all(op.carry for op in gs2._ops)
+
 print(f"manual_step_check N={N} P={P}: OK worst_param_diff={worst:.2e} "
       f"bucketed_bitexact_diff={worst_bucket:.1e} "
       f"overlapped_bitexact_diff={worst_ov:.1e} "
+      f"segments={len(step_ov.bounds)} "
+      f"ef_twin_diff={worst_ef:.1e} "
       f"sched_rebuilds={step_ad.grad_sync.rebuilds} "
+      f"osc_rebuilds={gs2.rebuilds} "
       f"compressed_losses={losses[0]:.4f}->{losses[-1]:.4f}")

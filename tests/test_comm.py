@@ -344,6 +344,124 @@ def test_persistent_donate_is_a_distinct_program():
     assert runtime.cache_stats().exec_misses == 2
 
 
+def test_persistent_carry_roundtrip_and_arg_pairing():
+    """A carry op's wait() returns (result, new_state) matching the
+    runtime's carry-threaded program, and start() enforces the carry-arg
+    pairing both ways (carry op without state / plain op with state)."""
+    mesh, topo = _mesh_topo()
+    comm = Communicator(mesh, topo)
+    rng = np.random.default_rng(7)
+    x = jnp.asarray(rng.standard_normal((1, 96)), jnp.float32)
+    e0 = jnp.asarray(rng.standard_normal((1, 96)), jnp.float32)
+    op = comm.allreduce_init(x, algo="pip_mcoll", codec="int8_block",
+                             carry=True)
+    assert op.carry and op.codec == "int8_block"
+    y, e1 = op.start(x, carry=e0).wait()
+    fn = runtime.build(mesh, topo, "allreduce", "pip_mcoll", carry=True,
+                       codec="int8_block")
+    ry, re1 = fn(x, e0)
+    np.testing.assert_array_equal(np.asarray(y), np.asarray(ry))
+    np.testing.assert_array_equal(np.asarray(e1), np.asarray(re1))
+    # threading the returned state back in is a valid (and the intended)
+    # next start; the op stays reusable
+    y2, _ = op.start(x, carry=e1).wait()
+    assert np.isfinite(np.asarray(y2)).all()
+    with pytest.raises(ValueError, match="requires carry=state"):
+        op.start(x)
+    plain = comm.allreduce_init(x, algo="pip_mcoll")
+    with pytest.raises(ValueError, match="does not take a carry"):
+        plain.start(x, carry=e0)
+    with pytest.raises(ValueError, match="carry"):
+        op.start(x, carry=jnp.zeros((1, 8), jnp.float32))  # wrong spec
+
+
+def test_persistent_carry_needs_err_capable_algorithm():
+    """carry=True is the error-feedback hookup: only algorithms with an
+    err state operand (the pip family) compile it; xla does not."""
+    mesh, topo = _mesh_topo()
+    comm = Communicator(mesh, topo)
+    assert runtime.supports_carry("allreduce", "pip_mcoll")
+    assert runtime.supports_carry("allreduce", "pip_pipeline")
+    assert not runtime.supports_carry("allreduce", "xla")
+    with pytest.raises(ValueError, match="carry"):
+        comm.allreduce_init(shape=(1, 8), dtype=jnp.float32, algo="xla",
+                            carry=True)
+    with pytest.raises(ValueError, match="only supported on allreduce"):
+        PlanSpec("broadcast", carry=True)
+
+
+def test_persistent_release_semantics():
+    """release() retires the op from the live-op count (idempotently) and
+    makes any further start() raise; re-init of the same spec is an
+    exec-cache hit, not a recompile."""
+    mesh, topo = _mesh_topo()
+    comm = Communicator(mesh, topo)
+    runtime.clear_cache()
+    z = jnp.ones((1, 48), jnp.float32)
+    base = comm_mod.live_persistent_ops()
+    op = comm.allreduce_init(z, algo="pip_mcoll")
+    assert comm_mod.live_persistent_ops() == base + 1
+    assert not op.released
+    op.release()
+    assert op.released
+    assert comm_mod.live_persistent_ops() == base
+    op.release()  # idempotent: no double-decrement
+    assert comm_mod.live_persistent_ops() == base
+    with pytest.raises(RuntimeError, match="released"):
+        op.start(z)
+    misses = runtime.cache_stats().exec_misses
+    op2 = comm.allreduce_init(z, algo="pip_mcoll")
+    assert runtime.cache_stats().exec_misses == misses  # cache hit
+    np.testing.assert_array_equal(np.asarray(op2(z)), np.asarray(z))
+    op2.release()
+
+
+def test_overlapped_sync_releases_ops_on_plan_rebind():
+    """Rebind hygiene across budget-schedule plan crossings: every rebuild
+    of OverlappedGradSync's bucket ops releases the ops it replaces, so the
+    process-wide live-op count stays flat however many times the schedule
+    crosses a plan boundary. (The resolver is monkeypatched to alternate
+    plans deterministically — on a world-1 topology the real cost model
+    resolves every budget to the same lossless plan, which would make the
+    crossing a no-op; the 8-device flatness check with the real resolver
+    lives in tests/checks/manual_step_check.py.)"""
+    from repro.train import manual_step
+
+    mesh, topo = _mesh_topo()
+    comm = Communicator(mesh, topo)
+
+    def fake_resolve(topo_, nbytes, dtype, algo, chunks, codec, budget):
+        if budget > 0.0:
+            return "pip_mcoll", {"codec": "int8_block"}
+        return "pip_mcoll", {}
+
+    orig = manual_step._resolve_plan
+    manual_step._resolve_plan = fake_resolve
+    try:
+        sched = lambda step: 0.05 if (step // 2) % 2 else 0.0
+        gs = manual_step.OverlappedGradSync(
+            comm, [(0, 32), (32, 96)], metric_len=4, algo="pip_mcoll",
+            error_budget=sched)
+        gs.ensure_ops(0)
+        base = comm_mod.live_persistent_ops()
+        assert gs.plans() == ["pip_mcoll", "pip_mcoll"]
+        assert [op.carry for op in gs._ops] == [False, False]
+        payloads = [jnp.ones((1, n), jnp.float32) for _, n in gs.slices]
+        mvec = jnp.zeros((1, 4), jnp.float32)
+        for step in range(12):
+            gs.ensure_ops(step)
+            # every crossing rebuilds, none leaks: live count never grows
+            assert comm_mod.live_persistent_ops() == base
+            synced, _ = gs.sync(payloads, mvec, overlap=bool(step % 2))
+            assert all(np.isfinite(np.asarray(s)).all() for s in synced)
+        assert gs.rebuilds == 5  # budget crossed a plan boundary 5 times
+        assert gs.plans() == ["pip_mcoll@int8_block"] * 2
+        assert all(op.carry for op in gs._ops)
+        assert all(e is not None for e in gs.errs)
+    finally:
+        manual_step._resolve_plan = orig
+
+
 # ---------------------------------------------------------------------------
 # regression grep: the retired free-function shims stay retired
 # ---------------------------------------------------------------------------

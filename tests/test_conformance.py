@@ -235,6 +235,47 @@ def test_persistent_rejects_operand_spec_mismatch():
         op.start(_operand("allreduce", 8, "int32"))
 
 
+CARRY_ALGOS = sorted({algo for coll, algo in CODEC_PAIRS
+                      if coll == "allreduce"
+                      and runtime.supports_carry("allreduce", algo)})
+
+
+@pytest.mark.parametrize("cd", sorted(compress.lossy()))
+@pytest.mark.parametrize("algo", CARRY_ALGOS)
+def test_persistent_carry_threads_error_feedback(algo, cd):
+    """The carry-threaded persistent op (``start(x, carry=err)`` ->
+    ``wait() -> (y, new_err)``) is the per-bucket error-feedback hookup of
+    the overlapped gradient sync: its result must stay inside the codec's
+    stated collective bound, match the runtime's carry program bitwise
+    (shared lowering), and be deterministic so the overlap/barrier step
+    twins stay bit-identical."""
+    if not _feasible("allreduce", algo):
+        pytest.skip(f"{algo} infeasible on {N}x{P}")
+    x = _operand("allreduce", 80, "float32")
+    e0 = jnp.zeros_like(x)
+    op = COMM.persistent("allreduce", x, algo=algo, codec=cd, carry=True)
+    assert op.carry
+    y1, e1 = op.start(x, carry=e0).wait()
+    ref = _run("allreduce", REF["allreduce"], x)
+    tol = compress.collective_tolerance(
+        cd, "allreduce", M, float(np.abs(np.asarray(x)).max()))
+    err = np.abs(np.asarray(y1, np.float32) - ref).max()
+    assert err <= tol, f"allreduce/{algo}@{cd} carry: {err} > {tol}"
+    fn = runtime.build(COMM.mesh, topo, "allreduce", algo, carry=True,
+                       codec=cd)
+    ry, re = fn(x, e0)
+    np.testing.assert_array_equal(np.asarray(y1), np.asarray(ry),
+                                  err_msg=f"{algo}@{cd} carry result")
+    np.testing.assert_array_equal(np.asarray(e1), np.asarray(re),
+                                  err_msg=f"{algo}@{cd} carry state")
+    # determinism under a threaded (possibly nonzero) state: the same
+    # (payload, err) pair always produces the same (result, state)
+    y2a, e2a = op.start(x, carry=e1).wait()
+    y2b, e2b = op.start(x, carry=e1).wait()
+    np.testing.assert_array_equal(np.asarray(y2a), np.asarray(y2b))
+    np.testing.assert_array_equal(np.asarray(e2a), np.asarray(e2b))
+
+
 # ---------------------------------------------------------------------------
 # compressed leg: every (collective x codec) pair vs the xla reference,
 # asserting the codec's stated relative-error bound instead of equality

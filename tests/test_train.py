@@ -79,3 +79,38 @@ def test_remat_policies_same_loss():
             ref = float(m["loss"])
         else:
             np.testing.assert_allclose(float(m["loss"]), ref, rtol=1e-4)
+
+
+def test_resolve_plan_boundary_budgets_never_crash():
+    """Regression for the boundary-budget crash in the pinned-algo codec
+    branch of manual_step._resolve_plan: a positive budget admitting NO
+    codec made ``min()`` raise on an empty sequence mid-build. The plan
+    must fall back to lossless instead — and real boundary budgets (0.0,
+    just-below/at the smallest codec bound, huge) must all resolve."""
+    from repro.core import compress as codecs
+    from repro.core.topology import Topology
+    from repro.train import manual_step
+
+    topo = Topology(1, 1)
+    bounds = sorted(e for e in (codecs.meta(n).error_bound
+                                for n in codecs.codecs()) if e > 0.0)
+    assert bounds, "expected at least one lossy codec in the registry"
+    lo = bounds[0]
+    for budget in (0.0, lo / 2, lo, lo * 1.01, 1e9):
+        name, kw = manual_step._resolve_plan(
+            topo, 1 << 16, jnp.float32, "pip_mcoll", None, None, budget)
+        assert name == "pip_mcoll"
+        if budget < lo:
+            assert "codec" not in kw, (budget, kw)
+
+    # the empty-candidate corner itself, pinned down by monkeypatching the
+    # admissibility gate (no registry configuration reaches it today, but
+    # the crash was one registry edit away)
+    orig = codecs.for_budget
+    codecs.for_budget = lambda *a, **k: ()
+    try:
+        name, kw = manual_step._resolve_plan(
+            topo, 1 << 16, jnp.float32, "pip_mcoll", None, None, 0.05)
+    finally:
+        codecs.for_budget = orig
+    assert name == "pip_mcoll" and "codec" not in kw, (name, kw)
