@@ -57,7 +57,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import autotune, compress, costmodel, mcoll, runtime
+from repro.core import (artifact as artifact_schema, autotune, compress,
+                        costmodel, mcoll, runtime, telemetry)
 from repro.core.comm import Communicator
 from repro.core.topology import Topology
 
@@ -176,6 +177,24 @@ def calibrate_mode(out_path: str):
             prior = prior_sel.choose(name, topo, nbytes)
             match = measured.algo == prior.algo
             agree += match
+            # per-plan signed relative error (measured - model) / model:
+            # every measured plan at this (collective, size), not just the
+            # crossover verdict — the drift detector's offline counterpart
+            per_plan = []
+            entry = sel.table.lookup(topo, name, "float32", nbytes) or {}
+            for plan_key in sorted(entry):
+                meas_s = entry[plan_key]
+                model_s = autotune.predicted_seconds(name, plan_key, topo,
+                                                     nbytes)
+                per_plan.append({
+                    "plan": plan_key,
+                    "measured_us": meas_s * 1e6,
+                    "model_us": (model_s * 1e6
+                                 if model_s and model_s > 0.0 else None),
+                    "signed_rel_err": ((meas_s - model_s) / model_s
+                                       if model_s and model_s > 0.0
+                                       else None),
+                })
             comparison.append({
                 "collective": name, "nbytes": nbytes,
                 "measured_algo": measured.algo,
@@ -183,6 +202,7 @@ def calibrate_mode(out_path: str):
                 "prior_algo": prior.algo,
                 "prior_us": prior.seconds * 1e6,
                 "agree": match,
+                "per_plan": per_plan,
             })
             print(f"calibrate/crossover/{name}/{nbytes}B,0.0,"
                   f"measured={measured.algo} prior={prior.algo} "
@@ -274,6 +294,10 @@ def calibrate_mode(out_path: str):
         "pipeline_crossover": pipeline_rows,
         "compression": compression_rows,
     }
+    # refuse to write a malformed artifact: every section + row key this
+    # mode is responsible for must be present (schema in core.artifact)
+    artifact_schema.validate(artifact,
+                             sections=artifact_schema.CALIBRATE_SECTIONS)
     path = pathlib.Path(out_path)
     path.parent.mkdir(parents=True, exist_ok=True)
     path.write_text(json.dumps(artifact, indent=1, sort_keys=True))
@@ -632,7 +656,13 @@ if __name__ == "__main__":
                          "lowerings vs jnp reference: wall-clock, analytic "
                          "memory traffic, roofline seconds); with OUT_JSON, "
                          "merge a 'codec_kernels' section into the artifact")
+    ap.add_argument("--trace", metavar="OUT_JSON", default=None,
+                    help="enable the telemetry tracer for the whole run and "
+                         "export a Chrome/Perfetto trace JSON at the end "
+                         "(orthogonal to the mode flags)")
     args = ap.parse_args()
+    if args.trace:
+        telemetry.enable()
     if args.calibrate:
         calibrate_mode(args.calibrate)
     elif args.overlap is not None:
@@ -641,3 +671,7 @@ if __name__ == "__main__":
         codec_kernel_mode(args.codec_kernels or None)
     else:
         measure_mode()
+    if args.trace:
+        trace = telemetry.export_chrome_trace(args.trace)
+        print(f"trace/artifact,0.0,{args.trace} "
+              f"events={len(trace['traceEvents'])}")

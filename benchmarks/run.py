@@ -294,6 +294,12 @@ def main() -> None:
         calibrate_collectives()
         overlap_collectives()
         codec_kernel_collectives()
+        # the three modes above each rewrite/merge the artifact; validate
+        # the final shape so a mode silently dropping a section fails HERE
+        from repro.core import artifact as artifact_schema
+        artifact_schema.validate_file(
+            REPO / "results" / "BENCH_collectives.json")
+        emit("calibrate/artifact_schema", 0.0, "all sections validated")
         autotune_table()
         return
     fig1_scatter()

@@ -1,0 +1,121 @@
+"""Schema for the benchmark artifact (``results/BENCH_collectives.json``).
+
+The artifact is assembled by three cooperating writers —
+``measure_collectives.py --calibrate`` (the base sections), ``--overlap``
+and ``--codec-kernels`` (merged sections) — driven in sequence by
+``benchmarks/run.py calibrate``. A writer that silently drops a section or
+renames a row key used to go unnoticed until a reader broke; this module
+is the one place the layout is declared, validated both at write time (the
+benchmark refuses to emit a malformed artifact) and in the schema
+regression test against the committed artifact.
+"""
+from __future__ import annotations
+
+from typing import Iterable, Optional, Tuple
+
+#: sections ``--calibrate`` writes in one shot
+CALIBRATE_SECTIONS: Tuple[str, ...] = (
+    "topology", "sizes", "table", "latency_rows", "model_vs_measured",
+    "pipeline_crossover", "compression")
+
+#: sections merged in by the other modes; a full ``run.py calibrate``
+#: artifact carries every section
+ALL_SECTIONS: Tuple[str, ...] = CALIBRATE_SECTIONS + (
+    "overlap", "codec_kernels")
+
+#: required keys per list-of-rows section
+ROW_KEYS = {
+    "latency_rows": frozenset(
+        {"collective", "algo", "nbytes", "dtype", "seconds", "chunks",
+         "codec", "group"}),
+    "model_vs_measured": frozenset(
+        {"collective", "nbytes", "measured_algo", "measured_us",
+         "prior_algo", "prior_us", "agree", "per_plan"}),
+    "pipeline_crossover": frozenset(
+        {"collective", "algo", "model_crossover_bytes", "model_sweep",
+         "measured_us_by_plan"}),
+    "compression": frozenset(
+        {"codec", "declared_ratio", "achieved_ratio", "stated_rel_bound",
+         "achieved_abs_error", "bound_abs_tolerance",
+         "model_crossover_vs_lossless_bytes",
+         "budget_selection_crossover_bytes"}),
+}
+
+#: required keys of each ``model_vs_measured[i]["per_plan"]`` row: every
+#: measured plan at that (collective, size) with its model prediction and
+#: the signed relative error ``(measured - model) / model``
+PER_PLAN_KEYS = frozenset(
+    {"plan", "measured_us", "model_us", "signed_rel_err"})
+
+#: required keys of the dict-shaped merged sections
+SECTION_KEYS = {
+    "table": frozenset({"version", "entries"}),
+    "overlap": frozenset(
+        {"devices", "topology", "microbench", "amortization",
+         "train_step"}),
+    "codec_kernels": frozenset(
+        {"devices", "block", "slices", "world", "elems_per_slice",
+         "fused_codecs", "rows", "traffic_halved", "zlib_sim", "note"}),
+}
+
+
+class ArtifactError(ValueError):
+    """The artifact is missing a section or a required row key."""
+
+
+def _require_keys(what: str, obj: dict, required: Iterable[str]) -> None:
+    if not isinstance(obj, dict):
+        raise ArtifactError(f"{what} must be a dict, got {type(obj).__name__}")
+    missing = sorted(set(required) - set(obj))
+    if missing:
+        raise ArtifactError(f"{what} is missing keys {missing}")
+
+
+def validate(data: dict, sections: Optional[Tuple[str, ...]] = None) -> dict:
+    """Validate ``data`` against the artifact schema and return it.
+
+    ``sections`` names the sections that must be present (default
+    :data:`ALL_SECTIONS` — the shape ``run.py calibrate`` commits);
+    ``--calibrate`` alone validates with :data:`CALIBRATE_SECTIONS`.
+    Sections present beyond the required set are validated too, so a
+    partially-merged artifact can't carry a malformed section unnoticed.
+    Raises :class:`ArtifactError` on the first violation.
+    """
+    required = ALL_SECTIONS if sections is None else tuple(sections)
+    _require_keys("artifact", data, required)
+    if "topology" in data and not isinstance(data["topology"], str):
+        raise ArtifactError("topology must be a string topo key")
+    if "sizes" in data:
+        if (not isinstance(data["sizes"], list) or not data["sizes"]
+                or not all(isinstance(s, int) for s in data["sizes"])):
+            raise ArtifactError("sizes must be a non-empty list of ints")
+    for name, keys in SECTION_KEYS.items():
+        if name in data:
+            _require_keys(name, data[name], keys)
+    for name, keys in ROW_KEYS.items():
+        if name not in data:
+            continue
+        rows = data[name]
+        if not isinstance(rows, list) or not rows:
+            raise ArtifactError(f"{name} must be a non-empty list of rows")
+        for i, row in enumerate(rows):
+            _require_keys(f"{name}[{i}]", row, keys)
+    if "model_vs_measured" in data:
+        for i, row in enumerate(data["model_vs_measured"]):
+            pp = row["per_plan"]
+            if not isinstance(pp, list) or not pp:
+                raise ArtifactError(
+                    f"model_vs_measured[{i}].per_plan must be a non-empty "
+                    f"list (one row per measured plan)")
+            for j, prow in enumerate(pp):
+                _require_keys(f"model_vs_measured[{i}].per_plan[{j}]",
+                              prow, PER_PLAN_KEYS)
+    return data
+
+
+def validate_file(path, sections: Optional[Tuple[str, ...]] = None) -> dict:
+    """Load + :func:`validate` an artifact JSON file."""
+    import json
+    import pathlib
+    return validate(json.loads(pathlib.Path(path).read_text()),
+                    sections=sections)

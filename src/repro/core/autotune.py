@@ -102,6 +102,20 @@ def decode_plan(key: str) -> Tuple[str, int, str]:
     return (algo, int(c) if sep else 1, codec if csep else _codecs.NONE)
 
 
+def predicted_seconds(collective: str, plan_key: str, topo: Topology,
+                      nbytes: int) -> Optional[float]:
+    """Cost-model seconds for an encoded plan key on ``topo`` — the prior
+    the telemetry drift detector reports observed medians against. Returns
+    ``None`` for plans that are implemented but not modeled (or whose
+    codec name is unknown to this build)."""
+    algo, chunks, codec = decode_plan(plan_key)
+    try:
+        return costmodel.plan_seconds(collective, algo, topo, int(nbytes),
+                                      chunks=chunks, codec=codec)
+    except (ValueError, KeyError):
+        return None
+
+
 def chunk_candidates(collective: str, algo: str, topo: Topology, nbytes: int,
                      net: NetParams,
                      cap: int = costmodel.MAX_CHUNKS) -> Tuple[int, ...]:
@@ -451,6 +465,36 @@ class Selector:
         return {s: self.choose(collective, topo, s, net=net, dtype=dtype,
                                error_budget=error_budget)
                 for s in sizes}
+
+    # -- observed-evidence ingestion (telemetry loop closure) ---------------
+
+    def ingest(self, telemetry=None, min_samples: int = 1) -> int:
+        """Fold telemetry's observed per-plan medians into the tuning table
+        as measured evidence (opt-in: nothing flows back unless called).
+
+        ``telemetry`` is the ``repro.core.telemetry`` module or any object
+        with a ``plan_observations()`` iterable of observation records
+        (``topo / collective / dtype / nbytes / plan`` plus
+        ``median(synced=True)``). Only synced samples count — dispatch-only
+        wall clock must not overwrite blocking calibration rows. Each
+        ingested row goes through :meth:`TuningTable.record`, so the
+        generation bump invalidates selection memos and the next
+        ``choose()`` resolves from the corrected entries — this is how a
+        drifted (or poisoned) table row heals from live observation.
+        Returns the number of rows recorded."""
+        if telemetry is None:
+            from repro.core import telemetry  # lazy: telemetry is jax-free
+        ingested = 0
+        for obs in telemetry.plan_observations():
+            if len(obs.samples) < max(1, int(min_samples)):
+                continue
+            med = obs.median(synced=True)
+            if med is None or med <= 0.0:
+                continue
+            self.table.record(obs.topo, obs.collective, obs.dtype,
+                              obs.nbytes, obs.plan, med)
+            ingested += 1
+        return ingested
 
     # -- table persistence passthroughs ------------------------------------
 

@@ -43,6 +43,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
+import time as _time
 from typing import Any, Dict, Optional, Tuple
 
 import jax
@@ -50,6 +51,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import autotune, runtime
+from repro.core import telemetry as _tm
 from repro.core.topology import Topology
 
 
@@ -155,12 +157,14 @@ class CollHandle:
     exactly once; a second ``wait`` is a misuse error (like MPI requests,
     which are invalidated by completion)."""
 
-    __slots__ = ("_op", "_value", "_done")
+    __slots__ = ("_op", "_value", "_done", "_token", "_t0")
 
-    def __init__(self, op: "PersistentOp", value):
+    def __init__(self, op: "PersistentOp", value, token=None, t0=0.0):
         self._op = op
         self._value = value
         self._done = False
+        self._token = token
+        self._t0 = t0
 
     @property
     def done(self) -> bool:
@@ -183,6 +187,17 @@ class CollHandle:
         self._op._inflight -= 1
         if block:
             jax.block_until_ready(self._value)
+        if self._token is not None:
+            # the telemetry window opened at start(): close it here, and a
+            # blocking wait is a synced wall-clock sample for the drift
+            # detector (the result is materialized — no extra device sync)
+            _tm.end(self._token)
+            if block:
+                op = self._op
+                _tm.observe_plan(op.comm.topo, op.collective,
+                                 str(op.dtype), op._msg_nbytes, op.plan,
+                                 _time.perf_counter() - self._t0,
+                                 synced=True)
         return self._value
 
 
@@ -190,6 +205,9 @@ class CollHandle:
 #: rebind-hygiene observable: re-resolving a plan must release the old op,
 #: so repeated plan crossings keep this flat instead of growing it
 _LIVE_OPS = 0
+
+#: monotone op id feeding per-op telemetry track names
+_OP_SEQ = 0
 
 
 def live_persistent_ops() -> int:
@@ -241,11 +259,31 @@ class PersistentOp:
         self.starts = 0
         self._inflight = 0
         self._released = False
+        total = int(math.prod(self.shape)) * self.dtype.itemsize
+        # per-process message bytes in the cost model's convention
+        # (mirrors runtime._message_bytes) — the drift detector's size key
+        self._msg_nbytes = (max(1, total) if collective == "broadcast"
+                            else max(1, total // comm.topo.world))
+        global _LIVE_OPS, _OP_SEQ
+        _OP_SEQ += 1
+        # each op gets its own trace track, so concurrent in-flight windows
+        # (per-bucket overlap) render as parallel lanes, never stacked
+        self._track = f"comm:{collective}#{_OP_SEQ}"
+        t0 = _time.perf_counter() if _tm.enabled() else 0.0
         self._compiled, self._in_sharding = runtime.compile_persistent(
             comm.mesh, comm.topo, collective, algo, self.shape, self.dtype,
             stacked=stacked, donate=donate, carry=self.carry, **self.kw)
-        global _LIVE_OPS
+        if _tm.enabled():
+            _tm.emit(f"persistent_init/{collective}", t0,
+                     _time.perf_counter() - t0, cat="persistent",
+                     **self._tags())
+        _tm.counter("comm.persistent_inits").inc()
         _LIVE_OPS += 1
+
+    def _tags(self) -> Dict[str, Any]:
+        return _tm.plan_tags(self.collective, self.algo, self.chunks,
+                             self.codec, self.comm.topo.group or "",
+                             nbytes=self._msg_nbytes)
 
     @property
     def chunks(self) -> int:
@@ -279,6 +317,11 @@ class PersistentOp:
         self._released = True
         self._compiled = None
         _LIVE_OPS -= 1
+        _tm.counter("comm.persistent_releases").inc()
+        if _tm.enabled():
+            _tm.instant(f"persistent_release/{self.collective}",
+                        cat="persistent", starts=self.starts,
+                        **self._tags())
 
     def _check_operand(self, x, what: str = "operand"):
         x = jnp.asarray(x)
@@ -315,10 +358,17 @@ class PersistentOp:
         x = self._check_operand(x)
         self._inflight += 1
         self.starts += 1
+        token, t0 = None, 0.0
+        if _tm.enabled():
+            # the start->wait window rides this op's own track, so nested /
+            # concurrent bucket windows stay visible next to compute spans
+            t0 = _time.perf_counter()
+            token = _tm.begin(f"{self.collective}[{self.plan}]",
+                              cat="comm", track=self._track, **self._tags())
         if self.carry:
             carry = self._check_operand(carry, what="carry")
-            return CollHandle(self, self._compiled(x, carry))
-        return CollHandle(self, self._compiled(x))
+            return CollHandle(self, self._compiled(x, carry), token, t0)
+        return CollHandle(self, self._compiled(x), token, t0)
 
     def __call__(self, x, carry=None):
         """Blocking convenience: ``start(x).wait()``."""
@@ -468,10 +518,23 @@ class Communicator:
         if overlap:
             raise ValueError(f"duplicate plan knobs {sorted(overlap)}")
         kw.update(extra)
-        return runtime.resolve_algo(self._require_topo(), spec.collective,
-                                    spec.algo, proto, kw,
-                                    error_budget=spec.error_budget,
-                                    selector=self.selector)
+        topo = self._require_topo()
+        t0 = _time.perf_counter() if _tm.enabled() else 0.0
+        algo_r, kw_r = runtime.resolve_algo(topo, spec.collective,
+                                            spec.algo, proto, kw,
+                                            error_budget=spec.error_budget,
+                                            selector=self.selector)
+        if _tm.enabled():
+            _tm.emit(f"plan_resolve/{spec.collective}", t0,
+                     _time.perf_counter() - t0, cat="resolve",
+                     requested=spec.algo,
+                     **_tm.plan_tags(spec.collective, algo_r,
+                                     int(kw_r.get("chunks", 1)),
+                                     str(kw_r.get("codec", "none")),
+                                     topo.group or "",
+                                     nbytes=runtime._message_bytes(
+                                         spec.collective, topo, proto)))
+        return algo_r, kw_r
 
     # -- blocking methods ---------------------------------------------------
 

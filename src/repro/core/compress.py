@@ -239,6 +239,16 @@ class Codec:
         return sum(int(a.size) * jnp.dtype(a.dtype).itemsize
                    for a in jax.tree.leaves(comp))
 
+    def achieved_ratio(self, x2d) -> float:
+        """Measured compression ratio on one payload: float32 payload bytes
+        over actual wire bytes of ``encode(x2d)`` (>= 1 means the codec
+        shrinks the wire). Runs an encode, so callers sample it — the
+        telemetry EF probe and the benchmark compression section — rather
+        than calling it per collective."""
+        x2d = jnp.asarray(x2d, jnp.float32)
+        return float(x2d.size * 4.0) / max(1, self.wire_bytes(
+            self.encode(x2d)))
+
 
 # ---------------------------------------------------------------------------
 # int8 block codec (the original optim.compress math, generalized)

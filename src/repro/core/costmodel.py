@@ -773,6 +773,18 @@ def plan_cost(collective: str, algo: str, topo: Topology, m: int,
                          bd.intra_bytes, bd.time + extra)
 
 
+def plan_seconds(collective: str, algo: str, topo: Topology, m: int,
+                 chunks: int = 1, codec: str = "none",
+                 net=None) -> float:
+    """Modeled seconds for one plan with the net defaulted from the
+    topology's link metadata — the reference the telemetry drift detector
+    prices observed plans against (``autotune.predicted_seconds`` decodes
+    plan keys into this)."""
+    net_p = net_for(topo) if net is None else resolve_net(net)
+    return plan_cost(collective, algo, topo, m, net_p, chunks=chunks,
+                     codec=codec).time
+
+
 def compressed_crossover_bytes(collective: str, algo: str, topo: Topology,
                                net: NetParams, codec: str, sizes=None):
     """Smallest swept message size where the codec plan (at its optimal

@@ -66,6 +66,7 @@ from jax.sharding import PartitionSpec as P
 from repro.core import autotune, compat
 from repro.core import compress as _codecs
 from repro.core import mcoll as _mcoll
+from repro.core import telemetry as _tm
 from repro.core.topology import Topology
 
 AUTO = "auto"
@@ -161,6 +162,13 @@ class CacheStats:
         total = self.exec_hits + self.exec_misses
         return self.exec_hits / total if total else 0.0
 
+    def reset(self) -> None:
+        """Zero every counter in place (handles stay live) — per-phase
+        assertions in checks start from a clean baseline instead of
+        subtracting process-lifetime totals by hand."""
+        self.build_hits = self.build_misses = self.build_evictions = 0
+        self.exec_hits = self.exec_misses = self.exec_evictions = 0
+
 
 _DEFAULT_MAX_BUILD = 256
 _DEFAULT_MAX_EXEC = 1024
@@ -208,13 +216,20 @@ def _evict(cache: "OrderedDict", which: str) -> None:
 def clear_cache() -> None:
     _BUILD_CACHE.clear()
     _EXEC_CACHE.clear()
-    # reset in place so handles returned by cache_stats() stay live
-    _STATS.build_hits = _STATS.build_misses = _STATS.build_evictions = 0
-    _STATS.exec_hits = _STATS.exec_misses = _STATS.exec_evictions = 0
+    _STATS.reset()  # in place, so handles from cache_stats() stay live
 
 
 def _kw_key(kw: Dict[str, Any]) -> tuple:
     return tuple(sorted(kw.items()))
+
+
+def _span_tags(topo: Topology, collective: str, algo: str,
+               kw: Dict[str, Any], nbytes: Optional[int] = None
+               ) -> Dict[str, Any]:
+    """Telemetry tag dict for one resolved plan at a runtime boundary."""
+    return _tm.plan_tags(collective, algo, int(kw.get("chunks", 1)),
+                         str(kw.get("codec", "none")), topo.group or "",
+                         nbytes=nbytes)
 
 
 # ---------------------------------------------------------------------------
@@ -506,8 +521,11 @@ def build(mesh, topo: Topology, collective: str, algo: str, *,
         _BUILD_CACHE.move_to_end(key)
         return hit
     _STATS.build_misses += 1
-    built = _construct(mesh, topo, collective, algo, stacked, jit, donate,
-                       carry, **kw)
+    with _tm.span(f"build/{collective}", cat="build",
+                  **(_span_tags(topo, collective, algo, kw)
+                     if _tm.enabled() else {})):
+        built = _construct(mesh, topo, collective, algo, stacked, jit,
+                           donate, carry, **kw)
     _BUILD_CACHE[key] = built
     _evict(_BUILD_CACHE, "build")
     return built
@@ -547,17 +565,37 @@ def run_resolved(mesh, topo: Topology, name: str, algo: str, x, *,
     methods resolve once with their own selector, then come here)."""
     key = (mesh, topo, name, algo, stacked, _kw_key(kw),
            (tuple(x.shape), str(x.dtype)), _codecs.fused_enabled())
+    tm_on = _tm.enabled()  # one global read; the disabled path adds nothing
+    t0 = _time.perf_counter() if tm_on else 0.0
     compiled = _EXEC_CACHE.get(key)
     if compiled is not None:
         _STATS.exec_hits += 1
         _EXEC_CACHE.move_to_end(key)
+        cache = "hit"
     else:
         _STATS.exec_misses += 1
-        jitted = build(mesh, topo, name, algo, stacked=stacked, jit=True, **kw)
-        compiled = jitted.lower(x).compile()
+        cache = "miss"
+        with (_tm.span(f"compile/{name}", cat="compile",
+                       **_span_tags(topo, name, algo, kw))
+              if tm_on else _tm.span("")):
+            jitted = build(mesh, topo, name, algo, stacked=stacked,
+                           jit=True, **kw)
+            compiled = jitted.lower(x).compile()
         _EXEC_CACHE[key] = compiled
         _evict(_EXEC_CACHE, "exec")
-    return compiled(x)
+    out = compiled(x)
+    if tm_on:
+        # dispatch wall-clock only (async: the device may still be running)
+        dt = _time.perf_counter() - t0
+        nbytes = _message_bytes(name, topo, x)
+        _tm.emit(name, t0, dt, cat="collective", cache=cache,
+                 **_span_tags(topo, name, algo, kw, nbytes=nbytes))
+        _tm.observe_plan(topo, name, str(x.dtype), nbytes,
+                         autotune.encode_plan(algo,
+                                              int(kw.get("chunks", 1)),
+                                              str(kw.get("codec", "none"))),
+                         dt, synced=False)
+    return out
 
 
 def input_sharding(mesh, topo: Topology, collective: str) -> NamedSharding:
@@ -605,14 +643,20 @@ def compile_persistent(mesh, topo: Topology, name: str, algo: str,
     if compiled is not None:
         _STATS.exec_hits += 1
         _EXEC_CACHE.move_to_end(key)
+        if _tm.enabled():
+            _tm.instant(f"persistent_cache_hit/{name}", cat="cache",
+                        **_span_tags(topo, name, algo, kw))
         return compiled, sharding
     _STATS.exec_misses += 1
-    jitted = build(mesh, topo, name, algo, stacked=stacked, jit=True,
-                   donate=donate, carry=carry, **kw)
-    proto = jax.ShapeDtypeStruct(tuple(shape), jnp.dtype(dtype),
-                                 sharding=sharding)
-    compiled = (jitted.lower(proto, proto).compile() if carry
-                else jitted.lower(proto).compile())
+    with _tm.span(f"persistent_compile/{name}", cat="compile",
+                  **(_span_tags(topo, name, algo, kw)
+                     if _tm.enabled() else {})):
+        jitted = build(mesh, topo, name, algo, stacked=stacked, jit=True,
+                       donate=donate, carry=carry, **kw)
+        proto = jax.ShapeDtypeStruct(tuple(shape), jnp.dtype(dtype),
+                                     sharding=sharding)
+        compiled = (jitted.lower(proto, proto).compile() if carry
+                    else jitted.lower(proto).compile())
     _EXEC_CACHE[key] = compiled
     _evict(_EXEC_CACHE, "exec")
     return compiled, sharding
@@ -702,19 +746,27 @@ def calibrate(mesh, topo: Topology,
                     kw["chunks"] = chunks
                 if codec != _codecs.NONE:
                     kw["codec"] = codec
-                jax.block_until_ready(
-                    run(mesh, topo, name, algo, x, **kw))  # compile
-                samples = []
-                for _ in range(max(1, iters)):
-                    t0 = _time.perf_counter()
+                plan = autotune.encode_plan(algo, chunks, codec)
+                with _tm.span(f"calibrate/{name}/{plan}", cat="calibrate",
+                              **(_span_tags(topo, name, algo, kw,
+                                            nbytes=int(nbytes))
+                                 if _tm.enabled() else {})):
                     jax.block_until_ready(
-                        run(mesh, topo, name, algo, x, **kw))
-                    samples.append(_time.perf_counter() - t0)
+                        run(mesh, topo, name, algo, x, **kw))  # compile
+                    samples = []
+                    for _ in range(max(1, iters)):
+                        t0 = _time.perf_counter()
+                        jax.block_until_ready(
+                            run(mesh, topo, name, algo, x, **kw))
+                        samples.append(_time.perf_counter() - t0)
                 sec = float(np.median(samples))
+                if _tm.enabled():
+                    # blocked loops are the highest-quality drift evidence
+                    for s in samples:
+                        _tm.observe_plan(topo, name, str(jnp.dtype(dtype)),
+                                         int(nbytes), plan, s, synced=True)
                 sel.table.record(topo, name, str(jnp.dtype(dtype)),
-                                 int(nbytes),
-                                 autotune.encode_plan(algo, chunks, codec),
-                                 sec)
+                                 int(nbytes), plan, sec)
                 rows.append(CalibrationRow(name, algo, int(nbytes),
                                            str(jnp.dtype(dtype)), sec,
                                            chunks, codec,

@@ -29,16 +29,24 @@ see ``Engine.__init__``)."""
 from __future__ import annotations
 
 import dataclasses
+import time
+import warnings
 from typing import List, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import telemetry
 from repro.core.comm import Communicator, PersistentOp
 from repro.core.topology import Topology
 from repro.models import decoder
 from repro.models.decoder import RunFlags
+
+#: sync-plan rebinds (tuning-table generation changes) tolerated silently;
+#: past this, one rate-limited warning names the storm so the flat
+#: ``live_persistent_ops()`` assertion has a diagnostic to point at
+REBIND_WARN_THRESHOLD = 3
 
 
 @dataclasses.dataclass
@@ -102,6 +110,16 @@ class Engine:
         # loaded mid-serving still flips auto to the measured plan
         self._sync_op: Optional[PersistentOp] = None
         self._sync_gen: int = -1
+        # per-engine observability: tick latency histogram (host-side,
+        # timed around the whole decode+sync tick — no extra device sync),
+        # slot-occupancy accumulator, and the sync-plan rebind counter
+        # behind Engine.metrics(). Always on: one perf_counter pair and a
+        # histogram bump per tick is noise next to a decode step.
+        self._tick_hist = telemetry.Histogram("serve.tick_seconds")
+        self._ticks = 0
+        self._occupied_slot_ticks = 0
+        self.rebinds = 0
+        self._rebind_warned = False
         self.caches = decoder.init_cache(cfg, max_batch, max_len)
         self.lengths = np.zeros(max_batch, np.int32)
         self.active: List[Optional[Request]] = [None] * max_batch
@@ -139,6 +157,23 @@ class Engine:
             # linger in the live-op count and pin donated buffers).
             if self._sync_op is not None:
                 self._sync_op.release()
+                # a *re*bind (not the first bind): a storm of these —
+                # e.g. a budget schedule oscillating the tuning table
+                # every tick — used to be completely silent
+                self.rebinds += 1
+                telemetry.counter("serve.plan_rebinds").inc()
+                if (self.rebinds > REBIND_WARN_THRESHOLD
+                        and not self._rebind_warned):
+                    self._rebind_warned = True
+                    warnings.warn(
+                        f"engine sync-plan rebind storm: {self.rebinds} "
+                        f"rebinds over {self._ticks} ticks (tuning-table "
+                        f"generation now {gen}); something is mutating the "
+                        f"selector table every few ticks — each rebind "
+                        f"releases and re-inits the persistent sync op "
+                        f"(exec-cache hits, but plan resolution per tick). "
+                        f"See Engine.metrics()['plan_rebinds'].",
+                        RuntimeWarning, stacklevel=3)
             self._sync_op = self.sync_comm.broadcast_init(
                 arr, algo=self.sync_algo,
                 error_budget=self.sync_error_budget)
@@ -168,6 +203,7 @@ class Engine:
         ticks = 0
         while (queue or any(self.active)) and ticks < max_ticks:
             ticks += 1
+            t_tick = time.perf_counter()
             # admit
             for slot in range(self.max_batch):
                 if self.active[slot] is None and queue:
@@ -196,5 +232,31 @@ class Engine:
                          and req.out_tokens[-1] == req.eos_id)):
                     done.append(req)
                     self.active[slot] = None
+            dt = time.perf_counter() - t_tick
+            active_n = sum(r is not None for r in self.active)
+            self._ticks += 1
+            self._occupied_slot_ticks += active_n
+            self._tick_hist.observe(dt)
+            telemetry.emit("serve/tick", t_tick, dt, cat="serve",
+                           active=active_n)
         done.extend([r for r in self.active if r is not None])
         return done
+
+    def metrics(self) -> dict:
+        """Per-engine serving metrics: tick-latency distribution (p50/p99
+        seconds over every decode+sync tick this engine has run), mean slot
+        occupancy (active slots / max_batch, post-retire), and the
+        sync-plan rebind count (see ``REBIND_WARN_THRESHOLD``)."""
+        h = self._tick_hist
+        return {
+            "ticks": self._ticks,
+            "tick_p50_s": h.quantile(0.50),
+            "tick_p99_s": h.quantile(0.99),
+            "tick_mean_s": h.mean,
+            "slot_occupancy": (self._occupied_slot_ticks
+                               / (self._ticks * self.max_batch)
+                               if self._ticks else 0.0),
+            "plan_rebinds": self.rebinds,
+            "sync_starts": (self._sync_op.starts
+                            if self._sync_op is not None else 0),
+        }

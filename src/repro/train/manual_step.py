@@ -71,6 +71,7 @@ from jax.sharding import PartitionSpec as P
 
 from repro.core import autotune, costmodel, mcoll, runtime
 from repro.core import compress as codecs
+from repro.core import telemetry as _tm
 from repro.core.comm import Communicator, communicator
 from repro.core.topology import Topology
 from repro.optim import adamw
@@ -357,6 +358,7 @@ class OverlappedGradSync:
         self._ops: List = []
         self.errs: List = []
         self._metric_op = None
+        self._btokens: List = []  # open per-bucket telemetry windows
 
     def budget_at(self, step: int) -> float:
         if callable(self.error_budget):
@@ -407,8 +409,14 @@ class OverlappedGradSync:
             self._metric_op = self.comm.allreduce_init(
                 shape=(world, self.metric_len), dtype=jnp.float32,
                 algo=mname, chunks=mkw.get("chunks"))
+        self._btokens = [None] * len(self._ops)
         if self._plans is not None:
             self.rebuilds += 1
+            _tm.counter("train.bucket_rebuilds").inc()
+            if _tm.enabled():
+                _tm.instant("bucket_rebuild", cat="train", step=int(step),
+                            budget=budget,
+                            plans=",".join(op.plan for op in self._ops))
         self._plans = plans
 
     # -- per-bucket start/wait (the segmented step interleaves these with
@@ -418,6 +426,13 @@ class OverlappedGradSync:
         """Start bucket ``i``'s persistent allreduce (threading its EF
         carry when the plan compresses); returns the handle."""
         op = self._ops[i]
+        if _tm.enabled():
+            # the bucket's start->wait window: one lane per bucket, so the
+            # trace shows each window nested inside the backward segments
+            # it overlaps
+            self._btokens[i] = _tm.begin(
+                f"bucket{i}[{op.plan}]", cat="bucket", track=f"bucket:{i}",
+                bucket=i, **op._tags())
         if op.carry:
             return op.start(payload, carry=self.errs[i])
         return op.start(payload)
@@ -425,11 +440,37 @@ class OverlappedGradSync:
     def wait(self, i: int, handle, block: bool = False):
         """Complete bucket ``i``: returns the reduced payload and absorbs
         the new error-feedback state for carry buckets."""
-        if self._ops[i].carry:
+        op = self._ops[i]
+        if op.carry:
             y, new_err = handle.wait(block=block)
             self.errs[i] = new_err
+            self._close_bucket(i)
+            if _tm.should_sample(f"ef:{id(self)}:{i}"):
+                self._observe_ef(op, y, new_err)
             return y
-        return handle.wait(block=block)
+        y = handle.wait(block=block)
+        self._close_bucket(i)
+        return y
+
+    def _close_bucket(self, i: int) -> None:
+        if self._btokens and self._btokens[i] is not None:
+            _tm.end(self._btokens[i])
+            self._btokens[i] = None
+
+    @staticmethod
+    def _observe_ef(op, y, new_err) -> None:
+        """Sampled codec-quality probe (telemetry on, 1-in-N waits): the
+        achieved-vs-bound relative error straight off the error-feedback
+        carry, plus the achieved wire ratio on the reduced payload. The
+        only telemetry site that materializes device values — which is why
+        it hides behind ``should_sample``."""
+        amax_y = float(jnp.max(jnp.abs(y)))
+        amax_e = float(jnp.max(jnp.abs(new_err)))
+        rel = amax_e / (amax_y + 1e-30)
+        _tm.observe_ef_error(op.codec, rel,
+                             codecs.meta(op.codec).error_bound)
+        _tm.observe_codec_ratio(
+            op.codec, codecs.codec(op.codec).achieved_ratio(y))
 
     def run(self, i: int, payload):
         """Barrier-style bucket ``i``: start and block out the wait."""
@@ -766,29 +807,39 @@ class _OverlappedStep:
         barrier twin blocks out each bucket before touching the next
         segment (same compiled programs, so the two are bit-identical)."""
         gs, K = self.grad_sync, len(self.bounds)
-        outs = self._fwd_c(params, batch)
-        hs, h_out, aux = outs[:K], outs[K], outs[K + 1]
-        head_flat, dh, mvec = self._head_bwd_c(params, h_out, aux, batch)
-        if self.overlap:
-            handles = [gs.start(0, head_flat)]
-            mh = gs.start_metric(mvec)
-            for j, k in enumerate(range(K - 1, -1, -1)):
-                bflat, dh = self._chunk_bwd_c[k](params, hs[k], dh)
-                handles.append(gs.start(1 + j, bflat))
-            handles.append(
-                gs.start(K + 1, self._embed_bwd_c(params, batch, dh)))
-            synced = [gs.wait(i, h, block=False)
-                      for i, h in enumerate(handles)]
-            mvec_s = mh.wait(block=False)
-        else:
-            synced = [gs.run(0, head_flat)]
-            mvec_s = gs.start_metric(mvec).wait(block=True)
-            for j, k in enumerate(range(K - 1, -1, -1)):
-                bflat, dh = self._chunk_bwd_c[k](params, hs[k], dh)
-                synced.append(gs.run(1 + j, bflat))
-            synced.append(
-                gs.run(K + 1, self._embed_bwd_c(params, batch, dh)))
-        return self._apply_c(params, opt_state, *synced, mvec_s)
+        with _tm.span("train/step", cat="train", mode="segmented",
+                      overlap=self.overlap):
+            with _tm.span("train/fwd", cat="train"):
+                outs = self._fwd_c(params, batch)
+            hs, h_out, aux = outs[:K], outs[K], outs[K + 1]
+            with _tm.span("train/head_bwd", cat="train"):
+                head_flat, dh, mvec = self._head_bwd_c(params, h_out, aux,
+                                                       batch)
+            if self.overlap:
+                handles = [gs.start(0, head_flat)]
+                mh = gs.start_metric(mvec)
+                for j, k in enumerate(range(K - 1, -1, -1)):
+                    with _tm.span(f"train/chunk_bwd[{k}]", cat="train"):
+                        bflat, dh = self._chunk_bwd_c[k](params, hs[k], dh)
+                    handles.append(gs.start(1 + j, bflat))
+                with _tm.span("train/embed_bwd", cat="train"):
+                    eflat = self._embed_bwd_c(params, batch, dh)
+                handles.append(gs.start(K + 1, eflat))
+                synced = [gs.wait(i, h, block=False)
+                          for i, h in enumerate(handles)]
+                mvec_s = mh.wait(block=False)
+            else:
+                synced = [gs.run(0, head_flat)]
+                mvec_s = gs.start_metric(mvec).wait(block=True)
+                for j, k in enumerate(range(K - 1, -1, -1)):
+                    with _tm.span(f"train/chunk_bwd[{k}]", cat="train"):
+                        bflat, dh = self._chunk_bwd_c[k](params, hs[k], dh)
+                    synced.append(gs.run(1 + j, bflat))
+                with _tm.span("train/embed_bwd", cat="train"):
+                    eflat = self._embed_bwd_c(params, batch, dh)
+                synced.append(gs.run(K + 1, eflat))
+            with _tm.span("train/apply", cat="train"):
+                return self._apply_c(params, opt_state, *synced, mvec_s)
 
     def __call__(self, params, opt_state, batch, step: Optional[int] = None):
         """One train step. ``step`` feeds the error-budget schedule (when a
@@ -802,10 +853,14 @@ class _OverlappedStep:
         self.grad_sync.ensure_ops(int(step))
         if self.mode == "segmented":
             return self._segmented_step(params, opt_state, batch)
-        outs = self._backward_c(params, batch)
-        synced, mvec = self.grad_sync.sync(outs[:-1], outs[-1],
-                                           overlap=self.overlap)
-        return self._apply_c(params, opt_state, *synced, mvec)
+        with _tm.span("train/step", cat="train", mode="monolithic",
+                      overlap=self.overlap):
+            with _tm.span("train/backward", cat="train"):
+                outs = self._backward_c(params, batch)
+            synced, mvec = self.grad_sync.sync(outs[:-1], outs[-1],
+                                               overlap=self.overlap)
+            with _tm.span("train/apply", cat="train"):
+                return self._apply_c(params, opt_state, *synced, mvec)
 
 
 def make_overlapped_train_step(cfg, tcfg: TrainConfig, mesh, topo,

@@ -45,10 +45,9 @@ for name in runtime.collectives():
             else:
                 np.testing.assert_array_equal(out, outs[ref_algo],
                                               err_msg=f"{name}/{algo}")
-        before = comm.selection_stats().total
+        comm.selection_stats().reset()
         auto_out = np.asarray(comm.invoke(name, x))
-        sstats = comm.selection_stats()
-        assert sstats.total == before + 1
+        assert comm.selection_stats().total == 1
         np.testing.assert_allclose(auto_out, outs[ref_algo], rtol=1e-6)
         checks += 1
 assert comm.selection_stats().measured == 0, "no calibration yet"
@@ -65,22 +64,22 @@ checks += 1
 
 # --- 3b. persistent op: compile once at init, never at start --------------
 op = comm.allgather_init(x, algo=resolved)
-misses0 = comm.cache_stats().exec_misses
+comm.cache_stats().reset()
 for _ in range(4):
     out_p = np.asarray(op.start(x).wait())
-assert comm.cache_stats().exec_misses == misses0, "start must never compile"
+assert comm.cache_stats().exec_misses == 0, "start must never compile"
 np.testing.assert_array_equal(out_p, np.asarray(comm.allgather(x)))
 op2 = comm.allgather_init(x, algo=resolved)  # same spec: exec-cache hit
-assert comm.cache_stats().exec_misses == misses0, "re-init must be a hit"
+assert comm.cache_stats().exec_misses == 0, "re-init must be a hit"
 checks += 1
 
 # --- 2. calibration flips resolution to the measured table ----------------
 comm.calibrate(sizes=(64, 4096), iters=3)
 for name in runtime.collectives():
     x = runtime.example_input(name, topo, 64)
-    before = comm.selection_stats().measured
+    comm.selection_stats().reset()
     out = np.asarray(comm.invoke(name, x))
-    assert comm.selection_stats().measured == before + 1, name
+    assert comm.selection_stats().measured == 1, name
     assert np.isfinite(out.astype(np.float64)).all()
     checks += 1
 sel = autotune.default_selector()

@@ -32,13 +32,13 @@ want = ref.run([Request(prompt=prompt.copy(), max_new_tokens=4)])[0]
 mesh = jax.make_mesh((N, P), ("node", "local"))
 topo = Topology.from_mesh(mesh)
 runtime.clear_cache()
-before = runtime.selection_stats().total
+runtime.selection_stats().reset()
 eng = Engine(params, cfg, max_batch=1, max_len=32, mesh=mesh, topo=topo)
 assert eng.sync_algo == "auto"
 got = eng.run([Request(prompt=prompt.copy(), max_new_tokens=4)])[0]
 
 assert got.out_tokens == want.out_tokens, (got.out_tokens, want.out_tokens)
-assert runtime.selection_stats().total > before, "sync never hit the selector"
+assert runtime.selection_stats().total > 0, "sync never hit the selector"
 s = runtime.cache_stats()
 # persistent sync op: exactly one compile for the whole run, zero repeat
 # lookups — every decode tick after the first is a bare start/wait
@@ -79,6 +79,32 @@ if N > 1:
     assert got4.out_tokens == want.out_tokens, got4.out_tokens
     assert geng._sync_op is not gop, "group sync op never re-resolved"
 
+# --- Engine.metrics(): tick-latency distribution + occupancy + rebinds ----
+m = eng.metrics()
+assert m["ticks"] >= 6, m  # two 4-token runs, 3 decode ticks each
+assert m["tick_p50_s"] > 0.0 and m["tick_p99_s"] > 0.0, m
+assert m["tick_p99_s"] >= m["tick_p50_s"] >= 0.0, m
+assert 0.0 < m["slot_occupancy"] <= 1.0, m
+assert m["plan_rebinds"] == 1, m  # the mid-serving calibration rebind
+assert m["sync_starts"] >= 3, m
+
+# --- rebind storm: a tuning table mutating every run must trip ONE
+# rate-limited warning once rebinds pass REBIND_WARN_THRESHOLD ------------
+import warnings
+
+from repro.serve.engine import REBIND_WARN_THRESHOLD
+
+with warnings.catch_warnings(record=True) as rec:
+    warnings.simplefilter("always")
+    for _ in range(REBIND_WARN_THRESHOLD + 2):
+        eng.comm.selector.table.generation += 1  # simulate table churn
+        eng.run([Request(prompt=prompt.copy(), max_new_tokens=2)])
+storm = [w for w in rec if "rebind storm" in str(w.message)]
+assert len(storm) == 1, [str(w.message) for w in rec]
+assert eng.metrics()["plan_rebinds"] > REBIND_WARN_THRESHOLD
+
 print(f"serve_sync_check N={N} P={P}: OK tokens={got.out_tokens} "
       f"sync_starts={op_before.starts} exec_misses={s.exec_misses} "
-      f"recal_plan={eng._sync_op.plan} group={geng.sync_comm.topo.group}")
+      f"recal_plan={eng._sync_op.plan} group={geng.sync_comm.topo.group} "
+      f"tick_p50_s={m['tick_p50_s']:.2e} rebinds="
+      f"{eng.metrics()['plan_rebinds']}")

@@ -1,0 +1,150 @@
+"""Schema regression for the benchmark artifact (core/artifact.py).
+
+``results/BENCH_collectives.json`` is assembled by three writers merged in
+sequence (``--calibrate``, ``--overlap``, ``--codec-kernels`` driven by
+``run.py calibrate``); this suite pins its section/row-key layout so a
+writer can't silently drop a section or rename a row key — the exact
+failure mode the validator exists for. The mutation tests run against a
+synthetic minimal artifact (``results/`` is generated, not committed);
+when the generated file is present it is validated too.
+"""
+import pathlib
+
+import pytest
+
+from repro.core import artifact
+
+REPO = pathlib.Path(__file__).resolve().parent.parent
+ARTIFACT = REPO / "results" / "BENCH_collectives.json"
+
+
+def _minimal():
+    """The smallest artifact the full schema accepts: every section, one
+    row each, keys exactly as the writers emit them."""
+    per_plan = [{"plan": "pip_mcoll", "measured_us": 120.0,
+                 "model_us": 80.0, "signed_rel_err": 0.5}]
+    return {
+        "topology": "4x2/host_cpu/host_cpu",
+        "sizes": [256, 4096, 65536],
+        "table": {"version": 1, "entries": {}},
+        "latency_rows": [{
+            "collective": "allreduce", "algo": "pip_mcoll", "nbytes": 4096,
+            "dtype": "float32", "seconds": 1.2e-4, "chunks": 1,
+            "codec": "none", "group": ""}],
+        "model_vs_measured": [{
+            "collective": "allreduce", "nbytes": 4096,
+            "measured_algo": "pip_mcoll", "measured_us": 120.0,
+            "prior_algo": "pip_mcoll", "prior_us": 80.0, "agree": True,
+            "per_plan": per_plan}],
+        "pipeline_crossover": [{
+            "collective": "allreduce", "algo": "pip_pipeline",
+            "model_crossover_bytes": 1 << 20, "model_sweep": [],
+            "measured_us_by_plan": {}}],
+        "compression": [{
+            "codec": "int8_block", "declared_ratio": 3.5,
+            "achieved_ratio": 3.4, "stated_rel_bound": 7.9e-3,
+            "achieved_abs_error": 1e-4, "bound_abs_tolerance": 2e-4,
+            "model_crossover_vs_lossless_bytes": 1 << 16,
+            "budget_selection_crossover_bytes": 1 << 16}],
+        "overlap": {"devices": 8, "topology": "4x2/host_cpu/host_cpu",
+                    "microbench": {}, "amortization": {}, "train_step": {}},
+        "codec_kernels": {"devices": 8, "block": 256, "slices": 8,
+                          "world": 8, "elems_per_slice": 4096,
+                          "fused_codecs": [], "rows": [],
+                          "traffic_halved": [], "zlib_sim": {}, "note": ""},
+    }
+
+
+def test_minimal_artifact_validates():
+    data = _minimal()
+    assert artifact.validate(data) is data
+    base = {k: data[k] for k in artifact.CALIBRATE_SECTIONS}
+    assert artifact.validate(base, sections=artifact.CALIBRATE_SECTIONS)
+
+
+def test_every_section_drop_is_caught():
+    for section in artifact.ALL_SECTIONS:
+        broken = _minimal()
+        del broken[section]
+        with pytest.raises(artifact.ArtifactError, match=section):
+            artifact.validate(broken)
+
+
+def test_row_key_drop_is_caught():
+    for section, keys in artifact.ROW_KEYS.items():
+        for key in sorted(keys):
+            broken = _minimal()
+            del broken[section][0][key]
+            with pytest.raises(artifact.ArtifactError, match=key):
+                artifact.validate(broken)
+
+
+def test_per_plan_key_drop_and_emptiness_are_caught():
+    for key in sorted(artifact.PER_PLAN_KEYS):
+        broken = _minimal()
+        del broken["model_vs_measured"][0]["per_plan"][0][key]
+        with pytest.raises(artifact.ArtifactError, match=key):
+            artifact.validate(broken)
+    broken = _minimal()
+    broken["model_vs_measured"][0]["per_plan"] = []
+    with pytest.raises(artifact.ArtifactError, match="per_plan"):
+        artifact.validate(broken)
+
+
+def test_dict_section_key_drop_is_caught():
+    for section, keys in artifact.SECTION_KEYS.items():
+        for key in sorted(keys):
+            broken = _minimal()
+            del broken[section][key]
+            with pytest.raises(artifact.ArtifactError):
+                artifact.validate(broken)
+
+
+def test_calibrate_subset_validation():
+    data = _minimal()
+    base = {k: data[k] for k in artifact.CALIBRATE_SECTIONS}
+    # the full-sections default rejects the unmerged artifact
+    with pytest.raises(artifact.ArtifactError, match="overlap"):
+        artifact.validate(base)
+    # present-but-malformed extra sections are rejected even when the
+    # required subset is satisfied
+    extra = dict(base)
+    extra["overlap"] = {"devices": 8}  # missing the other overlap keys
+    with pytest.raises(artifact.ArtifactError, match="overlap"):
+        artifact.validate(extra, sections=artifact.CALIBRATE_SECTIONS)
+
+
+def test_malformed_scalars_and_rows_are_caught():
+    broken = _minimal()
+    broken["sizes"] = []
+    with pytest.raises(artifact.ArtifactError, match="sizes"):
+        artifact.validate(broken)
+    broken = _minimal()
+    broken["topology"] = {"nodes": 4}
+    with pytest.raises(artifact.ArtifactError, match="topology"):
+        artifact.validate(broken)
+    broken = _minimal()
+    broken["latency_rows"] = "not-a-list"
+    with pytest.raises(artifact.ArtifactError, match="latency_rows"):
+        artifact.validate(broken)
+    broken = _minimal()
+    broken["latency_rows"] = []
+    with pytest.raises(artifact.ArtifactError, match="latency_rows"):
+        artifact.validate(broken)
+
+
+@pytest.mark.skipif(not ARTIFACT.exists(),
+                    reason="generated artifact not present "
+                           "(run benchmarks/run.py calibrate)")
+def test_generated_artifact_validates_and_per_plan_is_populated():
+    data = artifact.validate_file(ARTIFACT)
+    for row in data["model_vs_measured"]:
+        assert row["per_plan"], row["collective"]
+        plans = {p["plan"] for p in row["per_plan"]}
+        # the measured winner appears among the per-plan rows
+        assert any(p.startswith(row["measured_algo"]) for p in plans), row
+        for p in row["per_plan"]:
+            assert p["measured_us"] > 0.0
+            if p["model_us"] is not None:
+                want = (p["measured_us"] - p["model_us"]) / p["model_us"]
+                assert abs(p["signed_rel_err"] - want) < 1e-9

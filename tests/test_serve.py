@@ -125,6 +125,15 @@ def test_engine_token_sync_resolves_through_selector_2dev():
     assert "serve_sync_check" in out and "OK" in out
 
 
+@pytest.mark.slow
+def test_engine_token_sync_and_metrics_8dev():
+    """8-device leg: the same token-sync contract plus Engine.metrics()
+    (non-zero tick p50/p99, occupancy, rebind count) and the rebind-storm
+    warning, asserted inside the check."""
+    out = run_check("serve_sync_check.py", 8, 4, 2)
+    assert "serve_sync_check N=4 P=2: OK" in out
+
+
 def test_data_determinism_and_structure():
     ds = SyntheticLM(vocab=64, seq_len=32, global_batch=4, seed=7)
     b1 = ds.batch(3)
