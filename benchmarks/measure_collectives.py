@@ -47,6 +47,14 @@ Modes:
 The mesh factors the ambient device count into (node, local) — run.py
 forces 8 host devices (4x2); the CI conformance matrix runs the overlap
 leg at {1, 2, 8}.
+
+Under the multi-process launcher (``python -m repro.distributed.launch
+--processes K --devices M -- benchmarks/measure_collectives.py
+--calibrate OUT``) the mesh is ``(K processes, M devices)`` with the node
+axis on the process boundary (host_ipc inter / host_cpu intra links); only
+``--calibrate`` is supported there — every rank runs the SPMD sweeps,
+rank 0 merges the tables and writes one artifact stamped
+``backend="multiprocess"`` / ``process_count=K``.
 """
 import argparse
 import json
@@ -61,15 +69,30 @@ from repro.core import (artifact as artifact_schema, autotune, compress,
                         costmodel, mcoll, runtime, telemetry)
 from repro.core.comm import Communicator
 from repro.core.topology import Topology
+from repro.distributed import backend as dist_backend
+from repro.launch.mesh import make_process_mesh
+
+# must run before the first device query: under the repro.distributed
+# launcher this joins the multi-controller runtime (no-op otherwise)
+BACKEND = dist_backend.auto_initialize()
 
 DC = jax.device_count()
-P = 2 if DC % 2 == 0 else 1
-N = DC // P
-mesh = jax.make_mesh((N, P), ("node", "local"))
-topo = Topology.from_mesh(mesh)  # link metadata derived: host_cpu/host_cpu
+if BACKEND.multiprocess:
+    # node axis == process boundary, so derive_link splits host_ipc (inter)
+    # from host_cpu (intra) — the hierarchy the calibration is measuring
+    mesh = make_process_mesh()
+    N, P = mesh.devices.shape
+else:
+    P = 2 if DC % 2 == 0 else 1
+    N = DC // P
+    mesh = jax.make_mesh((N, P), ("node", "local"))
+topo = Topology.from_mesh(mesh)
 comm = Communicator(mesh, topo)
 
-CAL_SIZES = (256, 4096, 65536)
+# cross-process gloo runs are far slower per dispatch than in-process host
+# devices; trim the sweep so the multiprocess calibrate leg stays tractable
+CAL_SIZES = (256, 4096) if BACKEND.multiprocess else (256, 4096, 65536)
+CAL_ITERS = 3 if BACKEND.multiprocess else 10
 
 
 def bench(fn, x, n=20):
@@ -161,7 +184,10 @@ def measure_mode():
 
 def calibrate_mode(out_path: str):
     sel = comm.selector
-    rows = comm.calibrate(sizes=CAL_SIZES, iters=10)
+    # multiprocess trims codec plans too (the compression section below
+    # still measures every lossy codec end to end on the same mesh)
+    rows = comm.calibrate(sizes=CAL_SIZES, iters=CAL_ITERS,
+                          codecs=(() if BACKEND.multiprocess else None))
     for r in rows:
         plan = autotune.encode_plan(r.algo, r.chunks, r.codec)
         print(f"calibrate/{r.collective}/{plan}/{r.nbytes}B,"
@@ -260,7 +286,7 @@ def calibrate_mode(out_path: str):
         sample = jax.random.normal(jax.random.PRNGKey(1), (1, m))
         achieved_ratio = 4.0 * m / c.wire_bytes(c.encode(sample))
         out = comm.allreduce(zr, algo="pip_mcoll", codec=cd)
-        err = float(np.abs(np.asarray(out)[0] - exact).max())
+        err = float(np.abs(dist_backend.to_host(out)[0] - exact).max())
         bound_abs = compress.collective_tolerance(cd, "allreduce", N * P, A)
         xover_model = costmodel.compressed_crossover_bytes(
             "allreduce", "pip_pipeline", topo, net, cd, sizes=sweep_sizes)
@@ -285,7 +311,7 @@ def calibrate_mode(out_path: str):
               f"ratio={achieved_ratio:.2f}x err={err:.2e} "
               f"bound={bound_abs:.2e} model_crossover={xover_model} "
               f"budget_crossover={xover_budget}")
-    artifact = {
+    artifact = dist_backend.stamp_artifact({
         "topology": autotune.topo_key(topo),
         "sizes": list(CAL_SIZES),
         "table": sel.table.to_json(),
@@ -293,15 +319,19 @@ def calibrate_mode(out_path: str):
         "model_vs_measured": comparison,
         "pipeline_crossover": pipeline_rows,
         "compression": compression_rows,
-    }
+    })
     # refuse to write a malformed artifact: every section + row key this
     # mode is responsible for must be present (schema in core.artifact)
     artifact_schema.validate(artifact,
                              sections=artifact_schema.CALIBRATE_SECTIONS)
-    path = pathlib.Path(out_path)
-    path.parent.mkdir(parents=True, exist_ok=True)
-    path.write_text(json.dumps(artifact, indent=1, sort_keys=True))
-    print(f"calibrate/artifact,0.0,{path}")
+    # comm.calibrate() already folded every rank's rows into rank 0's
+    # table, so rank 0 writes the single merged artifact
+    if BACKEND.process_index == 0:
+        path = pathlib.Path(out_path)
+        path.parent.mkdir(parents=True, exist_ok=True)
+        path.write_text(json.dumps(artifact, indent=1, sort_keys=True))
+        print(f"calibrate/artifact,0.0,{path}")
+    dist_backend.barrier("calibrate_mode/done")
 
 
 def overlap_mode(out_path=None):
@@ -661,6 +691,11 @@ if __name__ == "__main__":
                          "export a Chrome/Perfetto trace JSON at the end "
                          "(orthogonal to the mode flags)")
     args = ap.parse_args()
+    if BACKEND.multiprocess and not args.calibrate:
+        raise SystemExit(
+            "multi-process runs support --calibrate only; the measure/"
+            "overlap/codec-kernel legs are single-process benchmarks "
+            "(run them without the repro.distributed launcher)")
     if args.trace:
         telemetry.enable()
     if args.calibrate:

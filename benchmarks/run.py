@@ -133,6 +133,31 @@ def _bench_subprocess(extra_args, prefix: str, timeout: int,
             emit(parts[0], float(parts[1]), ",".join(parts[2:]))
 
 
+def _bench_multiprocess(extra_args, prefix: str, timeout: int,
+                        processes: int, devices: int) -> None:
+    """Run measure_collectives.py under the repro.distributed launcher:
+    ``processes`` coordinated jax.distributed workers with ``devices``
+    forced CPU host devices each. The launcher re-prints rank 0's stdout,
+    so row re-emission works exactly like :func:`_bench_subprocess`;
+    failures are fatal (the calibrate leg is a CI gate)."""
+    script = REPO / "benchmarks" / "measure_collectives.py"
+    env = dict(os.environ)
+    env["PYTHONPATH"] = f"{REPO / 'src'}:{env.get('PYTHONPATH', '')}"
+    out = subprocess.run(
+        [sys.executable, "-m", "repro.distributed.launch",
+         "--processes", str(processes), "--devices", str(devices),
+         "--timeout", str(timeout), "--", str(script), *extra_args],
+        env=env, capture_output=True, text=True, timeout=timeout + 120)
+    if out.returncode != 0:
+        emit(f"{prefix}ERROR", 0.0,
+             (out.stderr or out.stdout)[-400:].replace(",", ";"))
+        raise SystemExit(1)
+    for line in out.stdout.splitlines():
+        if line.startswith(prefix):
+            parts = line.split(",")
+            emit(parts[0], float(parts[1]), ",".join(parts[2:]))
+
+
 def measured_rounds():
     """Wall-clock the real shard_map algorithms (8 CPU host devices,
     subprocess so this process keeps 1 device). CPU timings demonstrate
@@ -209,13 +234,22 @@ def autotune_table():
                  f"{row['budget_selection_crossover_bytes']}B")
 
 
-def calibrate_collectives():
-    """Run the measured calibration sweep on the 8-CPU-device mesh
-    (subprocess, like measured_rounds) and persist the tuning-table artifact
-    to results/BENCH_collectives.json for CI upload + autotune_table."""
+def calibrate_collectives(processes: int = 1, devices: int = 4):
+    """Run the measured calibration sweep and persist the tuning-table
+    artifact to results/BENCH_collectives.json for CI upload +
+    autotune_table. Default: the 8-CPU-device single-process mesh
+    (subprocess, like measured_rounds); ``processes > 1`` runs it under
+    the repro.distributed launcher instead — a real multi-controller
+    ``(processes, devices)`` mesh with the node axis on the process
+    boundary, rank 0 writing the merged artifact."""
     out_json = REPO / "results" / "BENCH_collectives.json"
-    _bench_subprocess(["--calibrate", str(out_json)], "calibrate/",
-                      timeout=1800, fatal=True)
+    if processes > 1:
+        _bench_multiprocess(["--calibrate", str(out_json)], "calibrate/",
+                            timeout=3000, processes=processes,
+                            devices=devices)
+    else:
+        _bench_subprocess(["--calibrate", str(out_json)], "calibrate/",
+                          timeout=1800, fatal=True)
 
 
 def overlap_collectives():
@@ -287,11 +321,21 @@ def roofline_summary():
 
 def main() -> None:
     print("name,us_per_call,derived")
-    if "calibrate" in sys.argv[1:]:
+    argv = sys.argv[1:]
+
+    def _flag(name: str, default: int) -> int:
+        return int(argv[argv.index(name) + 1]) if name in argv else default
+
+    if "calibrate" in argv:
         # CI smoke: measured calibration sweep + persistent-op overlap leg
         # + codec-kernel microbench -> BENCH_collectives.json (table,
-        # crossovers, overlap + codec_kernels sections)
-        calibrate_collectives()
+        # crossovers, overlap + codec_kernels sections).
+        # ``calibrate --processes K [--devices M]`` runs the sweep on a
+        # K-process multi-controller mesh (M CPU devices per process);
+        # the overlap/codec legs stay single-process and merge into the
+        # same artifact, preserving its backend/process_count stamp.
+        calibrate_collectives(processes=_flag("--processes", 1),
+                              devices=_flag("--devices", 4))
         overlap_collectives()
         codec_kernel_collectives()
         # the three modes above each rewrite/merge the artifact; validate

@@ -13,10 +13,13 @@ from __future__ import annotations
 
 from typing import Iterable, Optional, Tuple
 
-#: sections ``--calibrate`` writes in one shot
+#: sections ``--calibrate`` writes in one shot; ``backend`` /
+#: ``process_count`` record the runtime the numbers were measured under
+#: ("single" vs "multiprocess" — see ``repro.distributed.backend``)
 CALIBRATE_SECTIONS: Tuple[str, ...] = (
-    "topology", "sizes", "table", "latency_rows", "model_vs_measured",
-    "pipeline_crossover", "compression")
+    "topology", "sizes", "backend", "process_count", "table",
+    "latency_rows", "model_vs_measured", "pipeline_crossover",
+    "compression")
 
 #: sections merged in by the other modes; a full ``run.py calibrate``
 #: artifact carries every section
@@ -85,6 +88,14 @@ def validate(data: dict, sections: Optional[Tuple[str, ...]] = None) -> dict:
     _require_keys("artifact", data, required)
     if "topology" in data and not isinstance(data["topology"], str):
         raise ArtifactError("topology must be a string topo key")
+    if "backend" in data:
+        if not isinstance(data["backend"], str) or not data["backend"]:
+            raise ArtifactError("backend must be a non-empty string "
+                                "(e.g. 'single', 'multiprocess')")
+    if "process_count" in data:
+        pc = data["process_count"]
+        if not isinstance(pc, int) or isinstance(pc, bool) or pc < 1:
+            raise ArtifactError("process_count must be an int >= 1")
     if "sizes" in data:
         if (not isinstance(data["sizes"], list) or not data["sizes"]
                 or not all(isinstance(s, int) for s in data["sizes"])):

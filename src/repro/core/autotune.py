@@ -304,16 +304,30 @@ class TuningTable:
         except KeyError:
             return None
 
-    def merge(self, other: "TuningTable") -> None:
-        """Fold another table's measurements in (other wins on conflicts)."""
+    def merge(self, other: "TuningTable", reduce=None) -> None:
+        """Fold another table's measurements in.
+
+        ``reduce=None`` (default) keeps the historical other-wins-on-
+        conflict semantics. A callable ``reduce(mine, theirs)`` resolves
+        same-key conflicts instead — cross-process calibration merges pass
+        ``max`` because an SPMD collective is only as fast as its slowest
+        rank, so the pessimistic timing is the honest one.
+        """
         for tk, colls in other.entries.items():
             for coll, dts in colls.items():
                 for dt, buckets in dts.items():
                     for b, algos in buckets.items():
-                        (self.entries.setdefault(tk, {})
-                             .setdefault(coll, {})
-                             .setdefault(dt, {})
-                             .setdefault(b, {})).update(algos)
+                        mine = (self.entries.setdefault(tk, {})
+                                    .setdefault(coll, {})
+                                    .setdefault(dt, {})
+                                    .setdefault(b, {}))
+                        if reduce is None:
+                            mine.update(algos)
+                        else:
+                            for algo, sec in algos.items():
+                                mine[algo] = (float(sec) if algo not in mine
+                                              else float(reduce(mine[algo],
+                                                                sec)))
         self.generation += 1
 
     # -- persistence --------------------------------------------------------

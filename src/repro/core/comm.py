@@ -324,14 +324,15 @@ class PersistentOp:
                         **self._tags())
 
     def _check_operand(self, x, what: str = "operand"):
-        x = jnp.asarray(x)
+        if not isinstance(x, jax.Array):
+            x = jnp.asarray(x)
         if tuple(x.shape) != self.shape or x.dtype != self.dtype:
             raise ValueError(
                 f"persistent {self.collective} op compiled for "
                 f"{self.shape}/{self.dtype}, got {what} {tuple(x.shape)}/"
                 f"{x.dtype}; init a new op for a new operand spec")
         if getattr(x, "sharding", None) != self._in_sharding:
-            x = jax.device_put(x, self._in_sharding)
+            x = runtime.to_sharding(x, self._in_sharding)
         return x
 
     def start(self, x, carry=None) -> CollHandle:
@@ -545,7 +546,7 @@ class Communicator:
               stacked: bool = True, **kw):
         spec = PlanSpec(name, algo, chunks, chunk_bytes, codec,
                         error_budget, stacked)
-        x = jnp.asarray(x)
+        x = runtime.global_operand(self.mesh, name, x)
         algo_r, kw_r = self._resolve(spec, x, kw)
         return runtime.run_resolved(self.mesh, self._require_topo(), name,
                                     algo_r, x, stacked=stacked, **kw_r)
@@ -669,16 +670,25 @@ class Communicator:
         use — a fresh ``comm.split(axes=...)`` then resolves
         ``algo="auto"`` from measurement instead of the cost-model prior.
         All rows land in the shared selector table; ``path=`` (when given)
-        is saved once, after the whole lattice."""
+        is saved once, after the whole lattice.
+
+        Under a multi-controller runtime every process runs the same sweeps
+        (SPMD — the timed programs are cross-process collectives), then the
+        per-process tables are folded into rank 0's
+        (``distributed.backend.merge_tuning_table``) so ``path=`` is
+        written exactly once, by rank 0, with every rank's rows."""
+        from repro.distributed import backend as _dist
         kw.setdefault("selector", self.selector)
-        if not include_splits:
-            return runtime.calibrate(self.mesh, self._require_topo(), **kw)
         path = kw.pop("path", None)
         rows = list(runtime.calibrate(self.mesh, self._require_topo(), **kw))
-        for child in self.split_lattice():
-            rows.extend(runtime.calibrate(child.mesh, child.topo, **kw))
-        if path is not None:
+        if include_splits:
+            for child in self.split_lattice():
+                rows.extend(runtime.calibrate(child.mesh, child.topo, **kw))
+        if _dist.is_multiprocess():
+            _dist.merge_tuning_table(self.selector.table)
+        if path is not None and _dist.process_rank() == 0:
             self.selector.table.save(path)
+        _dist.barrier("comm.calibrate/saved")
         return rows
 
     def cache_stats(self) -> "runtime.CacheStats":

@@ -105,6 +105,15 @@ def host_cpu() -> NetParams:
                      alpha_intra=2.0e-7, beta_intra=1 / 5.0e10, msg_rate=1e8)
 
 
+def host_ipc() -> NetParams:
+    """Cross-process boundary between local jax.distributed controllers
+    (gloo over loopback/shared memory): far higher latency and lower
+    bandwidth than in-process memcpy, which is exactly the intra/inter
+    asymmetry the multi-leader algorithms exploit."""
+    return NetParams("host_ipc", alpha_inter=6.0e-6, beta_inter=1 / 8.0e9,
+                     alpha_intra=2.0e-7, beta_intra=1 / 5.0e10, msg_rate=2e7)
+
+
 # name -> factory; the string side of Topology.node_link / local_link.
 NET_PRESETS = {
     "pip": paper_cluster_pip,
@@ -115,6 +124,7 @@ NET_PRESETS = {
     "tpu_v5e_ici": tpu_v5e_pod,
     "tpu_v5e_dcn": tpu_v5e_multipod,
     "host_cpu": host_cpu,
+    "host_ipc": host_ipc,
 }
 
 _DEFAULT_PRESET = "tpu_v5e_dcn"

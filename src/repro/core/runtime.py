@@ -552,7 +552,7 @@ def run(mesh, topo: Topology, name: str, algo: str, x, *,
     if name not in _WIRING:  # before selector resolution, for the friendly
         raise ValueError(f"unknown collective {name!r}; "  # error either way
                          f"one of {collectives()}")
-    x = jnp.asarray(x)
+    x = global_operand(mesh, name, x)
     algo, kw = resolve_algo(topo, name, algo, x, kw,
                             error_budget=error_budget)
     return run_resolved(mesh, topo, name, algo, x, stacked=stacked, **kw)
@@ -607,6 +607,46 @@ def input_sharding(mesh, topo: Topology, collective: str) -> NamedSharding:
     del topo  # operands are global over the whole mesh (cf. _construct)
     return NamedSharding(mesh, _in_spec(_WIRING[collective].in_mode,
                                         tuple(mesh.axis_names)))
+
+
+def _dist_backend():
+    from repro.distributed import backend as _dist  # lazy: core stays
+    return _dist                                    # importable standalone
+
+
+def to_sharding(x, sharding):
+    """Commit ``x`` to ``sharding`` as a (possibly cross-process) global.
+
+    Single-process this is exactly ``device_put`` — bit-identical to the
+    historical behavior, including the exec-cache interaction. Under a
+    multi-controller runtime a host value becomes a global array with each
+    process contributing its own shards, and an existing non-addressable
+    global on the wrong sharding is resharded through a jitted identity
+    (``device_put`` cannot move shards it does not own).
+    """
+    dist = _dist_backend()
+    if not dist.is_multiprocess():
+        return jax.device_put(x, sharding)
+    if isinstance(x, jax.Array) and not x.is_fully_addressable:
+        if x.sharding == sharding:
+            return x
+        return jax.jit(lambda v: v, out_shardings=sharding)(x)
+    return dist.global_array(np.asarray(x), sharding)
+
+
+def global_operand(mesh, collective, x):
+    """Canonicalize one collective operand for ``mesh``.
+
+    Single-process: plain ``jnp.asarray`` (uncommitted, so the exec cache
+    keeps mixing committed/uncommitted operands exactly as before). Under a
+    multi-controller runtime every operand is committed to the collective's
+    canonical :func:`input_sharding` so compiled executables always see one
+    layout — each process passes the same full logical value.
+    """
+    dist = _dist_backend()
+    if not dist.is_multiprocess():
+        return jnp.asarray(x)
+    return to_sharding(x, input_sharding(mesh, None, collective))
 
 
 def compile_persistent(mesh, topo: Topology, name: str, algo: str,

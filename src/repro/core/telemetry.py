@@ -518,18 +518,34 @@ def observe_codec_ratio(codec: str, ratio: float) -> None:
 # ---------------------------------------------------------------------------
 
 
+def _process_rank() -> Tuple[int, int]:
+    """(process_index, process_count) of the live runtime — (0, 1) when jax
+    is absent/uninitialized, so telemetry stays importable everywhere."""
+    try:
+        import jax
+        return int(jax.process_index()), int(jax.process_count())
+    except Exception:
+        return 0, 1
+
+
 def snapshot() -> dict:
     """Unified observability snapshot: cache stats, selection stats, live
     persistent ops, tracer occupancy, registry counters/histograms, and the
-    per-plan observation medians."""
+    per-plan observation medians.
+
+    Observations are process-local; rows carry this process's rank (and the
+    top level a ``process`` block) so rank-0 merges of multi-controller
+    snapshots don't alias per-process plan latencies."""
     from repro.core import autotune, comm, runtime  # lazy: no import cycle
     cs = runtime.cache_stats()
     ss = runtime.selection_stats()
+    rank, nprocs = _process_rank()
     with _LOCK:
         n_spans = len(_SPANS)
         obs = list(_PLAN_OBS.values())
     out = {
         "enabled": _ENABLED,
+        "process": {"index": rank, "count": nprocs},
         "tracer": {"spans": n_spans, "dropped": _DROPPED,
                    "capacity": _SPANS.maxlen},
         "cache": {**dataclasses.asdict(cs),
@@ -548,6 +564,7 @@ def snapshot() -> dict:
             "observed_median_s": o.median(synced=True),
             "dispatch_samples": len(o.dispatch_samples),
             "dispatch_median_s": o.median(synced=False),
+            "rank": rank,
         } for o in obs],
     }
     out.update(_REGISTRY.to_dict())
@@ -580,6 +597,9 @@ class DriftRow:
     drift_vs_model: Optional[float]
     flagged: bool
     model_flagged: bool
+    #: process rank the observations were taken on (0 single-process);
+    #: merged multi-controller reports keep per-rank rows distinct
+    rank: int = 0
 
 
 def drift_report(selector=None, threshold: float = 0.5,
@@ -595,6 +615,7 @@ def drift_report(selector=None, threshold: float = 0.5,
     sorted worst-first by table drift magnitude."""
     from repro.core import autotune  # lazy: no import cycle
     sel = selector if selector is not None else autotune.default_selector()
+    rank, _ = _process_rank()
     rows: List[DriftRow] = []
     for o in plan_observations():
         if len(o.samples) < max(1, int(min_samples)):
@@ -622,7 +643,8 @@ def drift_report(selector=None, threshold: float = 0.5,
             _bucket(o.nbytes), len(o.samples), observed, table_s, model_s,
             drift_t, drift_m,
             flagged=_diverged(drift_t, float(threshold)),
-            model_flagged=_diverged(drift_m, float(model_threshold))))
+            model_flagged=_diverged(drift_m, float(model_threshold)),
+            rank=rank))
     rows.sort(key=lambda r: abs(r.drift_vs_table or 0.0), reverse=True)
     return rows
 

@@ -18,41 +18,79 @@ the mesh's devices when not given explicitly.
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Tuple
+import warnings
+from typing import Optional, Set, Tuple
+
+#: platforms already warned about in :func:`derive_link` fallback (warn once
+#: per platform per process, so calibration logs record which link rows are
+#: folklore without drowning in repeats)
+_FALLBACK_WARNED: Set[str] = set()
 
 
-def derive_link(mesh, axis: str, level: str) -> str:
-    """Best-effort link-class name for one mesh axis.
-
-    Heuristics (coarse by design — overridable per Topology):
-      * CPU host devices (forced device counts, dev boxes)  -> "host_cpu"
-      * an axis that crosses process/slice boundaries        -> "tpu_v5e_dcn"
-      * otherwise (single-slice accelerator axis, including
-        degenerate size-1 axes, which carry no traffic)      -> "tpu_v5e_ici"
-    """
-    try:
-        dev0 = mesh.devices.flat[0]
-    except (AttributeError, IndexError):
-        return "host_cpu"
-    if getattr(dev0, "platform", "cpu") == "cpu":
-        return "host_cpu"
-    del level  # both levels use the same heuristics; kept for call-site clarity
+def _axis_crossings(mesh, axis: str) -> Set[str]:
+    """Boundary fields (``process_index`` / ``slice_index``) that vary along
+    ``axis``, walked at the origin of all other mesh axes. Empty for
+    degenerate size-1 axes (no traffic) and on any introspection failure."""
+    crossed: Set[str] = set()
     try:
         idx = list(mesh.axis_names).index(axis)
         if mesh.devices.shape[idx] == 1:
-            return "tpu_v5e_ici"  # degenerate axis: no traffic, cheap link
-        # walk the axis at the origin of all other axes
+            return crossed
         sel: list = [0] * mesh.devices.ndim
         sel[idx] = slice(None)
         lane = mesh.devices[tuple(sel)]
-        for field in ("slice_index", "process_index"):
+        for field in ("process_index", "slice_index"):
             vals = {getattr(d, field, None) for d in lane.flat}
             vals.discard(None)
             if len(vals) > 1:
-                return "tpu_v5e_dcn"
+                crossed.add(field)
     except (KeyError, ValueError, TypeError):
         pass
-    return "tpu_v5e_ici"
+    return crossed
+
+
+def _warn_fallback(platform: str, link: str) -> None:
+    if platform in _FALLBACK_WARNED:
+        return
+    _FALLBACK_WARNED.add(platform)
+    warnings.warn(
+        f"derive_link: no measured NetParams preset for platform "
+        f"{platform!r}; falling back to {link!r} constants — calibration "
+        f"rows keyed on this link class are folklore until a preset is "
+        f"added to costmodel.NET_PRESETS", RuntimeWarning, stacklevel=3)
+
+
+def derive_link(mesh, axis: str, level: str) -> str:
+    """Link-class name for one mesh axis (overridable per Topology).
+
+    Process boundaries classify first: an axis whose devices span multiple
+    ``process_index`` values is an *inter* link regardless of platform —
+    that is the node-boundary hierarchy the multi-leader algorithms split
+    on. Then the platform names the preset:
+
+      * cpu:  cross-process -> "host_ipc", in-process -> "host_cpu"
+      * tpu:  cross-process/slice -> "tpu_v5e_dcn", else -> "tpu_v5e_ici"
+      * anything else: classified the same way from process boundaries but
+        mapped onto the host presets, with a once-per-platform warning so
+        calibration tables record which rows rest on folklore constants.
+
+    Degenerate size-1 axes carry no traffic and take the intra-class link.
+    """
+    del level  # boundary walk is what distinguishes levels, not the caller
+    try:
+        dev0 = mesh.devices.flat[0]
+    except (AttributeError, IndexError):
+        _warn_fallback("<no devices>", "host_cpu")
+        return "host_cpu"
+    platform = getattr(dev0, "platform", None) or "<unknown>"
+    crossed = _axis_crossings(mesh, axis)
+    if platform == "cpu":
+        return "host_ipc" if "process_index" in crossed else "host_cpu"
+    if platform == "tpu":
+        return "tpu_v5e_dcn" if crossed else "tpu_v5e_ici"
+    link = "host_ipc" if "process_index" in crossed else "host_cpu"
+    _warn_fallback(platform, link)
+    return link
 
 
 @dataclasses.dataclass(frozen=True)

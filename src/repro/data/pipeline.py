@@ -1,10 +1,12 @@
 """Deterministic synthetic token pipeline with host sharding + prefetch.
 
-Every batch is a pure function of (seed, step), so: (a) restarts reproduce
-the exact stream with no data-state checkpointing beyond the step counter,
-(b) each host generates only its slice (process_index-based host sharding —
-on the 1-process container that is the whole batch), (c) a background
-thread keeps `prefetch` batches ahead of the training loop.
+Every batch row is a pure function of (seed, step, global row index), so:
+(a) restarts reproduce the exact stream with no data-state checkpointing
+beyond the step counter, (b) each host generates only its slice
+(process_index-based host sharding — on a 1-process runtime that is the
+whole batch), and the K-process global batch is bitwise-equal to the
+1-process one, (c) a background thread keeps `prefetch` batches ahead of
+the training loop.
 
 The token distribution is a mixture of Zipf-like unigram draws and repeated
 n-gram motifs so that a small LM's loss actually decreases (pure-uniform
@@ -34,29 +36,40 @@ class SyntheticLM:
         assert global_batch % n_proc == 0
         self.host_batch = global_batch // n_proc
         self.host_offset = jax.process_index() * self.host_batch
+        # Zipf-ish unigram distribution (shared across rows)
+        probs = 1.0 / np.arange(1, vocab + 1)
+        self._probs = probs / probs.sum()
+
+    def _row(self, step: int, row: int):
+        """One *global* batch row: a pure function of (seed, step, global
+        row index) — invariant to process count, so K hosts each stacking
+        their own row range reproduce the 1-process batch bitwise."""
+        rng = np.random.default_rng(
+            np.random.SeedSequence([self.seed, step, row]))
+        S, V = self.seq_len, self.vocab
+        toks = rng.choice(V, size=(S + 1,), p=self._probs).astype(np.int32)
+        # inject a repeated motif (learnable structure)
+        motif = rng.integers(0, V, size=(8,), dtype=np.int32)
+        for start in range(0, S - 8, max(16, S // 8)):
+            toks[start:start + 8] = motif
+        frames = embeds = None
+        if self.frames_dim:
+            frames = rng.standard_normal(
+                (S, self.frames_dim)).astype(np.float32) * 0.02
+        if self.embeds_len:
+            embeds = rng.standard_normal(
+                (self.embeds_len, self.embeds_dim)).astype(np.float32) * 0.02
+        return toks, frames, embeds
 
     def batch(self, step: int) -> Dict[str, np.ndarray]:
-        rng = np.random.default_rng(
-            np.random.SeedSequence([self.seed, step, self.host_offset]))
-        B, S, V = self.host_batch, self.seq_len, self.vocab
-        # Zipf-ish unigrams
-        ranks = np.arange(1, V + 1)
-        probs = 1.0 / ranks
-        probs /= probs.sum()
-        toks = rng.choice(V, size=(B, S + 1), p=probs).astype(np.int32)
-        # inject repeated motifs (learnable structure)
-        motif = rng.integers(0, V, size=(8,), dtype=np.int32)
-        for b in range(B):
-            for start in range(0, S - 8, max(16, S // 8)):
-                toks[b, start:start + 8] = motif
+        rows = [self._row(step, self.host_offset + b)
+                for b in range(self.host_batch)]
+        toks = np.stack([r[0] for r in rows])
         out = {"tokens": toks[:, :-1], "labels": toks[:, 1:]}
         if self.frames_dim:
-            out["frames"] = rng.standard_normal(
-                (B, S, self.frames_dim)).astype(np.float32) * 0.02
+            out["frames"] = np.stack([r[1] for r in rows])
         if self.embeds_len:
-            out["embeds"] = rng.standard_normal(
-                (B, self.embeds_len, self.embeds_dim)).astype(np.float32) \
-                * 0.02
+            out["embeds"] = np.stack([r[2] for r in rows])
         return out
 
     def iterator(self, start_step: int = 0, prefetch: int = 2

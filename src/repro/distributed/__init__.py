@@ -1,0 +1,28 @@
+"""Multi-process SPMD backend: a local multi-controller ``jax.distributed``
+runtime behind the Communicator stack.
+
+Two pieces:
+
+  * :mod:`repro.distributed.backend` — process-level runtime descriptor and
+    the helpers ``core.runtime`` / ``core.comm`` consult so
+    ``communicator(mesh)`` works unchanged whether the mesh spans one
+    process or many (global-operand construction, cross-process barriers,
+    rank-0 tuning-table merge, artifact stamping).
+  * :mod:`repro.distributed.launch` — a launcher that spawns K coordinated
+    local processes (``jax.distributed.initialize`` against a spawned
+    coordinator on loopback, CPU device count per process configurable)
+    and runs a user function — or re-execs an arbitrary script — under
+    multi-controller SPMD.
+"""
+from repro.distributed.backend import (Backend, auto_initialize, barrier,
+                                       current_backend, global_array,
+                                       is_multiprocess, merge_tuning_table,
+                                       process_count, process_rank, to_host)
+from repro.distributed.launch import LaunchError, run, spawn
+
+__all__ = [
+    "Backend", "auto_initialize", "barrier", "current_backend",
+    "global_array", "is_multiprocess", "merge_tuning_table",
+    "process_count", "process_rank", "to_host",
+    "LaunchError", "run", "spawn",
+]

@@ -1,0 +1,214 @@
+"""Process-level runtime backend for the Communicator stack.
+
+``core.runtime`` and ``core.comm`` consult this module so the same
+``communicator(mesh)`` call works whether the mesh spans one process or
+many. The contract:
+
+  * :func:`auto_initialize` bootstraps ``jax.distributed`` from the
+    ``REPRO_DIST_*`` environment the launcher (:mod:`repro.distributed
+    .launch`) sets — a no-op in a plain single-process run, so every
+    script can call it unconditionally before touching devices. Ordering
+    matters on CPU: the gloo collectives implementation must be selected
+    *before* ``jax.distributed.initialize`` creates the backend client
+    (the default "none" cannot run cross-process programs at all).
+  * :func:`global_array` builds a global ``jax.Array`` from a host value —
+    ``device_put`` only commits to this process's devices, so a
+    multi-controller runtime assembles globals via
+    ``jax.make_array_from_callback`` (each process contributes exactly the
+    shards it owns).
+  * :func:`to_host` inverts that: a fully-addressable array is a plain
+    ``np.asarray``; a cross-process global is gathered with
+    ``multihost_utils.process_allgather`` (every process gets the full
+    value).
+  * :func:`merge_tuning_table` is the rank-0 calibration merge: each rank
+    writes its measured :class:`~repro.core.autotune.TuningTable` to the
+    launcher's shared scratch directory, then rank 0 folds every rank's
+    rows into its own table so one process can persist a single merged
+    artifact.
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+import pathlib
+import tempfile
+from typing import Optional
+
+import jax
+import numpy as np
+
+#: environment contract between the launcher and worker processes
+ENV_PROCS = "REPRO_DIST_PROCS"
+ENV_RANK = "REPRO_DIST_RANK"
+ENV_COORD = "REPRO_DIST_COORD"
+ENV_SCRATCH = "REPRO_DIST_SCRATCH"
+
+_INITIALIZED = False
+
+
+@dataclasses.dataclass(frozen=True)
+class Backend:
+    """Descriptor of the process-level runtime this process runs under.
+
+    ``name`` is ``"single"`` for the ordinary one-process runtime and
+    ``"multiprocess"`` for a multi-controller ``jax.distributed`` run;
+    both values land verbatim in the calibration artifact's ``backend``
+    field (schema: ``core.artifact``).
+    """
+
+    name: str
+    process_count: int
+    process_index: int
+    coordinator: str = ""
+
+    @property
+    def multiprocess(self) -> bool:
+        return self.process_count > 1
+
+
+def auto_initialize() -> Backend:
+    """Initialize ``jax.distributed`` from the launcher's environment.
+
+    Reads ``REPRO_DIST_PROCS`` / ``REPRO_DIST_RANK`` / ``REPRO_DIST_COORD``;
+    when absent (or one process) this is a no-op returning the single
+    backend, so scripts call it unconditionally as their first
+    device-touching act. Idempotent.
+    """
+    global _INITIALIZED
+    nprocs = int(os.environ.get(ENV_PROCS, "1"))
+    if nprocs <= 1:
+        return current_backend()
+    if not _INITIALIZED:
+        rank = int(os.environ[ENV_RANK])
+        coord = os.environ[ENV_COORD]
+        # CPU cross-process collectives need gloo selected BEFORE the
+        # backend client exists; the default "none" raises "Multiprocess
+        # computations aren't implemented on the CPU backend" at run time.
+        jax.config.update("jax_cpu_collectives_implementation", "gloo")
+        jax.distributed.initialize(coordinator_address=coord,
+                                   num_processes=nprocs, process_id=rank)
+        _INITIALIZED = True
+    return current_backend()
+
+
+def current_backend() -> Backend:
+    """The live backend descriptor (queries the initialized jax runtime)."""
+    n = int(jax.process_count())
+    if n > 1:
+        return Backend("multiprocess", n, int(jax.process_index()),
+                       os.environ.get(ENV_COORD, ""))
+    return Backend("single", 1, 0)
+
+
+def is_multiprocess() -> bool:
+    return jax.process_count() > 1
+
+
+def process_rank() -> int:
+    return int(jax.process_index())
+
+
+def process_count() -> int:
+    return int(jax.process_count())
+
+
+# ---------------------------------------------------------------------------
+# global arrays across processes
+# ---------------------------------------------------------------------------
+
+
+def global_array(host, sharding):
+    """Commit a host value to ``sharding`` as a global ``jax.Array``.
+
+    Single-process: plain ``device_put``. Multi-process: ``host`` is the
+    full *logical* value (every process passes the same one) and each
+    process contributes the shards its devices own via
+    ``jax.make_array_from_callback``.
+    """
+    host = np.asarray(host)
+    if not is_multiprocess():
+        return jax.device_put(host, sharding)
+    return jax.make_array_from_callback(host.shape, sharding,
+                                        lambda idx: host[idx])
+
+
+def to_host(x) -> np.ndarray:
+    """The full logical value of ``x`` as a numpy array on every process.
+
+    Fully-addressable arrays (everything in a single-process runtime)
+    convert directly; a cross-process global is gathered through
+    ``multihost_utils.process_allgather`` first.
+    """
+    if not isinstance(x, jax.Array) or getattr(x, "is_fully_addressable",
+                                               True):
+        return np.asarray(x)
+    from jax.experimental import multihost_utils
+    return np.asarray(multihost_utils.process_allgather(x, tiled=True))
+
+
+def barrier(name: str) -> None:
+    """Block until every process reaches this point (no-op single-process).
+
+    ``name`` must match across processes — mismatched barrier names are a
+    programming error jax.distributed detects.
+    """
+    if not is_multiprocess():
+        return
+    from jax.experimental import multihost_utils
+    multihost_utils.sync_global_devices(name)
+
+
+# ---------------------------------------------------------------------------
+# cross-process calibration merge
+# ---------------------------------------------------------------------------
+
+
+def scratch_dir() -> pathlib.Path:
+    """The launcher's shared scratch directory (all ranks see one path);
+    falls back to a stable per-coordinator tempdir when launched by other
+    means."""
+    path = os.environ.get(ENV_SCRATCH)
+    if not path:
+        tag = os.environ.get(ENV_COORD, "single").replace(":", "_")
+        path = os.path.join(tempfile.gettempdir(), f"repro_dist_{tag}")
+    p = pathlib.Path(path)
+    p.mkdir(parents=True, exist_ok=True)
+    return p
+
+
+def merge_tuning_table(table, tag: str = "calibrate") -> int:
+    """Merge every rank's tuning-table rows into rank 0's ``table``.
+
+    Each rank writes its table JSON to the shared scratch directory and
+    synchronizes; rank 0 then folds the other ranks' rows in with
+    ``TuningTable.merge(..., reduce=max)`` — ranks time the same SPMD
+    plans, and a collective is only as fast as its slowest rank. Returns
+    the number of ranks merged (0 in a single-process runtime, where this
+    is a no-op). A trailing barrier keeps every process alive until the
+    merge has read its file.
+    """
+    if not is_multiprocess():
+        return 0
+    from repro.core.autotune import TuningTable
+    rank, nprocs = process_rank(), process_count()
+    base = scratch_dir()
+    mine = base / f"table.{tag}.rank{rank}.json"
+    table.save(mine)
+    barrier(f"merge_tuning_table/{tag}/written")
+    merged = 0
+    if rank == 0:
+        for r in range(1, nprocs):
+            other = base / f"table.{tag}.rank{r}.json"
+            table.merge(TuningTable.load(other), reduce=max)
+            merged += 1
+    barrier(f"merge_tuning_table/{tag}/merged")
+    return merged
+
+
+def stamp_artifact(data: dict) -> dict:
+    """Add the ``backend`` / ``process_count`` schema fields describing the
+    runtime an artifact was measured under (see ``core.artifact``)."""
+    be = current_backend()
+    data["backend"] = be.name
+    data["process_count"] = be.process_count
+    return data

@@ -21,6 +21,31 @@ def make_mesh(shape, axes):
     return jax.make_mesh(tuple(shape), tuple(axes))
 
 
+def make_process_mesh(node_axis: str = "node", local_axis: str = "local"):
+    """A ``(process_count, devices_per_process)`` mesh whose node axis is
+    exactly the process boundary.
+
+    Devices are ordered ``(process_index, id)`` so each mesh row is one
+    process's devices — the layout ``Topology.from_mesh`` reads the
+    intra/inter link split from (``derive_link`` classifies the node axis
+    ``host_ipc`` and the local axis ``host_cpu`` on a multi-process CPU
+    runtime). Requires every process to contribute the same device count.
+    """
+    import numpy as np
+    devices = sorted(jax.devices(), key=lambda d: (d.process_index, d.id))
+    nproc = jax.process_count()
+    if len(devices) % nproc:
+        raise ValueError(f"{len(devices)} devices do not divide evenly "
+                         f"across {nproc} processes")
+    arr = np.array(devices).reshape(nproc, -1)
+    for row in arr:
+        owners = {d.process_index for d in row}
+        if len(owners) != 1:
+            raise ValueError(f"uneven devices per process: mesh row spans "
+                             f"processes {sorted(owners)}")
+    return jax.sharding.Mesh(arr, (node_axis, local_axis))
+
+
 HBM_BYTES = 16e9  # v5e per-chip
 
 

@@ -26,6 +26,8 @@ def _minimal():
     return {
         "topology": "4x2/host_cpu/host_cpu",
         "sizes": [256, 4096, 65536],
+        "backend": "single",
+        "process_count": 1,
         "table": {"version": 1, "entries": {}},
         "latency_rows": [{
             "collective": "allreduce", "algo": "pip_mcoll", "nbytes": 4096,
@@ -131,6 +133,24 @@ def test_malformed_scalars_and_rows_are_caught():
     broken["latency_rows"] = []
     with pytest.raises(artifact.ArtifactError, match="latency_rows"):
         artifact.validate(broken)
+    for bad_backend in ("", 3, None):
+        broken = _minimal()
+        broken["backend"] = bad_backend
+        with pytest.raises(artifact.ArtifactError, match="backend"):
+            artifact.validate(broken)
+    for bad_count in (0, -1, "2", 1.5, True):
+        broken = _minimal()
+        broken["process_count"] = bad_count
+        with pytest.raises(artifact.ArtifactError, match="process_count"):
+            artifact.validate(broken)
+
+
+def test_multiprocess_artifact_fields_validate():
+    data = _minimal()
+    data["backend"] = "multiprocess"
+    data["process_count"] = 2
+    data["topology"] = "2x4/host_ipc/host_cpu"
+    assert artifact.validate(data) is data
 
 
 @pytest.mark.skipif(not ARTIFACT.exists(),
